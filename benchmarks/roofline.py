@@ -1,0 +1,111 @@
+"""§Roofline — the three-term roofline table from the compiled dry-run
+artifacts (results/dryrun/*.json), per (arch × shape) on the single-pod
+mesh.  MODEL_FLOPS is recomputed here from the configs (the authoritative
+definition: 6·N_active·D train / 2·N_active·D inference, decode counting
+one new token per sequence)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.distributed.analysis import Roofline, model_flops
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "16x16", tag: str = "") -> List[dict]:
+    cells = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            suffix = f"_{tag}" if tag else ""
+            f = DRYRUN_DIR / f"{arch}_{shape}_{mesh}{suffix}.json"
+            if f.exists():
+                cells.append(json.loads(f.read_text()))
+    return cells
+
+
+def rebuilt_roofline(cell: dict) -> Roofline | None:
+    if cell.get("status") != "OK" or "roofline" not in cell:
+        return None
+    r = cell["roofline"]
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    mf = model_flops(cfg, shape.kind, shape.batch, shape.seq)
+    return Roofline(
+        arch=cell["arch"], shape=cell["shape"], mesh=cell["mesh"],
+        chips=r["chips"], hlo_flops=r["hlo_flops"], hlo_bytes=r["hlo_bytes"],
+        collective_bytes=r["collective_bytes"], model_flops_total=mf,
+    ).finalize()
+
+
+def run_optimized_comparison() -> List[Tuple[str, float, str]]:
+    """§Perf: baseline vs optimized (tp_block=shard_map + bf16 scores)
+    dominant-term comparison for the train cells."""
+    rows: List[Tuple[str, float, str]] = []
+    print("\n# §Perf — train_4k baseline vs optimized (single-pod)")
+    print(f"{'arch':22s} {'base dom (s)':>12s} {'opt dom (s)':>12s} "
+          f"{'speedup':>8s} {'base frac':>10s} {'opt frac':>9s}")
+    for arch in ARCH_IDS:
+        pair = {}
+        for tag, label in (("", "base"), ("_opt2", "opt")):
+            f = DRYRUN_DIR / f"{arch}_train_4k_16x16{tag}.json"
+            if not f.exists():
+                continue
+            cell = json.loads(f.read_text())
+            rl = rebuilt_roofline(cell)
+            if rl is not None:
+                pair[label] = rl
+        if "base" not in pair or "opt" not in pair:
+            continue
+        db = max(pair["base"].compute_s, pair["base"].memory_s,
+                 pair["base"].collective_s)
+        do = max(pair["opt"].compute_s, pair["opt"].memory_s,
+                 pair["opt"].collective_s)
+        fb = pair["base"].compute_s / db if db else 0
+        fo = pair["opt"].compute_s / do if do else 0
+        print(f"{arch:22s} {db:12.2f} {do:12.2f} {db/do:7.2f}x "
+              f"{fb:10.3f} {fo:9.3f}")
+        rows.append((f"perf/{arch}/train_4k", do * 1e6,
+                     f"speedup={db/do:.2f}x frac={fo:.3f}"))
+    return rows
+
+
+def run(tag: str = "") -> List[Tuple[str, float, str]]:
+    cells = load_cells(tag=tag)
+    rows: List[Tuple[str, float, str]] = []
+    print("# §Roofline — single-pod (16x16, 256 chips), terms in ms "
+          "(compute | memory | collective), bottleneck, useful ratio")
+    print(f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>10s} "
+          f"{'coll':>10s}  {'bound':10s} {'useful':>7s} {'frac':>6s}")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            cfg = get_config(arch)
+            if not shape_applicable(cfg, shape):
+                if any(c["arch"] == arch and c["shape"] == shape
+                       for c in cells):
+                    pass
+                print(f"{arch:22s} {shape:12s} {'—':>9s} {'—':>10s} {'—':>10s}"
+                      f"  SKIP (full attention @500k)")
+                continue
+            match = [c for c in cells if c["arch"] == arch
+                     and c["shape"] == shape]
+            if not match:
+                continue
+            rl = rebuilt_roofline(match[0])
+            if rl is None:
+                continue
+            dominant = max(rl.compute_s, rl.memory_s, rl.collective_s)
+            frac = rl.compute_s / dominant if dominant else 0.0
+            print(f"{arch:22s} {shape:12s} {rl.compute_s*1e3:9.1f} "
+                  f"{rl.memory_s*1e3:10.1f} {rl.collective_s*1e3:10.1f}  "
+                  f"{rl.bottleneck:10s} {rl.useful_ratio:7.2f} {frac:6.2f}")
+            rows.append((f"roofline/{arch}/{shape}", dominant * 1e6,
+                         f"bound={rl.bottleneck} frac={frac:.3f}"))
+    rows.extend(run_optimized_comparison())
+    return rows
+
+
+if __name__ == "__main__":
+    run()

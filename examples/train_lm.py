@@ -1,0 +1,60 @@
+"""End-to-end training driver example.
+
+Trains a LM with the full production stack: task-runtime data prefetch,
+pjit train step, async checkpointing, cosine schedule, retry-on-failure.
+
+Presets:
+  --preset tiny   (default)  ~3M-param qwen3-style model, 30 steps — minutes
+  --preset 100m              ~100M params, a few hundred steps — the
+                             assignment's end-to-end target (hours on 1 CPU
+                             core; the default on any real accelerator)
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset tiny]
+"""
+import argparse
+
+import jax
+
+from repro.launch.train import train_loop
+from repro.models.lm import LMConfig, init_params
+
+
+PRESETS = {
+    # ~3M params: fast CPU sanity run
+    "tiny": dict(
+        cfg=LMConfig(name="tiny-lm", n_layers=4, d_model=128, n_heads=8,
+                     n_kv_heads=4, d_ff=512, vocab_size=2048, qk_norm=True),
+        steps=30, batch=8, seq=64, lr=1e-3,
+    ),
+    # ~100M params (the assignment's end-to-end scale)
+    "100m": dict(
+        cfg=LMConfig(name="lm-100m", n_layers=12, d_model=512, n_heads=8,
+                     n_kv_heads=4, d_ff=2048, vocab_size=32768, qk_norm=True),
+        steps=300, batch=8, seq=256, lr=6e-4,
+    ),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default="/tmp/rjax_train_lm")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    cfg = p["cfg"]
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    n_params = sum(x.size for x in jax.tree.leaves(shapes))
+    print(f"model: {cfg.name}  params≈{n_params/1e6:.1f}M")
+    out = train_loop(
+        cfg, steps=args.steps or p["steps"], batch=p["batch"], seq=p["seq"],
+        lr=p["lr"], workers=4, ckpt_dir=args.ckpt_dir, ckpt_every=50,
+        log_every=10)
+    print(f"\nloss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f} "
+          f"({out['tokens_per_s']:.0f} tokens/s)")
+    print("runtime stats:", {k: v for k, v in out["runtime_stats"].items()
+                             if k in ("tasks_done", "retries", "utilization")})
+
+
+if __name__ == "__main__":
+    main()

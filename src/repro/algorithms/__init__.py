@@ -1,0 +1,7 @@
+"""Paper §4 — the three benchmarking applications, task-parallel on the
+RJAX runtime: KNN classification, K-means clustering, linear regression with
+prediction.  Each module ships: the task functions, a sequential-style
+driver (the code a user writes), a single-shot numpy oracle, a DAG generator
+for the discrete-event simulator, and cost-model calibration."""
+from . import kmeans, knn, linreg  # noqa: F401
+from .common import tree_reduce  # noqa: F401

@@ -1,0 +1,80 @@
+"""Shared helpers for the task-parallel algorithms."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.simulator import CostModel
+
+
+def tree_reduce(items: Sequence, merge_task: Callable, arity: int = 2):
+    """Hierarchical reduction through ``merge_task`` calls — the paper's
+    ``*_merge`` task trees (Figs. 3-5).  Works on Futures (submits merge
+    tasks) or on plain values (if ``merge_task`` is a plain function)."""
+    items = list(items)
+    if not items:
+        raise ValueError("tree_reduce of empty sequence")
+    while len(items) > 1:
+        nxt = []
+        for i in range(0, len(items), arity):
+            group = items[i : i + arity]
+            acc = group[0]
+            for other in group[1:]:
+                acc = merge_task(acc, other)
+            nxt.append(acc)
+        items = nxt
+    return items[0]
+
+
+def tree_reduce_spec(n_leaves: int, arity: int = 2) -> List[Tuple[int, Tuple[int, ...]]]:
+    """Shape-only version for DAG generation: returns merge nodes as
+    (merge_index, (child_a, child_b)) where children < n_leaves are leaves and
+    children >= n_leaves refer to merge node ``child - n_leaves``."""
+    ids = list(range(n_leaves))
+    merges: List[Tuple[int, Tuple[int, ...]]] = []
+    next_id = n_leaves
+    while len(ids) > 1:
+        nxt = []
+        for i in range(0, len(ids), arity):
+            group = ids[i : i + arity]
+            acc = group[0]
+            for other in group[1:]:
+                merges.append((next_id - n_leaves, (acc, other)))
+                acc = next_id
+                next_id += 1
+            nxt.append(acc)
+        ids = nxt
+    return merges
+
+
+def make_blobs(seed: int, n: int, d: int, n_classes: int, spread: float = 4.0):
+    """Synthetic labelled clusters (the paper generates data on the fly in
+    ``*_fill_fragment`` tasks rather than reading files)."""
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, n_classes, size=n)
+    centers = rng.standard_normal((n_classes, d)) * spread
+    X = centers[y] + rng.standard_normal((n, d))
+    return X.astype(np.float64), y.astype(np.int64)
+
+
+def timeit_median(fn: Callable, repeats: int = 3) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def calibrate_cost(fn_of_units: Callable[[int], Callable], units: Sequence[int],
+                   name: str = "", repeats: int = 3) -> CostModel:
+    """Measure ``fn_of_units(u)()`` for each u and fit an affine CostModel —
+    the bridge between real execution and the scaling simulator."""
+    samples = []
+    for u in units:
+        call = fn_of_units(u)
+        samples.append((float(u), timeit_median(call, repeats=repeats)))
+    return CostModel.fit(samples, name=name)

@@ -1,0 +1,203 @@
+"""Task-parallel K-means clustering (paper §4.2, Fig. 4).
+
+Per iteration: ``partial_sum`` tasks assign each fragment's points to the
+nearest centroid and emit (per-cluster sums, counts); a hierarchical
+``merge`` tree combines them; ``update_centroids`` produces the new
+centroids; the master checks convergence (the paper's ``converged``
+function) — one synchronization per iteration, exactly as in Fig. 4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from ..core import api
+from ..core.simulator import CostModel, SimTask
+from .common import calibrate_cost, tree_reduce, tree_reduce_spec
+
+# --------------------------------------------------------------------- tasks
+def fill_fragment(seed: int, n: int, d: int, n_centers: int = 8, spread: float = 5.0):
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_centers, d)) * spread
+    which = rng.integers(0, n_centers, size=n)
+    return (centers[which] + rng.standard_normal((n, d))).astype(np.float64)
+
+
+def partial_sum(X: np.ndarray, centroids: np.ndarray):
+    """Assign points to nearest centroid; return (sums, counts, sse)."""
+    d2 = (
+        np.sum(X * X, axis=1)[:, None]
+        - 2.0 * (X @ centroids.T)
+        + np.sum(centroids * centroids, axis=1)[None, :]
+    )
+    assign = np.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    counts = np.bincount(assign, minlength=k).astype(np.int64)
+    sums = np.zeros_like(centroids)
+    np.add.at(sums, assign, X)
+    sse = float(np.sum(d2[np.arange(X.shape[0]), assign]))
+    return sums, counts, sse
+
+
+def merge(a, b):
+    return a[0] + b[0], a[1] + b[1], a[2] + b[2]
+
+
+def update_centroids(acc, old_centroids: np.ndarray):
+    sums, counts, sse = acc
+    safe = np.maximum(counts, 1)[:, None]
+    new = sums / safe
+    empty = counts == 0
+    new[empty] = old_centroids[empty]  # keep empty clusters in place
+    shift = float(np.max(np.linalg.norm(new - old_centroids, axis=1)))
+    return new, shift, sse
+
+
+# -------------------------------------------------------------------- driver
+@dataclass
+class KMeansResult:
+    centroids: np.ndarray
+    iterations: int
+    sse: float
+    shifts: List[float]
+
+
+def run_kmeans(
+    n_points: int = 20_000,
+    d: int = 10,
+    k: int = 8,
+    fragments: int = 4,
+    max_iters: int = 10,
+    tol: float = 1e-4,
+    merge_arity: int = 2,
+    seed: int = 0,
+) -> KMeansResult:
+    """Sequential-style RCOMPSs program (requires a started runtime)."""
+    fill_t = api.task(fill_fragment, name="fill_fragment")
+    psum_t = api.task(partial_sum, name="partial_sum")
+    merge_t = api.task(merge, name="merge")
+    upd_t = api.task(update_centroids, name="update_centroids")
+
+    frag_n = [n_points // fragments] * fragments
+    frag_n[-1] += n_points - sum(frag_n)
+    frags = [fill_t(seed + i, frag_n[i], d) for i in range(fragments)]
+
+    rng = np.random.default_rng(seed)
+    centroids = rng.standard_normal((k, d)) * 5.0
+    shifts: List[float] = []
+    sse = float("inf")
+    it = 0
+    for it in range(1, max_iters + 1):
+        partials = [psum_t(f, centroids) for f in frags]
+        acc = tree_reduce(partials, merge_t, arity=merge_arity)
+        res = upd_t(acc, centroids)
+        centroids, shift, sse = api.wait_on(res)  # per-iteration sync (Fig. 4)
+        shifts.append(shift)
+        if shift < tol:  # the paper's `converged` check
+            break
+    return KMeansResult(centroids, it, sse, shifts)
+
+
+# -------------------------------------------------------------------- oracle
+def reference_kmeans(n_points, d, k, fragments, max_iters, tol, seed=0):
+    """Single-shot numpy oracle: same fragments, same centroid init, same
+    update rule — must match ``run_kmeans`` bit-for-bit (modulo fp reduction
+    order across the merge tree; tests use modest tolerance)."""
+    frag_n = [n_points // fragments] * fragments
+    frag_n[-1] += n_points - sum(frag_n)
+    X = np.concatenate([fill_fragment(seed + i, frag_n[i], d) for i in range(fragments)])
+    rng = np.random.default_rng(seed)
+    centroids = rng.standard_normal((k, d)) * 5.0
+    it = 0
+    sse = float("inf")
+    for it in range(1, max_iters + 1):
+        acc = partial_sum(X, centroids)
+        centroids, shift, sse = update_centroids(acc, centroids)
+        if shift < tol:
+            break
+    return centroids, it, sse
+
+
+# --------------------------------------------------- simulator DAG generation
+@dataclass
+class KMeansCosts:
+    fill: CostModel
+    psum: CostModel
+    merge: CostModel
+    update: CostModel
+
+
+def calibrate(d: int = 50, k: int = 8, units=(2000, 8000, 16000)) -> KMeansCosts:
+    rng = np.random.default_rng(0)
+    cents = rng.standard_normal((k, d))
+
+    def fill_u(u):
+        return lambda: fill_fragment(1, int(u), d)
+
+    def psum_u(u):
+        X = fill_fragment(2, int(u), d)
+        return lambda: partial_sum(X, cents)
+
+    def merge_u(u):
+        X = fill_fragment(3, max(int(u) // 8, 64), d)
+        a = partial_sum(X, cents)
+        return lambda: merge(a, a)
+
+    def update_u(u):
+        X = fill_fragment(4, max(int(u) // 8, 64), d)
+        a = partial_sum(X, cents)
+        return lambda: update_centroids(a, cents)
+
+    return KMeansCosts(
+        fill=calibrate_cost(fill_u, units, "fill_fragment"),
+        psum=calibrate_cost(psum_u, units, "partial_sum"),
+        merge=calibrate_cost(merge_u, units, "merge"),
+        update=calibrate_cost(update_u, units, "update_centroids"),
+    )
+
+
+def dag_spec(
+    costs: KMeansCosts,
+    n_points: int,
+    d: int,
+    k: int,
+    fragments: int,
+    iterations: int,
+    merge_arity: int = 2,
+) -> List[SimTask]:
+    tasks: List[SimTask] = []
+    tid = 0
+    rows = n_points // fragments
+    fbytes = rows * d * 8
+    cbytes = k * d * 8 + k * 8
+    fill_ids = []
+    for _ in range(fragments):
+        tasks.append(SimTask(tid, "fill_fragment", costs.fill(rows), (), out_bytes=fbytes))
+        fill_ids.append(tid)
+        tid += 1
+    prev_update = None
+    for _ in range(iterations):
+        psum_ids = []
+        for f in fill_ids:
+            deps = (f,) if prev_update is None else (f, prev_update)
+            tasks.append(SimTask(tid, "partial_sum", costs.psum(rows), deps,
+                                 out_bytes=cbytes))
+            psum_ids.append(tid)
+            tid += 1
+        merges = tree_reduce_spec(len(psum_ids), arity=merge_arity)
+        merge_ids = []
+        for _, (a, b) in merges:
+            da = psum_ids[a] if a < len(psum_ids) else merge_ids[a - len(psum_ids)]
+            db = psum_ids[b] if b < len(psum_ids) else merge_ids[b - len(psum_ids)]
+            tasks.append(SimTask(tid, "merge", costs.merge(rows), (da, db),
+                                 out_bytes=cbytes))
+            merge_ids.append(tid)
+            tid += 1
+        last = merge_ids[-1] if merge_ids else psum_ids[-1]
+        tasks.append(SimTask(tid, "update_centroids", costs.update(rows), (last,),
+                             out_bytes=cbytes))
+        prev_update = tid
+        tid += 1
+    return tasks

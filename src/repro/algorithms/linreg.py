@@ -1,0 +1,247 @@
+"""Task-parallel linear regression with prediction (paper §4.3, Fig. 5).
+
+Nine task types, mirroring the paper's DAG: ``LR_fill_fragment`` generates
+(X, y) fragments; ``partial_ztz`` computes each fragment's Gram contribution
+X'X (intercept column included); ``partial_zty`` computes X'y; two merge
+trees combine them; ``compute_model_parameters`` solves the normal
+equations; ``LR_genpred`` generates prediction inputs; ``compute_prediction``
+applies the model; the final sync closes the pipeline.  This is the
+deepest-dependency algorithm of the three — the paper uses it to show how
+dependency depth erodes parallel efficiency.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from ..core import api
+from ..core.simulator import CostModel, SimTask
+from .common import calibrate_cost, tree_reduce, tree_reduce_spec
+
+# --------------------------------------------------------------------- tasks
+def lr_fill_fragment(seed: int, n: int, p: int, beta_seed: int = 1234,
+                     noise: float = 0.1):
+    """Synthetic (X, y) with a hidden ground-truth beta (shared seed)."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, p))
+    beta_rng = np.random.default_rng(beta_seed)
+    beta = beta_rng.standard_normal(p + 1)
+    y = beta[0] + X @ beta[1:] + noise * rng.standard_normal(n)
+    return X.astype(np.float64), y.astype(np.float64)
+
+
+def _with_intercept(X: np.ndarray) -> np.ndarray:
+    return np.concatenate([np.ones((X.shape[0], 1)), X], axis=1)
+
+
+def partial_ztz(frag) -> np.ndarray:
+    X, _ = frag
+    Z = _with_intercept(X)
+    return Z.T @ Z            # the paper's GEMM hot-spot (×4 GEMM tasks)
+
+
+def partial_zty(frag) -> np.ndarray:
+    X, y = frag
+    Z = _with_intercept(X)
+    return Z.T @ y
+
+
+def merge_add(a, b):
+    return a + b
+
+
+def compute_model_parameters(ztz: np.ndarray, zty: np.ndarray,
+                             ridge: float = 0.0) -> np.ndarray:
+    A = ztz
+    if ridge > 0.0:
+        A = A + ridge * np.eye(A.shape[0])
+    return np.linalg.solve(A, zty)
+
+
+def lr_genpred(seed: int, m: int, p: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal((m, p))
+
+
+def compute_prediction(X_pred: np.ndarray, beta: np.ndarray) -> np.ndarray:
+    return _with_intercept(X_pred) @ beta
+
+
+# -------------------------------------------------------------------- driver
+@dataclass
+class LinRegResult:
+    beta: np.ndarray
+    predictions: np.ndarray
+    n_tasks: int
+
+
+def run_linreg(
+    n_rows: int = 20_000,
+    p: int = 100,
+    n_pred: int = 4_000,
+    fragments: int = 4,
+    pred_blocks: int = 2,
+    ridge: float = 0.0,
+    merge_arity: int = 2,
+    seed: int = 0,
+) -> LinRegResult:
+    """Sequential-style RCOMPSs program (requires a started runtime)."""
+    fill_t = api.task(lr_fill_fragment, name="LR_fill_fragment")
+    ztz_t = api.task(partial_ztz, name="partial_ztz")
+    zty_t = api.task(partial_zty, name="partial_zty")
+    merge_t = api.task(merge_add, name="merge")
+    fit_t = api.task(compute_model_parameters, name="compute_model_parameters")
+    genpred_t = api.task(lr_genpred, name="LR_genpred")
+    pred_t = api.task(compute_prediction, name="compute_prediction")
+
+    frag_n = [n_rows // fragments] * fragments
+    frag_n[-1] += n_rows - sum(frag_n)
+    frags = [fill_t(seed + i, frag_n[i], p) for i in range(fragments)]
+
+    ztzs = [ztz_t(f) for f in frags]
+    ztys = [zty_t(f) for f in frags]
+    ztz = tree_reduce(ztzs, merge_t, arity=merge_arity)
+    zty = tree_reduce(ztys, merge_t, arity=merge_arity)
+    beta = fit_t(ztz, zty, ridge)
+
+    blk_m = [n_pred // pred_blocks] * pred_blocks
+    blk_m[-1] += n_pred - sum(blk_m)
+    preds = []
+    for b in range(pred_blocks):
+        Xp = genpred_t(50_000 + seed + b, blk_m[b], p)
+        preds.append(pred_t(Xp, beta))
+    beta_v = api.wait_on(beta)
+    preds_v = api.wait_on(preds)
+    n_tasks = fragments * 3 + 2 * (fragments - 1) + 1 + 2 * pred_blocks
+    return LinRegResult(beta_v, np.concatenate(preds_v), n_tasks)
+
+
+# -------------------------------------------------------------------- oracle
+def reference_linreg(n_rows, p, n_pred, fragments, pred_blocks, ridge=0.0, seed=0):
+    frag_n = [n_rows // fragments] * fragments
+    frag_n[-1] += n_rows - sum(frag_n)
+    frags = [lr_fill_fragment(seed + i, frag_n[i], p) for i in range(fragments)]
+    X = np.concatenate([f[0] for f in frags])
+    y = np.concatenate([f[1] for f in frags])
+    ztz = partial_ztz((X, y))
+    zty = partial_zty((X, y))
+    beta = compute_model_parameters(ztz, zty, ridge)
+    blk_m = [n_pred // pred_blocks] * pred_blocks
+    blk_m[-1] += n_pred - sum(blk_m)
+    preds = [compute_prediction(lr_genpred(50_000 + seed + b, blk_m[b], p), beta)
+             for b in range(pred_blocks)]
+    return beta, np.concatenate(preds)
+
+
+# --------------------------------------------------- simulator DAG generation
+@dataclass
+class LinRegCosts:
+    fill: CostModel
+    ztz: CostModel
+    zty: CostModel
+    merge: CostModel
+    fit: CostModel
+    genpred: CostModel
+    predict: CostModel
+
+
+def calibrate(p: int = 100, units=(1000, 4000, 8000)) -> LinRegCosts:
+    def fill_u(u):
+        return lambda: lr_fill_fragment(1, int(u), p)
+
+    def ztz_u(u):
+        f = lr_fill_fragment(2, int(u), p)
+        return lambda: partial_ztz(f)
+
+    def zty_u(u):
+        f = lr_fill_fragment(3, int(u), p)
+        return lambda: partial_zty(f)
+
+    def merge_u(u):
+        a = np.ones((p + 1, p + 1))
+        return lambda: merge_add(a, a)
+
+    def fit_u(u):
+        f = lr_fill_fragment(4, max(int(u), p + 8), p)
+        A, b = partial_ztz(f), partial_zty(f)
+        return lambda: compute_model_parameters(A, b, 1e-6)
+
+    def genpred_u(u):
+        return lambda: lr_genpred(5, int(u), p)
+
+    def pred_u(u):
+        f = lr_fill_fragment(6, max(int(u), p + 8), p)
+        A, b = partial_ztz(f), partial_zty(f)
+        beta = compute_model_parameters(A, b, 1e-6)
+        Xp = lr_genpred(7, int(u), p)
+        return lambda: compute_prediction(Xp, beta)
+
+    return LinRegCosts(
+        fill=calibrate_cost(fill_u, units, "LR_fill_fragment"),
+        ztz=calibrate_cost(ztz_u, units, "partial_ztz"),
+        zty=calibrate_cost(zty_u, units, "partial_zty"),
+        merge=calibrate_cost(merge_u, (1,), "merge"),
+        fit=calibrate_cost(fit_u, (1,), "compute_model_parameters"),
+        genpred=calibrate_cost(genpred_u, units, "LR_genpred"),
+        predict=calibrate_cost(pred_u, units, "compute_prediction"),
+    )
+
+
+def dag_spec(
+    costs: LinRegCosts,
+    n_rows: int,
+    p: int,
+    n_pred: int,
+    fragments: int,
+    pred_blocks: int,
+    merge_arity: int = 2,
+) -> List[SimTask]:
+    tasks: List[SimTask] = []
+    tid = 0
+    rows = n_rows // fragments
+    fbytes = rows * (p + 1) * 8
+    gbytes = (p + 1) * (p + 1) * 8
+    fill_ids = []
+    for _ in range(fragments):
+        tasks.append(SimTask(tid, "LR_fill_fragment", costs.fill(rows), (),
+                             out_bytes=fbytes))
+        fill_ids.append(tid)
+        tid += 1
+
+    def emit_tree(leaf_parent_ids: List[int], leaf_name: str, leaf_cost: float,
+                  leaf_bytes: int) -> int:
+        nonlocal tid
+        leaf_ids = []
+        for pid in leaf_parent_ids:
+            tasks.append(SimTask(tid, leaf_name, leaf_cost, (pid,), out_bytes=leaf_bytes))
+            leaf_ids.append(tid)
+            tid += 1
+        merges = tree_reduce_spec(len(leaf_ids), arity=merge_arity)
+        merge_ids: List[int] = []
+        for _, (a, b) in merges:
+            da = leaf_ids[a] if a < len(leaf_ids) else merge_ids[a - len(leaf_ids)]
+            db = leaf_ids[b] if b < len(leaf_ids) else merge_ids[b - len(leaf_ids)]
+            tasks.append(SimTask(tid, "merge", costs.merge(1), (da, db),
+                                 out_bytes=leaf_bytes))
+            merge_ids.append(tid)
+            tid += 1
+        return merge_ids[-1] if merge_ids else leaf_ids[-1]
+
+    ztz_root = emit_tree(fill_ids, "partial_ztz", costs.ztz(rows), gbytes)
+    zty_root = emit_tree(fill_ids, "partial_zty", costs.zty(rows), (p + 1) * 8)
+    tasks.append(SimTask(tid, "compute_model_parameters", costs.fit(1),
+                         (ztz_root, zty_root), out_bytes=(p + 1) * 8))
+    fit_id = tid
+    tid += 1
+    mrows = n_pred // pred_blocks
+    for _ in range(pred_blocks):
+        tasks.append(SimTask(tid, "LR_genpred", costs.genpred(mrows), (),
+                             out_bytes=mrows * p * 8))
+        gen_id = tid
+        tid += 1
+        tasks.append(SimTask(tid, "compute_prediction", costs.predict(mrows),
+                             (gen_id, fit_id), out_bytes=mrows * 8))
+        tid += 1
+    return tasks

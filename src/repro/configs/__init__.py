@@ -1,0 +1,40 @@
+"""Architecture registry: the 10 assigned architectures (``--arch <id>``),
+each with its exact published configuration (FULL) and a smoke-test
+REDUCED variant, plus the shape sets and ShapeDtypeStruct input specs."""
+from __future__ import annotations
+
+from importlib import import_module
+from typing import Dict, List
+
+from ..models.lm import LMConfig
+from .shapes import (  # noqa: F401
+    SHAPES,
+    SMOKE_SHAPES,
+    ShapeSpec,
+    cache_specs,
+    input_specs,
+    make_batch,
+    shape_applicable,
+)
+
+_MODULES: Dict[str, str] = {
+    "granite-20b": "granite_20b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "granite-3-2b": "granite_3_2b",
+    "internlm2-1.8b": "internlm2_1_8b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "mamba2-780m": "mamba2_780m",
+    "internvl2-26b": "internvl2_26b",
+    "musicgen-medium": "musicgen_medium",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch: str, reduced: bool = False) -> LMConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch '{arch}'; available: {ARCH_IDS}")
+    mod = import_module(f".{_MODULES[arch]}", __package__)
+    return mod.REDUCED if reduced else mod.FULL

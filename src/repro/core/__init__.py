@@ -1,0 +1,25 @@
+"""repro.core — the paper's primary contribution, reproduced in Python/JAX.
+
+A COMPSs-style dynamic task-based runtime: sequential user code, automatic
+dependency detection, asynchronous scheduling over persistent executors,
+pluggable serialization, fault tolerance, tracing, and a calibrated
+discrete-event simulator for scaling studies.
+"""
+from .api import (  # noqa: F401
+    barrier,
+    compss_barrier,
+    compss_start,
+    compss_stop,
+    compss_wait_on,
+    current_runtime,
+    runtime_start,
+    runtime_stop,
+    task,
+    wait_on,
+)
+from .dag import TaskGraph, TaskNode, TaskState  # noqa: F401
+from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig  # noqa: F401
+from .futures import Future, ObjectStore, TaskFailedError  # noqa: F401
+from .runtime import Runtime  # noqa: F401
+from .simulator import CostModel, MachineModel, SimResult, SimTask, replay_graph, simulate  # noqa: F401
+from .tracing import TraceEvent, Tracer  # noqa: F401

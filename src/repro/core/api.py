@@ -1,0 +1,140 @@
+"""The RCOMPSs user-facing API, reproduced (paper §3.2).
+
+The paper exposes five functions; we keep the names (aliased) plus the
+pythonic spellings used throughout this repo:
+
+==========================  =============================
+paper (R)                   here (Python)
+==========================  =============================
+``compss_start()``          ``runtime_start()``
+``task(f, ...)``            ``task(f, ...)`` (also usable as decorator)
+``compss_barrier()``        ``barrier()``
+``compss_wait_on(x)``       ``wait_on(x)``
+``compss_stop()``           ``runtime_stop()``
+==========================  =============================
+
+Example (the paper's Fig. 2 program, see examples/quickstart.py)::
+
+    from repro.core import api
+
+    def add(x, y):
+        return x + y
+
+    api.runtime_start(n_workers=4)
+    add_t = api.task(add)
+    res1 = add_t(4, 5)
+    res2 = add_t(6, 7)
+    res3 = add_t(res1, res2)          # dependency discovered automatically
+    print(api.wait_on(res3))          # -> 22
+    api.runtime_stop()
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from typing import Any, Callable, Optional
+
+from .fault import RetryPolicy, SpeculationConfig
+from .runtime import Runtime
+
+_lock = threading.Lock()
+_runtime: Optional[Runtime] = None
+
+
+def runtime_start(
+    n_workers: int = 4,
+    workers_per_node: Optional[int] = None,
+    policy: str = "fifo",
+    tracing: bool = True,
+    max_retries: int = 0,
+    speculation: bool = False,
+    speculation_factor: float = 3.0,
+) -> Runtime:
+    """Initialize the global runtime (``compss_start``)."""
+    global _runtime
+    with _lock:
+        if _runtime is not None and not _runtime._stopped:
+            raise RuntimeError("runtime already started; call runtime_stop() first")
+        _runtime = Runtime(
+            n_workers=n_workers,
+            workers_per_node=workers_per_node,
+            policy=policy,
+            tracing=tracing,
+            retry=RetryPolicy(max_retries=max_retries),
+            speculation=SpeculationConfig(enabled=speculation, factor=speculation_factor),
+        )
+        return _runtime
+
+
+def current_runtime() -> Runtime:
+    if _runtime is None or _runtime._stopped:
+        raise RuntimeError("runtime not started; call runtime_start() first")
+    return _runtime
+
+
+def runtime_stop(wait: bool = True) -> dict:
+    """Drain and shut down (``compss_stop``); returns run statistics."""
+    global _runtime
+    with _lock:
+        rt = _runtime
+        if rt is None:
+            return {}
+        rt.stop(wait=wait)
+        stats = rt.stats()
+        _runtime = None
+        return stats
+
+
+class TaskFunction:
+    """A function registered as an RCOMPSs task.  Calling it submits an
+    asynchronous task and returns Future(s) instead of running inline."""
+
+    def __init__(self, fn: Callable, *, returns: int = 1, name: Optional[str] = None,
+                 max_retries: Optional[int] = None, priority: int = 0,
+                 speculatable: bool = True):
+        functools.update_wrapper(self, fn)
+        self.fn = fn
+        self.returns = returns
+        self.name = name or fn.__name__
+        self.max_retries = max_retries
+        self.priority = priority
+        self.speculatable = speculatable
+
+    def __call__(self, *args, **kwargs):
+        rt = current_runtime()
+        return rt.submit(
+            self.fn, args, kwargs,
+            name=self.name, returns=self.returns, max_retries=self.max_retries,
+            priority=self.priority, speculatable=self.speculatable,
+        )
+
+    def inline(self, *args, **kwargs):
+        """Run synchronously, bypassing the runtime (debugging aid)."""
+        return self.fn(*args, **kwargs)
+
+
+def task(fn: Optional[Callable] = None, *, returns: int = 1, name: Optional[str] = None,
+         max_retries: Optional[int] = None, priority: int = 0,
+         speculatable: bool = True) -> Any:
+    """Register ``fn`` as a task (paper's ``task()``); decorator or wrapper."""
+    def wrap(f: Callable) -> TaskFunction:
+        return TaskFunction(f, returns=returns, name=name, max_retries=max_retries,
+                            priority=priority, speculatable=speculatable)
+    return wrap(fn) if fn is not None else wrap
+
+
+def barrier(timeout: Optional[float] = None) -> None:
+    """Wait for all submitted tasks (``compss_barrier``)."""
+    current_runtime().barrier(timeout=timeout)
+
+
+def wait_on(obj: Any, timeout: Optional[float] = None) -> Any:
+    """Synchronize on Future(s) (``compss_wait_on``)."""
+    return current_runtime().wait_on(obj, timeout=timeout)
+
+
+# -- paper-spelled aliases ----------------------------------------------------
+compss_start = runtime_start
+compss_stop = runtime_stop
+compss_barrier = barrier
+compss_wait_on = wait_on

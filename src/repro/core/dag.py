@@ -1,0 +1,213 @@
+"""Dynamic task dependency graph.
+
+The runtime builds this DAG *online* as the user's sequential program submits
+tasks (paper §3.2).  Dependencies are discovered by scanning task arguments
+for ``Future`` objects: an argument ``dXvY`` produced by task *T* makes the
+new task a child of *T*.  INOUT parameters bump the datum's version, which is
+exactly COMPSs' renaming scheme.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"      # submitted, waiting on dependencies
+    READY = "ready"          # all deps satisfied, queued for execution
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"        # exhausted retries
+    CANCELLED = "cancelled"  # speculative duplicate that lost the race
+
+
+@dataclass
+class TaskNode:
+    task_id: int
+    name: str
+    fn: Callable
+    args: tuple
+    kwargs: dict
+    # dependency bookkeeping
+    dep_keys: Set[Tuple[int, int]] = field(default_factory=set)   # (data_id, version) inputs
+    parents: Set[int] = field(default_factory=set)
+    children: Set[int] = field(default_factory=set)
+    unresolved: int = 0
+    # outputs
+    out_keys: List[Tuple[int, int]] = field(default_factory=list)
+    # execution state
+    state: TaskState = TaskState.PENDING
+    attempts: int = 0
+    max_retries: int = 0
+    worker: Optional[int] = None
+    node: Optional[int] = None  # which (virtual) node executed it
+    submit_t: float = 0.0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    error: Optional[BaseException] = None
+    # scheduling metadata
+    priority: int = 0
+    nbytes_in: int = 0
+    speculatable: bool = True
+    speculative_of: Optional[int] = None  # set on speculative duplicates
+
+    @property
+    def duration(self) -> float:
+        return max(0.0, self.end_t - self.start_t)
+
+
+class TaskGraph:
+    """Thread-safe DAG with in-degree tracking.
+
+    ``add_task`` wires parent/child edges from the dependency keys; when a
+    task completes, ``mark_done`` returns the children that just became
+    ready.  The graph also retains completed nodes so traces and ``to_dot``
+    renderings (paper Figs. 2-5) can be produced after the run.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._nodes: Dict[int, TaskNode] = {}
+        self._producers: Dict[Tuple[int, int], int] = {}  # data key -> producer task
+        self._ids = itertools.count(1)
+
+    def next_task_id(self) -> int:
+        return next(self._ids)
+
+    def add_task(self, node: TaskNode) -> List[int]:
+        """Insert ``node``; returns [node.task_id] if immediately ready."""
+        with self._lock:
+            unresolved = 0
+            for key in node.dep_keys:
+                producer = self._producers.get(key)
+                if producer is not None:
+                    p = self._nodes.get(producer)
+                    if p is not None and p.state not in (TaskState.DONE,):
+                        node.parents.add(producer)
+                        p.children.add(node.task_id)
+                        unresolved += 1
+            node.unresolved = unresolved
+            node.submit_t = time.perf_counter()
+            for key in node.out_keys:
+                self._producers[key] = node.task_id
+            self._nodes[node.task_id] = node
+            if unresolved == 0:
+                node.state = TaskState.READY
+                return [node.task_id]
+            return []
+
+    def mark_running(self, task_id: int, worker: int, node_id: int) -> bool:
+        with self._lock:
+            n = self._nodes[task_id]
+            if n.state not in (TaskState.READY,):
+                return False
+            n.state = TaskState.RUNNING
+            n.worker = worker
+            n.node = node_id
+            n.start_t = time.perf_counter()
+            n.attempts += 1
+            return True
+
+    def _release_children_locked(self, n: TaskNode) -> List[int]:
+        newly_ready: List[int] = []
+        for cid in n.children:
+            c = self._nodes.get(cid)
+            if c is None:
+                continue
+            c.unresolved -= 1
+            if c.unresolved == 0 and c.state == TaskState.PENDING:
+                c.state = TaskState.READY
+                newly_ready.append(cid)
+        return newly_ready
+
+    def mark_done(self, task_id: int) -> List[int]:
+        """Mark complete; return newly-ready children ids."""
+        with self._lock:
+            n = self._nodes[task_id]
+            n.state = TaskState.DONE
+            n.end_t = time.perf_counter()
+            return self._release_children_locked(n)
+
+    def mark_failed(self, task_id: int, err: BaseException) -> List[int]:
+        """Permanent failure: record error and release children (they will
+        observe the stored error on their inputs and fail fast — COMPSs'
+        exception propagation)."""
+        with self._lock:
+            n = self._nodes[task_id]
+            n.state = TaskState.FAILED
+            n.end_t = time.perf_counter()
+            n.error = err
+            return self._release_children_locked(n)
+
+    def requeue_for_retry(self, task_id: int) -> None:
+        with self._lock:
+            n = self._nodes[task_id]
+            n.state = TaskState.READY
+
+    def mark_cancelled(self, task_id: int) -> None:
+        with self._lock:
+            n = self._nodes[task_id]
+            if n.state not in (TaskState.DONE, TaskState.FAILED):
+                n.state = TaskState.CANCELLED
+                n.end_t = time.perf_counter()
+
+    def get(self, task_id: int) -> TaskNode:
+        with self._lock:
+            return self._nodes[task_id]
+
+    def nodes(self) -> List[TaskNode]:
+        with self._lock:
+            return list(self._nodes.values())
+
+    def pending_count(self) -> int:
+        with self._lock:
+            return sum(
+                1
+                for n in self._nodes.values()
+                if n.state in (TaskState.PENDING, TaskState.READY, TaskState.RUNNING)
+            )
+
+    # ------------------------------------------------------------------ export
+    def to_dot(self) -> str:
+        """Graphviz rendering in the paper's style (Fig. 2): nodes are task
+        ids, edges labelled with the ``dXvY`` datum that carries the
+        dependency."""
+        lines = ["digraph G {", '  main [shape=box];', '  sync [shape=octagon];']
+        with self._lock:
+            key_producer = dict(self._producers)
+            for n in self._nodes.values():
+                lines.append(f'  t{n.task_id} [label="{n.name}\\n#{n.task_id}"];')
+                if not n.parents:
+                    lines.append(f"  main -> t{n.task_id};")
+                if not n.children:
+                    lines.append(f"  t{n.task_id} -> sync;")
+            for n in self._nodes.values():
+                for key in n.dep_keys:
+                    p = key_producer.get(key)
+                    if p is not None and p in self._nodes and p != n.task_id:
+                        lines.append(
+                            f'  t{p} -> t{n.task_id} [label="d{key[0]}v{key[1]}"];'
+                        )
+        lines.append("}")
+        return "\n".join(lines)
+
+    # -------------------------------------------------------- analysis helpers
+    def critical_path_seconds(self) -> float:
+        """Longest chain of measured task durations (T_inf)."""
+        with self._lock:
+            memo: Dict[int, float] = {}
+            order = sorted(self._nodes)  # task ids increase topologically
+            for tid in order:
+                n = self._nodes[tid]
+                base = max((memo.get(p, 0.0) for p in n.parents), default=0.0)
+                memo[tid] = base + n.duration
+            return max(memo.values(), default=0.0)
+
+    def total_work_seconds(self) -> float:
+        """Sum of task durations (T_1)."""
+        with self._lock:
+            return sum(n.duration for n in self._nodes.values() if n.state == TaskState.DONE)

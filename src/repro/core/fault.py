@@ -1,0 +1,48 @@
+"""Fault-tolerance policies (paper §3.1/§6: task resubmission, exception
+management) plus beyond-paper straggler speculation.
+
+*Resubmission*: a task raising an exception is re-queued up to
+``max_retries`` times; only after exhausting retries does the failure become
+permanent, at which point the error is published on the task's outputs and
+propagates to all transitive dependents (which fail fast without retrying —
+their inputs are poisoned, re-running them cannot help).
+
+*Speculation* (straggler mitigation, DESIGN.md §3): a monitor re-launches a
+duplicate of any *pure* task whose running time exceeds
+``factor ×`` the median duration of completed tasks of the same name, when
+idle capacity exists.  First completion wins; the loser is discarded.  This
+is the classic LATE/Dryad mitigation adapted to the COMPSs task model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    max_retries: int = 0          # default per-task; task() can override
+    retry_on: tuple = (Exception,)
+    backoff_seconds: float = 0.0  # optional delay between attempts
+
+    def should_retry(self, attempts: int, max_retries: int, err: BaseException) -> bool:
+        if attempts > max_retries:
+            return False
+        return isinstance(err, self.retry_on)
+
+
+@dataclass(frozen=True)
+class SpeculationConfig:
+    enabled: bool = False
+    factor: float = 3.0          # running > factor * median(same-name) => straggler
+    min_samples: int = 3         # need this many completions to trust the median
+    min_seconds: float = 0.05    # never speculate below this absolute runtime
+    poll_interval: float = 0.02  # monitor period
+
+
+class PoisonedInputError(RuntimeError):
+    """A dependency failed permanently; this task cannot run."""
+
+    def __init__(self, dep_task: int, cause: BaseException):
+        super().__init__(f"input produced by failed task#{dep_task}: {cause!r}")
+        self.dep_task = dep_task
+        self.cause = cause

@@ -1,0 +1,128 @@
+"""Futures and versioned data registry.
+
+RCOMPSs tracks every task parameter/result as a *datum* with an id and a
+version (rendered ``dXvY`` in the paper's DAG figures).  A ``Future`` is a
+lightweight handle to one ``(data_id, version)`` pair plus the task that
+produces it.  The object store keeps the concrete values; versions exist so
+that INOUT parameters get COMPSs-style renaming semantics (a task that
+mutates datum ``d3`` produces ``d3v2`` while previously-submitted readers
+still see ``d3v1``).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+
+class TaskFailedError(RuntimeError):
+    """Raised by ``wait_on`` when the producing task exhausted its retries."""
+
+    def __init__(self, task_name: str, task_id: int, cause: BaseException):
+        super().__init__(f"task {task_name}#{task_id} failed: {cause!r}")
+        self.task_name = task_name
+        self.task_id = task_id
+        self.cause = cause
+
+
+class Future:
+    """Handle to the (eventual) value of ``data_id`` at ``version``."""
+
+    __slots__ = ("data_id", "version", "producer_task", "_store")
+
+    def __init__(self, data_id: int, version: int, producer_task: int, store: "ObjectStore"):
+        self.data_id = data_id
+        self.version = version
+        self.producer_task = producer_task
+        self._store = store
+
+    @property
+    def key(self) -> Tuple[int, int]:
+        return (self.data_id, self.version)
+
+    def done(self) -> bool:
+        return self._store.is_ready(self.key)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        return self._store.get(self.key, timeout=timeout)
+
+    def __repr__(self) -> str:  # matches the paper's DAG edge labels
+        return f"<Future d{self.data_id}v{self.version} by task#{self.producer_task}>"
+
+
+class ObjectStore:
+    """Thread-safe versioned value store.
+
+    Values are indexed by ``(data_id, version)``.  ``put`` publishes a value
+    (or an exception) and wakes waiters.  Location metadata (which *node* the
+    bytes live on) feeds the locality-aware scheduler and the discrete-event
+    simulator's transport model.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._values: Dict[Tuple[int, int], Any] = {}
+        self._errors: Dict[Tuple[int, int], BaseException] = {}
+        self._locations: Dict[Tuple[int, int], set] = {}
+        self._next_data_id = 1
+
+    # -- identity allocation -------------------------------------------------
+    def new_data_id(self) -> int:
+        with self._lock:
+            did = self._next_data_id
+            self._next_data_id += 1
+            return did
+
+    # -- publication ----------------------------------------------------------
+    def put(self, key: Tuple[int, int], value: Any, node: Optional[int] = None) -> None:
+        with self._cond:
+            self._values[key] = value
+            if node is not None:
+                self._locations.setdefault(key, set()).add(node)
+            self._cond.notify_all()
+
+    def put_error(self, key: Tuple[int, int], err: BaseException) -> None:
+        with self._cond:
+            self._errors[key] = err
+            self._cond.notify_all()
+
+    # -- retrieval -------------------------------------------------------------
+    def is_ready(self, key: Tuple[int, int]) -> bool:
+        with self._lock:
+            return key in self._values or key in self._errors
+
+    def get(self, key: Tuple[int, int], timeout: Optional[float] = None) -> Any:
+        with self._cond:
+            if not self._cond.wait_for(
+                lambda: key in self._values or key in self._errors, timeout=timeout
+            ):
+                raise TimeoutError(f"timed out waiting for d{key[0]}v{key[1]}")
+            if key in self._errors:
+                raise self._errors[key]
+            return self._values[key]
+
+    def get_nowait(self, key: Tuple[int, int]) -> Any:
+        with self._lock:
+            if key in self._errors:
+                raise self._errors[key]
+            return self._values[key]
+
+    # -- locality metadata -----------------------------------------------------
+    def note_location(self, key: Tuple[int, int], node: int) -> None:
+        with self._lock:
+            self._locations.setdefault(key, set()).add(node)
+
+    def locations(self, key: Tuple[int, int]) -> set:
+        with self._lock:
+            return set(self._locations.get(key, ()))
+
+    # -- housekeeping ------------------------------------------------------------
+    def evict(self, key: Tuple[int, int]) -> None:
+        """Drop a value (garbage collection once all consumers ran)."""
+        with self._lock:
+            self._values.pop(key, None)
+            self._locations.pop(key, None)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._values)

@@ -1,0 +1,392 @@
+"""The RJAX runtime engine — RCOMPSs' COMPSs core, reproduced.
+
+One ``Runtime`` owns: the versioned object store, the dynamic task graph,
+a scheduling policy, a pool of *persistent* worker threads (the paper's
+persistent-executor model: workers live for the whole application and are
+reused across tasks, §3.3.2), the tracer, fault handling, and the optional
+straggler-speculation monitor.
+
+Users normally go through :mod:`repro.core.api` (``task`` / ``barrier`` /
+``wait_on``), which mirrors the five-function RCOMPSs API.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dag import TaskGraph, TaskNode, TaskState
+from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
+from .futures import Future, ObjectStore, TaskFailedError
+from .scheduler import Scheduler
+from .tracing import TraceEvent, Tracer
+
+
+def _walk(obj: Any, fn: Callable[[Any], Any]) -> Any:
+    """Structure-preserving map over (lists, tuples, dicts); applies ``fn``
+    to leaves.  Used both to collect Future deps and to substitute values."""
+    if isinstance(obj, Future):
+        return fn(obj)
+    if isinstance(obj, (list, tuple)):
+        mapped = [_walk(o, fn) for o in obj]
+        if isinstance(obj, tuple):
+            # namedtuples (e.g. optimizer states) take positional fields
+            return type(obj)(*mapped) if hasattr(obj, "_fields") else tuple(mapped)
+        return mapped
+    if isinstance(obj, dict):
+        return {k: _walk(v, fn) for k, v in obj.items()}
+    return obj
+
+
+def _nbytes(v: Any) -> int:
+    if isinstance(v, np.ndarray):
+        return v.nbytes
+    if hasattr(v, "nbytes"):
+        try:
+            return int(v.nbytes)
+        except Exception:
+            return 0
+    return 0
+
+
+class Runtime:
+    def __init__(
+        self,
+        n_workers: int = 4,
+        workers_per_node: Optional[int] = None,
+        policy: str = "fifo",
+        tracing: bool = True,
+        retry: RetryPolicy = RetryPolicy(),
+        speculation: SpeculationConfig = SpeculationConfig(),
+        name: str = "rjax",
+    ):
+        self.n_workers = int(n_workers)
+        self.workers_per_node = workers_per_node or self.n_workers
+        self.store = ObjectStore()
+        self.graph = TaskGraph()
+        self.scheduler = Scheduler(
+            self.graph, self.store, policy=policy, workers_per_node=self.workers_per_node
+        )
+        self.tracer = Tracer(enabled=tracing)
+        self.retry = retry
+        self.speculation = speculation
+        self.name = name
+
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self._inflight_cond = threading.Condition(self._inflight_lock)
+        self._logical_done: Dict[int, bool] = {}   # speculation once-flags
+        self._logical_lock = threading.Lock()
+        self._idle_workers = self.n_workers
+        self._stopped = False
+
+        self._threads: List[threading.Thread] = []
+        for w in range(self.n_workers):
+            t = threading.Thread(target=self._worker_loop, args=(w,), daemon=True,
+                                 name=f"{name}-w{w}")
+            t.start()
+            self._threads.append(t)
+
+        self._monitor: Optional[threading.Thread] = None
+        if self.speculation.enabled:
+            self._monitor = threading.Thread(target=self._speculation_loop, daemon=True,
+                                             name=f"{name}-spec")
+            self._monitor.start()
+
+    # ------------------------------------------------------------- submission
+    def submit(
+        self,
+        fn: Callable,
+        args: tuple = (),
+        kwargs: Optional[dict] = None,
+        *,
+        name: Optional[str] = None,
+        returns: int = 1,
+        max_retries: Optional[int] = None,
+        priority: int = 0,
+        speculatable: bool = True,
+        inout: Sequence[Future] = (),
+    ):
+        """Submit one asynchronous task; returns ``returns`` Future(s).
+
+        ``inout`` lists argument Futures the task semantically *updates*: the
+        runtime bumps their datum version (COMPSs renaming) so later readers
+        depend on this task's output — the Future objects are re-pointed at
+        the new version and the task's extra return values (beyond
+        ``returns``) provide the new contents, in ``inout`` order.
+        """
+        if self._stopped:
+            raise RuntimeError("runtime is stopped")
+        kwargs = kwargs or {}
+        tid = self.graph.next_task_id()
+        tname = name or getattr(fn, "__name__", "task")
+
+        dep_keys = set()
+
+        def _collect(f: Future):
+            dep_keys.add(f.key)
+            # snapshot: INOUT renaming mutates the caller's handle later;
+            # the task must keep reading the version it was submitted with
+            return Future(f.data_id, f.version, f.producer_task, self.store)
+
+        args = _walk(args, _collect)
+        kwargs = _walk(kwargs, _collect)
+
+        out_futures: List[Future] = []
+        out_keys: List[Tuple[int, int]] = []
+        for _ in range(returns):
+            did = self.store.new_data_id()
+            f = Future(did, 1, tid, self.store)
+            out_futures.append(f)
+            out_keys.append(f.key)
+        # INOUT renaming: new version of an existing datum
+        for f in inout:
+            if f.key not in dep_keys:
+                raise ValueError("inout future must also be passed as an argument")
+            new_v = f.version + 1
+            out_keys.append((f.data_id, new_v))
+            # re-point the caller's handle at the new version; tasks already
+            # submitted captured the old (data_id, version) key.
+            f.version = new_v
+            f.producer_task = tid
+
+        node = TaskNode(
+            task_id=tid, name=tname, fn=fn, args=args, kwargs=kwargs,
+            dep_keys=dep_keys, out_keys=out_keys,
+            max_retries=self.retry.max_retries if max_retries is None else max_retries,
+            priority=priority, speculatable=speculatable,
+        )
+        with self._inflight_cond:
+            self._inflight += 1
+        ready = self.graph.add_task(node)
+        self.scheduler.push_many(ready)
+        if returns == 1 and not inout:
+            return out_futures[0]
+        return tuple(out_futures) if returns > 1 else out_futures[0] if out_futures else None
+
+    # ------------------------------------------------------------ worker loop
+    def _worker_loop(self, worker: int) -> None:
+        node_id = worker // self.workers_per_node
+        while True:
+            tid = self.scheduler.take(worker)
+            if tid is None:
+                return
+            with self._inflight_lock:
+                self._idle_workers -= 1
+            try:
+                self._execute(tid, worker, node_id)
+            finally:
+                with self._inflight_lock:
+                    self._idle_workers += 1
+
+    def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict]:
+        nbytes_in = 0
+
+        def _fetch(f: Future):
+            nonlocal nbytes_in
+            try:
+                v = self.store.get_nowait(f.key)
+            except KeyError:
+                # value arrived concurrently; block briefly
+                v = self.store.get(f.key, timeout=30.0)
+            except BaseException as err:
+                raise PoisonedInputError(f.producer_task, err) from err
+            nbytes_in += _nbytes(v)
+            self.store.note_location(f.key, node_id)
+            return v
+
+        args = _walk(t.args, _fetch)
+        kwargs = _walk(t.kwargs, _fetch)
+        t.nbytes_in = nbytes_in
+        return args, kwargs
+
+    def _execute(self, tid: int, worker: int, node_id: int) -> None:
+        t = self.graph.get(tid)
+        if not self.graph.mark_running(tid, worker, node_id):
+            return  # cancelled before start (lost speculation race)
+        t0 = time.perf_counter()
+        try:
+            args, kwargs = self._resolve_inputs(t, node_id)
+            result = t.fn(*args, **kwargs)
+        except PoisonedInputError as err:
+            self._finish_failure(t, err, retryable=False)
+            self._trace_task(t, worker, node_id, t0, ok=False)
+            return
+        except BaseException as err:
+            if self.retry.should_retry(t.attempts, t.max_retries, err):
+                if self.retry.backoff_seconds:
+                    time.sleep(self.retry.backoff_seconds)
+                self.graph.requeue_for_retry(tid)
+                self.scheduler.push(tid)
+                self._trace_task(t, worker, node_id, t0, ok=False, retried=True)
+                return
+            self._finish_failure(t, err, retryable=True)
+            self._trace_task(t, worker, node_id, t0, ok=False)
+            return
+        self._finish_success(t, result, node_id)
+        self._trace_task(t, worker, node_id, t0, ok=True)
+
+    def _trace_task(self, t: TaskNode, worker: int, node_id: int, t0: float,
+                    ok: bool, retried: bool = False) -> None:
+        self.tracer.record(TraceEvent(
+            kind="task", name=t.name, worker=worker, node=node_id,
+            t0=t0, t1=time.perf_counter(), task_id=t.task_id,
+            meta={"ok": ok, "retried": retried, "attempt": t.attempts,
+                  "speculative_of": t.speculative_of},
+        ))
+
+    # ------------------------------------------------------- completion paths
+    def _logical_id(self, t: TaskNode) -> int:
+        return t.speculative_of if t.speculative_of is not None else t.task_id
+
+    def _claim_completion(self, t: TaskNode) -> bool:
+        lid = self._logical_id(t)
+        with self._logical_lock:
+            if self._logical_done.get(lid):
+                return False
+            self._logical_done[lid] = True
+            return True
+
+    def _finish_success(self, t: TaskNode, result: Any, node_id: int) -> None:
+        primary = self.graph.get(self._logical_id(t))
+        if not self._claim_completion(t):
+            # lost the speculation race — discard
+            self.graph.mark_cancelled(t.task_id)
+            self._dec_inflight(t)
+            return
+        out_keys = primary.out_keys
+        if len(out_keys) == 0:
+            pass
+        elif len(out_keys) == 1:
+            self.store.put(out_keys[0], result, node=node_id)
+        else:
+            if not isinstance(result, (tuple, list)) or len(result) != len(out_keys):
+                err = TypeError(
+                    f"task {primary.name} declared {len(out_keys)} outputs but "
+                    f"returned {type(result).__name__}"
+                )
+                self._publish_failure(primary, err)
+                if t.task_id != primary.task_id:
+                    self.graph.mark_cancelled(t.task_id)
+                self._dec_inflight(t)
+                return
+            for key, val in zip(out_keys, result):
+                self.store.put(key, val, node=node_id)
+        ready = self.graph.mark_done(primary.task_id)
+        if t.task_id != primary.task_id:
+            # speculative clone won: record clone done too
+            self.graph.mark_done(t.task_id)
+        self.scheduler.push_many(ready)
+        self._dec_inflight(t)
+
+    def _publish_failure(self, primary: TaskNode, err: BaseException) -> None:
+        wrapped = TaskFailedError(primary.name, primary.task_id, err)
+        for key in primary.out_keys:
+            self.store.put_error(key, wrapped)
+        ready = self.graph.mark_failed(primary.task_id, err)
+        self.scheduler.push_many(ready)
+
+    def _finish_failure(self, t: TaskNode, err: BaseException, retryable: bool) -> None:
+        primary = self.graph.get(self._logical_id(t))
+        if not self._claim_completion(t):
+            self.graph.mark_cancelled(t.task_id)
+            self._dec_inflight(t)
+            return
+        self._publish_failure(primary, err)
+        if t.task_id != primary.task_id:
+            self.graph.mark_cancelled(t.task_id)
+        self._dec_inflight(t)
+
+    def _dec_inflight(self, t: TaskNode) -> None:
+        with self._inflight_cond:
+            self._inflight -= 1
+            if self._inflight <= 0:
+                self._inflight_cond.notify_all()
+
+    # ------------------------------------------------------------ speculation
+    def _speculation_loop(self) -> None:
+        cfg = self.speculation
+        while not self._stopped:
+            time.sleep(cfg.poll_interval)
+            with self._inflight_lock:
+                idle = self._idle_workers
+            if idle <= 0 or self.scheduler.queue_len() > 0:
+                continue
+            done_by_name: Dict[str, List[float]] = {}
+            running: List[TaskNode] = []
+            now = time.perf_counter()
+            for n in self.graph.nodes():
+                if n.state == TaskState.DONE and n.speculative_of is None:
+                    done_by_name.setdefault(n.name, []).append(n.duration)
+                elif n.state == TaskState.RUNNING and n.speculatable \
+                        and n.speculative_of is None:
+                    running.append(n)
+            for n in running:
+                ds = done_by_name.get(n.name, ())
+                if len(ds) < cfg.min_samples:
+                    continue
+                med = statistics.median(ds)
+                run_t = now - n.start_t
+                if run_t < cfg.min_seconds or run_t < cfg.factor * med:
+                    continue
+                with self._logical_lock:
+                    if self._logical_done.get(n.task_id):
+                        continue
+                    already = getattr(n, "_speculated", False)
+                if already:
+                    continue
+                n._speculated = True  # type: ignore[attr-defined]
+                clone_id = self.graph.next_task_id()
+                clone = TaskNode(
+                    task_id=clone_id, name=n.name + "(spec)", fn=n.fn,
+                    args=n.args, kwargs=n.kwargs, dep_keys=set(n.dep_keys),
+                    out_keys=[], speculative_of=n.task_id, speculatable=False,
+                )
+                with self._inflight_cond:
+                    self._inflight += 1
+                ready = self.graph.add_task(clone)
+                self.scheduler.push_many(ready)
+
+    # --------------------------------------------------------- sync primitives
+    def barrier(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted task reached a terminal state
+        (paper's ``compss_barrier``)."""
+        with self._inflight_cond:
+            if not self._inflight_cond.wait_for(lambda: self._inflight <= 0,
+                                                timeout=timeout):
+                raise TimeoutError(f"barrier timed out with {self._inflight} tasks inflight")
+
+    def wait_on(self, obj: Any, timeout: Optional[float] = None) -> Any:
+        """Synchronize: resolve Future(s) (paper's ``compss_wait_on``).
+        Accepts a Future or any nesting of lists/tuples/dicts of Futures."""
+        return _walk(obj, lambda f: f.result(timeout=timeout))
+
+    def stop(self, wait: bool = True) -> None:
+        """``compss_stop``: optionally drain, then shut the pool down."""
+        if wait:
+            self.barrier()
+        self._stopped = True
+        self.scheduler.close()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        self.tracer.stop()
+
+    # --------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        nodes = self.graph.nodes()
+        done = [n for n in nodes if n.state == TaskState.DONE]
+        return {
+            "tasks_submitted": len([n for n in nodes if n.speculative_of is None]),
+            "tasks_done": len(done),
+            "tasks_failed": len([n for n in nodes if n.state == TaskState.FAILED]),
+            "tasks_cancelled": len([n for n in nodes if n.state == TaskState.CANCELLED]),
+            "retries": sum(max(0, n.attempts - 1) for n in nodes),
+            "speculative": len([n for n in nodes if n.speculative_of is not None]),
+            "total_work_s": self.graph.total_work_seconds(),
+            "critical_path_s": self.graph.critical_path_seconds(),
+            "wallclock_s": self.tracer.wallclock(),
+            "utilization": self.tracer.utilization(self.n_workers),
+        }

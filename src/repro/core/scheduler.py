@@ -1,0 +1,139 @@
+"""Pluggable scheduling policies (paper §3.1: FIFO, LIFO, locality-aware).
+
+The scheduler owns the ready set.  Worker threads call ``take(worker)``,
+which blocks until a task is available (or the runtime drains).  Policies
+differ only in *which* ready task a worker receives:
+
+* ``fifo``      — submission order (COMPSs default).
+* ``lifo``      — most recently readied first (depth-first; smaller memory
+                  footprint for wide fan-outs).
+* ``locality``  — prefer the ready task with the most input bytes already
+                  resident on the worker's node (COMPSs data-locality-aware
+                  policy, NUMA/ICI-adapted here).
+* ``worksteal`` — per-worker deques; owner pops LIFO, thieves steal FIFO.
+                  Beyond-paper addition used for straggler mitigation.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .dag import TaskGraph, TaskNode
+from .futures import ObjectStore
+
+
+class Scheduler:
+    def __init__(
+        self,
+        graph: TaskGraph,
+        store: ObjectStore,
+        policy: str = "fifo",
+        workers_per_node: int = 1,
+    ):
+        if policy not in ("fifo", "lifo", "locality", "worksteal"):
+            raise ValueError(f"unknown scheduling policy: {policy}")
+        self.policy = policy
+        self.graph = graph
+        self.store = store
+        self.workers_per_node = max(1, workers_per_node)
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._queue: collections.deque = collections.deque()
+        self._local_queues: Dict[int, collections.deque] = collections.defaultdict(
+            collections.deque
+        )
+        self._closed = False
+
+    # ------------------------------------------------------------------ admin
+    def node_of(self, worker: int) -> int:
+        return worker // self.workers_per_node
+
+    def close(self) -> None:
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def queue_len(self) -> int:
+        with self._lock:
+            n = len(self._queue)
+            n += sum(len(q) for q in self._local_queues.values())
+            return n
+
+    # ---------------------------------------------------------------- enqueue
+    def push(self, task_id: int, preferred_worker: Optional[int] = None) -> None:
+        with self._cond:
+            if self.policy == "worksteal" and preferred_worker is not None:
+                self._local_queues[preferred_worker].append(task_id)
+            else:
+                self._queue.append(task_id)
+            self._cond.notify()
+
+    def push_many(self, task_ids: List[int]) -> None:
+        if not task_ids:
+            return
+        with self._cond:
+            self._queue.extend(task_ids)
+            self._cond.notify_all()
+
+    # ------------------------------------------------------------------- take
+    def take(self, worker: int, timeout: Optional[float] = None) -> Optional[int]:
+        """Blocking pop according to the policy. None => scheduler closed or
+        timeout expired with nothing to run."""
+        with self._cond:
+            while True:
+                tid = self._select(worker)
+                if tid is not None:
+                    return tid
+                if self._closed:
+                    return None
+                if not self._cond.wait(timeout=timeout):
+                    return None
+
+    def _select(self, worker: int) -> Optional[int]:
+        if self.policy == "fifo":
+            if self._queue:
+                return self._queue.popleft()
+            return None
+        if self.policy == "lifo":
+            if self._queue:
+                return self._queue.pop()
+            return None
+        if self.policy == "worksteal":
+            own = self._local_queues[worker]
+            if own:
+                return own.pop()  # owner: LIFO (hot cache)
+            if self._queue:
+                return self._queue.popleft()
+            # steal: oldest task from the longest victim queue
+            victim = max(
+                (q for w, q in self._local_queues.items() if w != worker and q),
+                key=len,
+                default=None,
+            )
+            if victim:
+                return victim.popleft()
+            return None
+        # locality: scan the (bounded) window of the ready queue, pick the
+        # task with the highest fraction of input bytes on this worker's node
+        if not self._queue:
+            return None
+        node = self.node_of(worker)
+        window = min(len(self._queue), 64)
+        best_i, best_score = 0, -1.0
+        for i in range(window):
+            tid = self._queue[i]
+            score = self._locality_score(tid, node)
+            if score > best_score:
+                best_i, best_score = i, score
+        self._queue.rotate(-best_i)
+        tid = self._queue.popleft()
+        self._queue.rotate(best_i)
+        return tid
+
+    def _locality_score(self, task_id: int, node: int) -> float:
+        t = self.graph.get(task_id)
+        if not t.dep_keys:
+            return 0.0
+        local = sum(1 for key in t.dep_keys if node in self.store.locations(key))
+        return local / len(t.dep_keys)

@@ -1,0 +1,136 @@
+"""Extrae/Paraver-style execution tracing (paper §3.3.4, Fig. 10).
+
+The tracer records one event per task attempt (worker, node, task name,
+start/end) plus runtime lifecycle events.  From a trace we derive the
+quantities the paper reads off Paraver timelines: per-worker utilization,
+parallel efficiency, serialization share, and an ASCII Gantt rendering for
+quick terminal inspection.  A minimal ``.prv``-like export keeps the format
+familiar to Paraver users.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, asdict, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class TraceEvent:
+    kind: str            # "task" | "serialize" | "transfer" | "runtime"
+    name: str
+    worker: int
+    node: int
+    t0: float
+    t1: float
+    task_id: int = -1
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def dt(self) -> float:
+        return self.t1 - self.t0
+
+
+class Tracer:
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._events: List[TraceEvent] = []
+        self._lock = threading.Lock()
+        self.t_start = time.perf_counter()
+        self.t_stop: Optional[float] = None
+
+    def record(self, ev: TraceEvent) -> None:
+        if not self.enabled:
+            return
+        with self._lock:
+            self._events.append(ev)
+
+    def stop(self) -> None:
+        self.t_stop = time.perf_counter()
+
+    def events(self, kind: Optional[str] = None) -> List[TraceEvent]:
+        with self._lock:
+            evs = list(self._events)
+        if kind is not None:
+            evs = [e for e in evs if e.kind == kind]
+        return evs
+
+    # ------------------------------------------------------------- analysis
+    def wallclock(self) -> float:
+        end = self.t_stop if self.t_stop is not None else time.perf_counter()
+        return end - self.t_start
+
+    def busy_per_worker(self) -> Dict[int, float]:
+        busy: Dict[int, float] = {}
+        for e in self.events("task"):
+            busy[e.worker] = busy.get(e.worker, 0.0) + e.dt
+        return busy
+
+    def utilization(self, n_workers: int) -> float:
+        wall = self.wallclock()
+        if wall <= 0 or n_workers <= 0:
+            return 0.0
+        return sum(self.busy_per_worker().values()) / (wall * n_workers)
+
+    def serialization_share(self) -> float:
+        task_t = sum(e.dt for e in self.events("task"))
+        ser_t = sum(e.dt for e in self.events("serialize"))
+        total = task_t + ser_t
+        return ser_t / total if total > 0 else 0.0
+
+    def task_duration_stats(self) -> Dict[str, dict]:
+        per: Dict[str, List[float]] = {}
+        for e in self.events("task"):
+            per.setdefault(e.name, []).append(e.dt)
+        out = {}
+        for name, ds in per.items():
+            ds.sort()
+            out[name] = {
+                "count": len(ds),
+                "total": sum(ds),
+                "mean": sum(ds) / len(ds),
+                "p50": ds[len(ds) // 2],
+                "max": ds[-1],
+            }
+        return out
+
+    # -------------------------------------------------------------- exports
+    def to_json(self) -> str:
+        return json.dumps([asdict(e) for e in self.events()], indent=1)
+
+    def to_prv(self) -> str:
+        """Tiny Paraver-like export: header + one state record per task."""
+        evs = self.events("task")
+        dur_us = int(self.wallclock() * 1e6)
+        workers = sorted({e.worker for e in evs}) or [0]
+        lines = [f"#Paraver (rjax):{dur_us}_us:1(1):{len(workers)}"]
+        for e in evs:
+            t0 = int((e.t0 - self.t_start) * 1e6)
+            t1 = int((e.t1 - self.t_start) * 1e6)
+            # state record: 1:cpu:appl:task:thread:begin:end:state
+            lines.append(f"1:{e.worker + 1}:1:1:1:{t0}:{t1}:{e.name}")
+        return "\n".join(lines)
+
+    def ascii_gantt(self, width: int = 100) -> str:
+        """Terminal Gantt chart — one row per worker (paper Fig. 10 analogue)."""
+        evs = self.events("task")
+        if not evs:
+            return "(empty trace)"
+        t0 = min(e.t0 for e in evs)
+        t1 = max(e.t1 for e in evs)
+        span = max(t1 - t0, 1e-9)
+        rows: Dict[int, List[str]] = {}
+        names = sorted({e.name for e in evs})
+        glyph = {n: chr(ord("A") + (i % 26)) for i, n in enumerate(names)}
+        for e in evs:
+            row = rows.setdefault(e.worker, [" "] * width)
+            a = int((e.t0 - t0) / span * (width - 1))
+            b = max(a + 1, int((e.t1 - t0) / span * (width - 1)) + 1)
+            for i in range(a, min(b, width)):
+                row[i] = glyph[e.name]
+        legend = "  ".join(f"{g}={n}" for n, g in glyph.items())
+        out = [f"trace span: {span*1e3:.2f} ms   [{legend}]"]
+        for w in sorted(rows):
+            out.append(f"w{w:03d} |{''.join(rows[w])}|")
+        return "\n".join(out)

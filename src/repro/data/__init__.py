@@ -1,0 +1,1 @@
+from .pipeline import DataPipeline, synth_batch  # noqa: F401

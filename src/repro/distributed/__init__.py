@@ -1,0 +1,9 @@
+from .sharding import (  # noqa: F401
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    default_rules,
+    param_pspecs,
+    tree_map_axes,
+)
+from .steps import make_decode_step, make_prefill_step, make_train_step  # noqa: F401

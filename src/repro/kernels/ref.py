@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+Each function computes exactly what its kernel computes, in plain jax.numpy,
+with no tiling — tests sweep shapes/dtypes and assert allclose.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B,H,Sq,d); k,v: (B,K,Skv,d)."""
+    B, H, Sq, d = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Sequential SSD recurrence.  x: (b,s,h,p); dt: (b,s,h); A: (h,);
+    B,C: (b,s,n).  Returns (y: (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    st = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t, :].astype(jnp.float32) * A)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t, :].astype(jnp.float32),
+                         B[:, t].astype(jnp.float32),
+                         x[:, t].astype(jnp.float32))
+        st = st * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t].astype(jnp.float32), st))
+    return jnp.stack(ys, axis=1).astype(x.dtype), st
+
+
+def rglru_scan_ref(log_a, b, h0=None):
+    """Linear recurrence h_t = exp(log_a_t)·h_{t-1} + b_t.
+    log_a, b: (B, S, R); h0: (B, R)."""
+    Bsz, S, R = b.shape
+    h = jnp.zeros((Bsz, R), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    a = jnp.exp(log_a.astype(jnp.float32))
+    bf = b.astype(jnp.float32)
+    for t in range(S):
+        h = a[:, t] * h + bf[:, t]
+        ys.append(h)
+    return jnp.stack(ys, axis=1).astype(b.dtype), h
+
+
+def knn_topk_ref(test_x, train_x, train_y, k: int):
+    """Exact k smallest squared distances + labels (ties: stable by index)."""
+    d2 = (jnp.sum(test_x * test_x, axis=1)[:, None]
+          - 2.0 * test_x @ train_x.T
+          + jnp.sum(train_x * train_x, axis=1)[None, :])
+    neg_d, idx = jax.lax.top_k(-d2, k)
+    return -neg_d, train_y[idx]
+
+
+def kmeans_assign_ref(x, centroids):
+    """Returns (sums (k,d), counts (k,), sse scalar)."""
+    d2 = (jnp.sum(x * x, axis=1)[:, None]
+          - 2.0 * x @ centroids.T
+          + jnp.sum(centroids * centroids, axis=1)[None, :])
+    assign = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0).astype(jnp.int32)
+    sse = jnp.sum(jnp.min(d2, axis=1))
+    return sums, counts, sse
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * (1.0 / jnp.sqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(x.dtype)

@@ -1,0 +1,86 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+One program per (batch, head); the full sequence panel for that head lives
+in VMEM and a ``fori_loop`` walks the chunks: the intra-chunk part is dense
+MXU work ((Q,Q) decay-masked score matmul), the inter-chunk part carries the
+(headdim, d_state) state — the classic SSD decomposition, tiled for
+VMEM/MXU instead of CUDA shared memory (DESIGN.md §3).
+
+Layouts: x (B, S, H, P), dt (B, S, H) post-softplus, A (H,) negative,
+Bm/Cm (B, S, N) single group.  fp32 state & accumulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, y_ref, *, chunk: int):
+    S, P = x_ref.shape[1], x_ref.shape[3]
+    N = b_ref.shape[2]
+    n_chunks = S // chunk
+    A = A_ref[0].astype(jnp.float32)  # scalar for this head
+
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+
+    def body(ci, state):
+        sl = pl.ds(ci * chunk, chunk)
+        x = x_ref[0, sl, 0, :].astype(jnp.float32)        # (Q, P)
+        dt = dt_ref[0, sl, 0].astype(jnp.float32)         # (Q,)
+        Bm = b_ref[0, sl, :].astype(jnp.float32)          # (Q, N)
+        Cm = c_ref[0, sl, :].astype(jnp.float32)          # (Q, N)
+        dA = dt * A                                       # (Q,)
+        cs = jnp.cumsum(dA)                               # (Q,)
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+        L = jnp.where(tri, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+        scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q,Q)
+        M = scores * L * dt[None, :]
+        y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())))         # (Q,P)
+        # inter-chunk: contribution of incoming state, then update it
+        y = y + jnp.exp(cs)[:, None] * jax.lax.dot_general(
+            Cm, state, (((1,), (1,)), ((), ())))                        # (Q,P)
+        decay = jnp.exp(cs[-1] - cs)                                    # (Q,)
+        upd = jax.lax.dot_general(x, Bm * (decay * dt)[:, None],
+                                  (((0,), (0,)), ((), ())))             # (P,N)
+        state = state * jnp.exp(cs[-1]) + upd
+        y_ref[0, sl, 0, :] = y.astype(y_ref.dtype)
+        return state
+
+    state0 = jnp.zeros((P, N), jnp.float32)
+    jax.lax.fori_loop(0, n_chunks, body, state0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm, Cm: (B,S,N) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+
+    grid = (B, H)
+    y = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Sp, 1, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, Sp, 1), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1,), lambda b, h: (h,)),
+            pl.BlockSpec((1, Sp, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, Sp, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Sp, 1, P), lambda b, h: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sp, H, P), x.dtype),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y[:, :S]

@@ -1,0 +1,7 @@
+"""Neural-network layers for the assigned architectures (pure JAX, functional).
+
+Every layer module exposes ``init_*`` (returns a dict-of-arrays param tree)
+and a matching ``*_axes`` (same tree structure, leaves are tuples of logical
+axis names used by ``repro.distributed.sharding`` to derive PartitionSpecs).
+"""
+from . import attention, mlp, moe, norms, rglru, rope, ssd  # noqa: F401

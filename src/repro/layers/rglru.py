@@ -1,0 +1,154 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Temporal-mixing block: ``x -> [W_x -> causal conv -> RG-LRU]`` gated by a
+GeLU branch, then an output projection.  The RG-LRU recurrence
+
+    r_t = sigmoid(w_r ⊙ u_t + b_r)          (recurrence gate, per-channel)
+    i_t = sigmoid(w_i ⊙ u_t + b_i)          (input gate, per-channel)
+    log a_t = -c * softplus(Λ) * r_t        (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+is evaluated with ``jax.lax.associative_scan`` in prefill/training (the
+pure-JAX twin of the Pallas ``rglru_scan`` kernel) and as a single step in
+decode.  Gates are per-channel (diagonal) — a documented simplification of
+Griffin's block-diagonal gate matrices that keeps every op elementwise and
+therefore cleanly tensor-parallel (DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def init_rglru(key, d_model: int, rnn_width: int, *, conv_width: int = 4,
+               dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d_model)
+    R = rnn_width
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, R)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d_model, R)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (conv_width, R)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((R,), dtype=dtype),
+        "lam": jnp.full((R,), 2.0, dtype=jnp.float32),   # Λ: a ≈ 0.98^c at init
+        "w_r": (jax.random.normal(ks[3], (R,)) * 0.5).astype(jnp.float32),
+        "b_r": jnp.zeros((R,), dtype=jnp.float32),
+        "w_i": (jax.random.normal(ks[4], (R,)) * 0.5).astype(jnp.float32),
+        "b_i": jnp.ones((R,), dtype=jnp.float32),
+        "w_out": (jax.random.normal(jax.random.fold_in(key, 9), (R, d_model))
+                  * (1.0 / math.sqrt(R))).astype(dtype),
+    }
+
+
+def rglru_axes():
+    return {
+        "w_x": ("embed", "rnn"),
+        "w_gate": ("embed", "rnn"),
+        "conv_w": (None, "rnn"),
+        "conv_b": ("rnn",),
+        "lam": ("rnn",),
+        "w_r": ("rnn",),
+        "b_r": ("rnn",),
+        "w_i": ("rnn",),
+        "b_i": ("rnn",),
+        "w_out": ("rnn", "embed"),
+    }
+
+
+def _gates(params, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["w_r"] + params["b_r"])
+    i = jax.nn.sigmoid(uf * params["w_i"] + params["b_i"])
+    log_a = -_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via expm1: 1 - exp(2 log a)
+    beta = jnp.sqrt(jnp.maximum(-jnp.expm1(2.0 * log_a), 1e-12))
+    b = beta * (i * uf)
+    return a, b
+
+
+def rglru_scan(params, u, h0: Optional[jnp.ndarray] = None):
+    """Associative-scan evaluation. u: (B, S, R) -> (y (B,S,R), h_S (B,R))."""
+    a, b = _gates(params, u)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1, :]
+
+
+def rglru_step(params, u_t, h_prev):
+    """Single decode step. u_t: (B, R); h_prev: (B, R) fp32."""
+    a, b = _gates(params, u_t[:, None, :])
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(u_t.dtype), h
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def rglru_forward(params, x, *, cache: Optional[dict] = None,
+                  make_cache: bool = False) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full temporal-mixing block. x: (B, S, D).
+
+    cache = {"conv": (B, K-1, R), "h": (B, R) fp32} for decode (S == 1);
+    ``make_cache=True`` builds it from a prefill pass.
+    """
+    u = x @ params["w_x"]
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    K = params["conv_w"].shape[0]
+    if cache is None:
+        u_raw = u
+        u = _causal_conv(u, params["conv_w"], params["conv_b"])
+        y, h_last = rglru_scan(params, u)
+        new_cache = None
+        if make_cache:
+            S = u_raw.shape[1]
+            hist = u_raw[:, -(K - 1):, :]
+            if S < K - 1:
+                hist = jnp.pad(hist, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            new_cache = {"conv": hist, "h": h_last}
+    else:
+        hist = jnp.concatenate([cache["conv"], u], axis=1)
+        S = u.shape[1]
+        u = sum(hist[:, i: i + S, :] * params["conv_w"][i] for i in range(K))
+        u = u + params["conv_b"]
+        y_t, h = rglru_step(params, u[:, 0, :], cache["h"])
+        y = y_t[:, None, :]
+        new_cache = {"conv": hist[:, -(K - 1):, :], "h": h}
+    return (y * gate) @ params["w_out"], new_cache
+
+
+def init_rglru_cache(batch: int, rnn_width: int, *, conv_width: int = 4,
+                     dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, rnn_width), dtype=dtype),
+        "h": jnp.zeros((batch, rnn_width), dtype=jnp.float32),
+    }
+
+
+def rglru_reference(params, u, h0: Optional[jnp.ndarray] = None):
+    """Per-step loop oracle for tests."""
+    B, S, R = u.shape
+    a, b = _gates(params, u)
+    h = jnp.zeros((B, R), dtype=jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    ys = []
+    for t in range(S):
+        h = a[:, t] * h + b[:, t]
+        ys.append(h)
+    return jnp.stack(ys, axis=1).astype(u.dtype), h

@@ -1,0 +1,28 @@
+"""Rotary positional embeddings (RoPE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim: int, theta: float = 10_000.0):
+    """positions: (...,) int32 -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:  # (S, half) -> broadcast over batch and heads
+        cos_b = cos[None, :, None, :]
+        sin_b = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos_b = cos[:, :, None, :]
+        sin_b = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1f * cos_b - x2f * sin_b, x2f * cos_b + x1f * sin_b], axis=-1)
+    return out.astype(x.dtype)

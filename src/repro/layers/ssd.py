@@ -1,0 +1,242 @@
+"""Mamba-2 SSD (state-space duality) block.
+
+Prefill/train uses the *chunked* SSD algorithm (intra-chunk dense
+quadratic-in-chunk compute + inter-chunk linear state recurrence) — the
+pure-JAX twin of the Pallas ``ssd_scan`` kernel.  Decode is the O(1)
+single-step recurrence on the carried ``(H, P, N)`` state.
+
+Shapes follow the Mamba-2 reference: ``d_inner = expand * d_model``,
+``H = d_inner / headdim`` heads, state size ``N = ssm_state``, a single
+B/C group (``G = 1``), depthwise causal conv of width ``conv_width`` over
+the ``x``/``B``/``C`` channels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .norms import rmsnorm
+
+
+def init_ssd(key, d_model: int, *, expand: int = 2, headdim: int = 64,
+             d_state: int = 128, conv_width: int = 4, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, 2 * d_inner + 2 * d_state + n_heads))
+                 * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype=dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), dtype=jnp.float32),
+        "norm": {"scale": jnp.ones((d_inner,), dtype=dtype)},
+        "w_out": (jax.random.normal(ks[2], (d_inner, d_model))
+                  * (1.0 / math.sqrt(d_inner))).astype(dtype),
+    }
+
+
+def ssd_axes():
+    return {
+        "w_in": ("embed", "ssm_inproj"),
+        "conv_w": (None, "ssm_conv"),
+        "conv_b": ("ssm_conv",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": {"scale": ("ssm_inner",)},
+        "w_out": ("ssm_inner", "embed"),
+    }
+
+
+def _split_in(proj, d_inner: int, d_state: int, n_heads: int):
+    z = proj[..., :d_inner]
+    xc = proj[..., d_inner: 2 * d_inner]
+    B = proj[..., 2 * d_inner: 2 * d_inner + d_state]
+    C = proj[..., 2 * d_inner + d_state: 2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state:]
+    return z, xc, B, C, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B,S,C), w (K,C), b (C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-tri cumulative sums:
+    out[i, j] = sum_{k=j+1..i} dA_k for i >= j, -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, B, C, chunk: int, initial_state=None,
+                unroll: bool = False):
+    """Chunked SSD scan.
+
+    xh: (b, s, h, p); dt: (b, s, h) (post-softplus); A: (h,) (negative);
+    B, C: (b, s, n)  [single group broadcast over heads].
+    Returns (y: (b, s, h, p), final_state: (b, h, p, n)).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, "sequence must be divisible by chunk"
+    xc = xh.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    dA = dtc * A  # (b, c, q, h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (b, c, h, q, q)
+    Y_diag = jnp.einsum("bcqn,bckn,bchqk,bckh,bckhp->bcqhp",
+                        Cc, Bc, L, dtc, xc)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b, c, q, h)
+    states = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn", Bc, decay_states, dtc, xc)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])  # (b, c, h)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+
+    def scan_fn(carry, inp):
+        st_c, dec_c = inp  # (b,h,p,n), (b,h)
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry  # emit the state *entering* this chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, initial_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if unroll else 1)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b, c, h, p, n)
+
+    # 4) contribution of incoming state to each position
+    state_decay = jnp.exp(dA_cs)  # (b, c, q, h)
+    Y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, state_decay, prev_states)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssd_forward(params, x, *, expand: int, headdim: int, d_state: int,
+                conv_width: int, chunk: int = 256,
+                cache: Optional[dict] = None,
+                make_cache: bool = False,
+                unroll: bool = False) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full Mamba-2 block. x: (B, S, D).
+
+    Without ``cache``: chunked prefill/training path; ``make_cache=True``
+    additionally returns the decode cache (final SSD state + conv history).
+    With ``cache`` (decode, S == 1): single-step recurrence; returns
+    (out, new_cache) where cache = {"conv": (B, K-1, Cch), "state": (B,H,P,N)}.
+    """
+    Bsz, S, D = x.shape
+    d_inner = expand * D
+    n_heads = d_inner // headdim
+    proj = x @ params["w_in"]
+    z, xc, Bm, Cm, dt = _split_in(proj, d_inner, d_state, n_heads)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+
+    if cache is None:
+        conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"], params["conv_b"]))
+        new_cache = None
+        if make_cache:
+            K = params["conv_w"].shape[0]
+            hist = conv_in[:, -(K - 1):, :]
+            if S < K - 1:
+                hist = jnp.pad(hist, ((0, 0), (K - 1 - S, 0), (0, 0)))
+            new_cache = {"conv": hist}
+    else:
+        hist = jnp.concatenate([cache["conv"], conv_in], axis=1)  # (B, K-1+S, C)
+        K = params["conv_w"].shape[0]
+        acc = params["conv_b"]
+        pieces = [hist[:, i: i + S, :] * params["conv_w"][i] for i in range(K)]
+        conv_out = jax.nn.silu(sum(pieces) + acc)
+        new_conv = hist[:, -(K - 1):, :]
+        new_cache = {"conv": new_conv}
+
+    xs = conv_out[..., :d_inner]
+    Bs = conv_out[..., d_inner: d_inner + d_state]
+    Cs = conv_out[..., d_inner + d_state:]
+    xh = xs.reshape(Bsz, S, n_heads, headdim)
+    A = -jnp.exp(params["A_log"])  # (h,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+
+    if cache is None:
+        # pad to a chunk multiple with dt == 0 (decay 1, contribution 0)
+        q = min(chunk, S)
+        pad = (-S) % q
+        if pad:
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bs_p = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+            Cs_p = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, dt_p, Bs_p, Cs_p = xh, dt, Bs, Cs
+        y, final_state = ssd_chunked(xh_p, dt_p, A, Bs_p, Cs_p, chunk=q,
+                                      unroll=unroll)
+        y = y[:, :S]
+        if make_cache:
+            new_cache["state"] = final_state
+    else:
+        # decode: state' = exp(dt*A) * state + dt * (B ⊗ x); y = C · state' + D x
+        st = cache["state"]  # (B, H, P, N) fp32
+        dA = jnp.exp(dt[:, 0, :] * A)  # (B, H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0, :], Bs[:, 0, :].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        st_new = st * dA[..., None, None] + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Cs[:, 0, :].astype(jnp.float32), st_new)
+        y = y[:, None]  # (B, 1, H, P)
+        new_cache["state"] = st_new
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y)
+    return y @ params["w_out"], new_cache
+
+
+def init_ssd_cache(batch: int, d_model: int, *, expand: int, headdim: int,
+                   d_state: int, conv_width: int, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // headdim
+    conv_ch = d_inner + 2 * d_state
+    return {
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype=dtype),
+        "state": jnp.zeros((batch, n_heads, headdim, d_state), dtype=jnp.float32),
+    }
+
+
+def ssd_reference(xh, dt, A, B, C, initial_state=None):
+    """Naive per-step recurrence oracle for tests."""
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    st = (jnp.zeros((b, h, p, n), dtype=jnp.float32)
+          if initial_state is None else initial_state)
+    ys = []
+    for t in range(s):
+        dA = jnp.exp(dt[:, t, :] * A)  # (b, h)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t, :],
+                         B[:, t].astype(jnp.float32), xh[:, t].astype(jnp.float32))
+        st = st * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bn,bhpn->bhp", C[:, t].astype(jnp.float32), st))
+    return jnp.stack(ys, axis=1), st

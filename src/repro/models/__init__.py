@@ -1,0 +1,11 @@
+"""Model zoo: one unified decoder-only LM covering the 10 assigned
+architectures (dense GQA / MoE / Mamba-2 SSD / RG-LRU hybrid / VLM & audio
+backbones with stubbed frontends)."""
+from .lm import (  # noqa: F401
+    LMConfig,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    param_axes,
+)

@@ -1,0 +1,457 @@
+"""Unified decoder-only LM covering all assigned architectures.
+
+A model is a cycle of *block types* (``block_pattern``) over ``n_layers``:
+
+* ``dense``      — GQA attention + SwiGLU MLP (granite, qwen3, internlm2,
+                   VLM/audio backbones)
+* ``moe``        — GQA attention + routed MoE (+ optional shared experts)
+* ``ssd``        — Mamba-2 SSD block (attention-free)
+* ``rglru``      — RG-LRU temporal mixing + MLP (RecurrentGemma)
+* ``local_attn`` — sliding-window GQA + MLP (RecurrentGemma's 1:2 pattern)
+
+Layers are grouped into ``lax.scan``-stacked *super-blocks* (one pattern
+period per step) so the compiled HLO is O(1) in depth; the remainder layers
+(``n_layers % len(pattern)``) run unrolled.  Caches mirror the grouping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..layers.attention import attention_axes, attn_forward, init_attention, init_kv_cache
+from ..layers.mlp import init_mlp, mlp_axes, mlp_forward
+from ..layers.moe import init_moe, moe_apply_local, moe_apply_sharded, moe_axes
+from ..layers.norms import init_rmsnorm, rmsnorm, rmsnorm_axes
+from ..layers.tp_block import tp_attn_sublayer, tp_mlp_sublayer, tp_rglru_sublayer
+from ..layers.rglru import init_rglru, init_rglru_cache, rglru_axes, rglru_forward
+from ..layers.ssd import init_ssd, init_ssd_cache, ssd_axes, ssd_forward
+
+AxTree = Any  # same structure as params, leaves = tuples of logical names
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    block_pattern: Tuple[str, ...] = ("dense",)
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_renormalize: bool = True
+    # SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    # RG-LRU
+    rnn_width: int = 0
+    local_window: int = 2048
+    # input modality: "tokens" | "embeds" (audio stub) | "prefix_embeds" (VLM stub)
+    input_mode: str = "tokens"
+    prefix_len: int = 0
+    mlp_gated: bool = True
+    # numerics / compilation
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.bfloat16
+    remat: str = "none"            # none | full | dots
+    attn_impl: str = "auto"
+    attn_chunk: int = 1024
+    # dry-run cost probes: python-loop the layers / unroll inner scans so
+    # XLA cost_analysis (which counts while bodies once) sees every FLOP
+    scan_layers: bool = True
+    unroll_scans: bool = False
+    # distribution hints (consumed by repro.distributed)
+    moe_ff_shard_axis: Optional[str] = "data"
+    # §Perf levers: explicit shard_map TP for dense sub-blocks (train path)
+    # and bf16 storage for attention score/probability tensors
+    tp_block: str = "gspmd"          # "gspmd" | "shard_map"
+    attn_scores_bf16: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def layer_types(self) -> Tuple[str, ...]:
+        m = len(self.block_pattern)
+        return tuple(self.block_pattern[i % m] for i in range(self.n_layers))
+
+    @property
+    def n_super(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def n_tail(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+    @property
+    def is_recurrent_only(self) -> bool:
+        return all(t in ("ssd", "rglru") for t in self.block_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return all(t in ("ssd", "rglru", "local_attn") for t in self.block_pattern)
+
+
+# ------------------------------------------------------------------ builders
+def _init_block(cfg: LMConfig, key, btype: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+    if btype in ("dense", "local_attn"):
+        return {
+            "ln1": init_rmsnorm(cfg.d_model, dt),
+            "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, cfg.qk_norm, dt),
+            "ln2": init_rmsnorm(cfg.d_model, dt),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, gated=cfg.mlp_gated),
+        }
+    if btype == "moe":
+        p = {
+            "ln1": init_rmsnorm(cfg.d_model, dt),
+            "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.hd, cfg.qk_norm, dt),
+            "ln2": init_rmsnorm(cfg.d_model, dt),
+            "moe": init_moe(ks[1], cfg.d_model, cfg.d_ff_expert, cfg.n_experts, dt),
+        }
+        if cfg.n_shared_experts:
+            p["shared"] = init_mlp(ks[2], cfg.d_model,
+                                   cfg.n_shared_experts * cfg.d_ff_expert, dt)
+        return p
+    if btype == "ssd":
+        return {
+            "ln1": init_rmsnorm(cfg.d_model, dt),
+            "ssd": init_ssd(ks[0], cfg.d_model, expand=cfg.ssm_expand,
+                            headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                            conv_width=cfg.conv_width, dtype=dt),
+        }
+    if btype == "rglru":
+        return {
+            "ln1": init_rmsnorm(cfg.d_model, dt),
+            "rec": init_rglru(ks[0], cfg.d_model, cfg.rnn_width or cfg.d_model,
+                              conv_width=cfg.conv_width, dtype=dt),
+            "ln2": init_rmsnorm(cfg.d_model, dt),
+            "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, gated=cfg.mlp_gated),
+        }
+    raise ValueError(f"unknown block type {btype}")
+
+
+def _block_axes(cfg: LMConfig, btype: str) -> Dict:
+    if btype in ("dense", "local_attn"):
+        return {"ln1": rmsnorm_axes(), "attn": attention_axes(cfg.qk_norm),
+                "ln2": rmsnorm_axes(), "mlp": mlp_axes(cfg.mlp_gated)}
+    if btype == "moe":
+        ax = {"ln1": rmsnorm_axes(), "attn": attention_axes(cfg.qk_norm),
+              "ln2": rmsnorm_axes(), "moe": moe_axes()}
+        if cfg.n_shared_experts:
+            ax["shared"] = mlp_axes()
+        return ax
+    if btype == "ssd":
+        return {"ln1": rmsnorm_axes(), "ssd": ssd_axes()}
+    if btype == "rglru":
+        return {"ln1": rmsnorm_axes(), "rec": rglru_axes(),
+                "ln2": rmsnorm_axes(), "mlp": mlp_axes(cfg.mlp_gated)}
+    raise ValueError(btype)
+
+
+def _init_super(cfg: LMConfig, key) -> Dict:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}": _init_block(cfg, ks[i], t)
+            for i, t in enumerate(cfg.block_pattern)}
+
+
+def _super_axes(cfg: LMConfig) -> Dict:
+    return {f"b{i}": _block_axes(cfg, t) for i, t in enumerate(cfg.block_pattern)}
+
+
+def _stack(trees: List) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: LMConfig, key) -> Dict:
+    k_emb, k_scan, k_tail, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.input_mode in ("tokens", "prefix_embeds"):
+        params["embed"] = (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model))
+                           * 0.02).astype(cfg.param_dtype)
+    if cfg.n_super > 0:
+        ks = jax.random.split(k_scan, cfg.n_super)
+        params["scan"] = _stack([_init_super(cfg, k) for k in ks])
+    tail_types = cfg.layer_types[cfg.n_super * len(cfg.block_pattern):]
+    if tail_types:
+        ks = jax.random.split(k_tail, len(tail_types))
+        params["tail"] = [_init_block(cfg, ks[i], t) for i, t in enumerate(tail_types)]
+    params["final_norm"] = init_rmsnorm(cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size))
+                             * 0.02).astype(cfg.param_dtype)
+    return params
+
+
+def param_axes(cfg: LMConfig) -> AxTree:
+    """Same tree structure as ``init_params``; leaves are tuples of logical
+    axis names (scan groups get a leading ``"layers"``)."""
+    ax: Dict[str, Any] = {}
+    if cfg.input_mode in ("tokens", "prefix_embeds"):
+        ax["embed"] = ("vocab", "embed")
+    if cfg.n_super > 0:
+        sup = _super_axes(cfg)
+        ax["scan"] = jax.tree.map(
+            lambda t: ("layers",) + t, sup,
+            is_leaf=lambda x: isinstance(x, tuple))
+    tail_types = cfg.layer_types[cfg.n_super * len(cfg.block_pattern):]
+    if tail_types:
+        ax["tail"] = [_block_axes(cfg, t) for t in tail_types]
+    ax["final_norm"] = rmsnorm_axes()
+    if not cfg.tie_embeddings:
+        ax["lm_head"] = ("embed", "vocab")
+    return ax
+
+
+# -------------------------------------------------------------------- caches
+def _init_block_cache(cfg: LMConfig, btype: str, batch: int, cache_len: int):
+    if btype == "dense" or btype == "moe":
+        return init_kv_cache(batch, cache_len, cfg.n_kv_heads, cfg.hd, cfg.cache_dtype)
+    if btype == "local_attn":
+        return init_kv_cache(batch, min(cache_len, cfg.local_window),
+                             cfg.n_kv_heads, cfg.hd, cfg.cache_dtype)
+    if btype == "ssd":
+        return init_ssd_cache(batch, cfg.d_model, expand=cfg.ssm_expand,
+                              headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                              conv_width=cfg.conv_width, dtype=cfg.compute_dtype)
+    if btype == "rglru":
+        return init_rglru_cache(batch, cfg.rnn_width or cfg.d_model,
+                                conv_width=cfg.conv_width, dtype=cfg.compute_dtype)
+    raise ValueError(btype)
+
+
+def init_caches(cfg: LMConfig, batch: int, cache_len: int) -> Dict:
+    caches: Dict[str, Any] = {}
+    if cfg.n_super > 0:
+        one = {f"b{i}": _init_block_cache(cfg, t, batch, cache_len)
+               for i, t in enumerate(cfg.block_pattern)}
+        caches["scan"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_super,) + x.shape), one)
+    tail_types = cfg.layer_types[cfg.n_super * len(cfg.block_pattern):]
+    if tail_types:
+        caches["tail"] = [_init_block_cache(cfg, t, batch, cache_len)
+                          for t in tail_types]
+    return caches
+
+
+# ------------------------------------------------------------------- forward
+def _apply_block(cfg: LMConfig, p, x, btype: str, *, cache, pos_offset,
+                 make_cache_len, mesh):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if btype in ("dense", "local_attn", "moe"):
+        window = cfg.local_window if btype == "local_attn" else None
+        mcl = make_cache_len
+        if btype == "local_attn" and mcl is not None:
+            mcl = min(mcl, cfg.local_window)
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        use_tp = (cfg.tp_block == "shard_map" and tp > 1
+                  and cache is None and mcl is None
+                  and cfg.n_heads % tp == 0)  # heads must divide the TP axis
+        if use_tp:
+            data_axes = tuple(a for a in ("pod", "data")
+                              if a in mesh.axis_names)
+            x = tp_attn_sublayer(p["ln1"], p["attn"], x, cfg=cfg, mesh=mesh,
+                                 window=window, pos_offset=pos_offset,
+                                 data_axes=data_axes)
+            new_cache = None
+            if btype != "moe" and cfg.d_ff % tp == 0:
+                x = tp_mlp_sublayer(p["ln2"], p["mlp"], x, cfg=cfg, mesh=mesh,
+                                    data_axes=data_axes)
+                return x, None, aux
+            if btype != "moe":
+                x = x + mlp_forward(p["mlp"], rmsnorm(p["ln2"], x))
+                return x, None, aux
+        else:
+            a, new_cache = attn_forward(
+                p["attn"], rmsnorm(p["ln1"], x),
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+                rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm, window=window,
+                pos_offset=pos_offset, cache=cache, make_cache_len=mcl,
+                cache_dtype=cfg.cache_dtype, impl=cfg.attn_impl,
+                chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+                scores_dtype=jnp.bfloat16 if cfg.attn_scores_bf16
+                else jnp.float32)
+            x = x + a
+        h = rmsnorm(p["ln2"], x)
+        if btype == "moe":
+            if mesh is not None and mesh.shape.get("model", 1) > 1:
+                routed, aux = moe_apply_sharded(
+                    p["moe"], h, mesh=mesh, top_k=cfg.top_k,
+                    data_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+                    model_axis="model", ff_shard_axis=cfg.moe_ff_shard_axis,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    renormalize=cfg.moe_renormalize)
+            else:
+                routed, aux = moe_apply_local(
+                    p["moe"], h, top_k=cfg.top_k,
+                    capacity_factor=cfg.moe_capacity_factor,
+                    renormalize=cfg.moe_renormalize)
+            y = routed
+            if cfg.n_shared_experts:
+                y = y + mlp_forward(p["shared"], h)
+        else:
+            y = mlp_forward(p["mlp"], h)
+        return x + y, new_cache, aux
+    if btype == "ssd":
+        y, new_cache = ssd_forward(
+            p["ssd"], rmsnorm(p["ln1"], x), expand=cfg.ssm_expand,
+            headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+            conv_width=cfg.conv_width, chunk=cfg.ssm_chunk, cache=cache,
+            make_cache=make_cache_len is not None, unroll=cfg.unroll_scans)
+        return x + y, new_cache, aux
+    if btype == "rglru":
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        use_tp = (cfg.tp_block == "shard_map" and tp > 1 and cache is None
+                  and make_cache_len is None
+                  and (cfg.rnn_width or cfg.d_model) % tp == 0
+                  and cfg.d_ff % tp == 0)
+        if use_tp:
+            data_axes = tuple(a for a in ("pod", "data")
+                              if a in mesh.axis_names)
+            x = tp_rglru_sublayer(p["ln1"], p["rec"], x, cfg=cfg, mesh=mesh,
+                                  data_axes=data_axes)
+            x = tp_mlp_sublayer(p["ln2"], p["mlp"], x, cfg=cfg, mesh=mesh,
+                                data_axes=data_axes)
+            return x, None, aux
+        y, new_cache = rglru_forward(p["rec"], rmsnorm(p["ln1"], x), cache=cache,
+                                     make_cache=make_cache_len is not None)
+        x = x + y
+        x = x + mlp_forward(p["mlp"], rmsnorm(p["ln2"], x))
+        return x, new_cache, aux
+    raise ValueError(btype)
+
+
+def _apply_super(cfg: LMConfig, p_sb, x, caches_sb, *, pos_offset,
+                 make_cache_len, mesh):
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, btype in enumerate(cfg.block_pattern):
+        c = caches_sb.get(f"b{i}") if caches_sb else None
+        x, nc, aux = _apply_block(cfg, p_sb[f"b{i}"], x, btype, cache=c,
+                                  pos_offset=pos_offset,
+                                  make_cache_len=make_cache_len, mesh=mesh)
+        aux_total = aux_total + aux
+        if nc is not None:
+            new_caches[f"b{i}"] = nc
+    return x, (new_caches or None), aux_total
+
+
+def embed_inputs(cfg: LMConfig, params, batch) -> jnp.ndarray:
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    elif cfg.input_mode == "embeds":
+        x = batch["embeds"]
+    elif cfg.input_mode == "prefix_embeds":
+        parts = []
+        if "prefix_embeds" in batch:
+            parts.append(batch["prefix_embeds"].astype(cfg.compute_dtype))
+        if "tokens" in batch:
+            parts.append(jnp.take(params["embed"], batch["tokens"], axis=0))
+        x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    else:
+        raise ValueError(cfg.input_mode)
+    return x.astype(cfg.compute_dtype)
+
+
+def forward(cfg: LMConfig, params, batch, *, caches=None, pos_offset=0,
+            make_cache_len: Optional[int] = None, mesh=None,
+            remat: Optional[str] = None, last_only: bool = False):
+    """Returns (logits fp32 (B,S,V), new_caches or None, aux_loss).
+    ``last_only=True`` computes logits for the final position only (prefill
+    memory saver: avoids materializing (B, S, V))."""
+    remat = cfg.remat if remat is None else remat
+    x = embed_inputs(cfg, params, batch)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+
+    if cfg.n_super > 0:
+        scan_caches = caches.get("scan") if caches else None
+
+        def body(carry, xs):
+            x, aux = carry
+            p_sb, c_sb = xs
+            x, nc, a = _apply_super(cfg, p_sb, x, c_sb, pos_offset=pos_offset,
+                                    make_cache_len=make_cache_len, mesh=mesh)
+            return (x, aux + a), nc
+
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        if cfg.scan_layers:
+            (x, aux_total), nc_scan = jax.lax.scan(
+                body, (x, aux_total), (params["scan"], scan_caches))
+        else:
+            # dry-run probe path: python loop so every layer's cost is in HLO
+            ncs = []
+            for i in range(cfg.n_super):
+                p_sb = jax.tree.map(lambda a: a[i], params["scan"])
+                c_sb = (jax.tree.map(lambda a: a[i], scan_caches)
+                        if scan_caches is not None else None)
+                (x, aux_total), nc = body((x, aux_total), (p_sb, c_sb))
+                ncs.append(nc)
+            nc_scan = (jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+                       if ncs and ncs[0] is not None else None)
+        if nc_scan is not None:
+            new_caches["scan"] = nc_scan
+
+    tail_types = cfg.layer_types[cfg.n_super * len(cfg.block_pattern):]
+    if tail_types:
+        tail_caches = (caches.get("tail") if caches else [None] * len(tail_types))
+        nc_tail = []
+        for i, btype in enumerate(tail_types):
+            x, nc, a = _apply_block(cfg, params["tail"][i], x, btype,
+                                    cache=tail_caches[i], pos_offset=pos_offset,
+                                    make_cache_len=make_cache_len, mesh=mesh)
+            aux_total = aux_total + a
+            nc_tail.append(nc)
+        if any(c is not None for c in nc_tail):
+            new_caches["tail"] = nc_tail
+
+    if last_only:
+        x = x[:, -1:]
+    x = rmsnorm(params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    return logits, (new_caches or None), aux_total
+
+
+def loss_fn(cfg: LMConfig, params, batch, *, mesh=None, aux_weight: float = 0.01,
+            remat: Optional[str] = None):
+    """Masked next-token cross entropy.  batch must carry ``targets`` (B,S)
+    and ``loss_mask`` (B,S) aligned with the model's output positions."""
+    logits, _, aux = forward(cfg, params, batch, mesh=mesh, remat=remat)
+    targets = batch["targets"]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux, "tokens": jnp.sum(mask)}

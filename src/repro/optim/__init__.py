@@ -1,0 +1,2 @@
+from .adamw import adamw, clip_by_global_norm, cosine_schedule  # noqa: F401
+from .compress import compressed_gradients  # noqa: F401

@@ -1,0 +1,75 @@
+"""Gradient compression with error feedback (beyond-paper distributed-
+optimization trick; DESIGN.md §4).
+
+Two codecs, both with EF-SGD-style residual accumulation so compression
+error is re-injected next step (keeps convergence):
+
+* ``int8``  — per-tensor symmetric quantization of the gradient to int8
+              before the cross-pod all-reduce (8× traffic cut on the slow
+              inter-pod hops; DP all-reduce inside a pod stays full-precision
+              on ICI).
+* ``topk``  — keep the largest-|g| fraction per tensor (sparsity mask),
+              residual carries the rest.
+
+Usage: wrap the gradient tree between backward and optimizer::
+
+    grads, ef_state = compressed_gradients(grads, ef_state, codec="int8")
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant_int8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_mask(x, frac: float):
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh).astype(x.dtype)
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_gradients(grads, ef_state: Optional[Any] = None, *,
+                         codec: str = "int8", topk_frac: float = 0.01
+                         ) -> Tuple[Any, Any]:
+    """Returns (decompressed-after-compression grads, new error feedback).
+
+    The round trip models exactly what the wire would carry; the returned
+    gradient tree is what every replica reconstructs, so training remains
+    bit-identical across replicas.
+    """
+    if ef_state is None:
+        ef_state = init_error_feedback(grads)
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        if codec == "int8":
+            q, s = _quant_int8(gf)
+            rec = _dequant_int8(q, s)
+        elif codec == "topk":
+            rec = gf * _topk_mask(gf, topk_frac)
+        elif codec == "none":
+            rec = gf
+        else:
+            raise ValueError(codec)
+        return rec.astype(g.dtype), gf - rec
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_grads = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_ef

@@ -1,0 +1,107 @@
+"""Paper §4 algorithms: runtime execution vs single-shot numpy oracles."""
+import numpy as np
+import pytest
+
+from repro.algorithms import kmeans, knn, linreg
+from repro.algorithms.common import tree_reduce, tree_reduce_spec
+from repro.core import api
+from repro.core.simulator import MachineModel, simulate
+
+
+@pytest.fixture()
+def rt():
+    api.runtime_start(n_workers=4)
+    yield
+    api.runtime_stop(wait=False)
+
+
+def test_knn_matches_oracle(rt):
+    res = knn.run_knn(n_train=400, n_test=300, d=16, k=5, n_classes=4,
+                      train_fragments=4, test_blocks=3)
+    ref = knn.reference_knn(400, 300, 16, 5, 4, 4, 3)
+    np.testing.assert_array_equal(res.predictions, ref)
+
+
+def test_knn_merge_arity(rt):
+    r2 = knn.run_knn(n_train=300, n_test=100, d=8, k=3, train_fragments=5,
+                     merge_arity=2)
+    r3 = knn.run_knn(n_train=300, n_test=100, d=8, k=3, train_fragments=5,
+                     merge_arity=3)
+    np.testing.assert_array_equal(r2.predictions, r3.predictions)
+
+
+def test_knn_accuracy_on_separated_blobs(rt):
+    res = knn.run_knn(n_train=600, n_test=300, d=8, k=5, n_classes=3,
+                      train_fragments=3)
+    X, y = knn.knn_fill_fragment(0, 600, 8, 3)
+    assert res.predictions.shape == (300,)
+    assert set(np.unique(res.predictions)) <= {0, 1, 2}
+
+
+def test_kmeans_matches_oracle(rt):
+    res = kmeans.run_kmeans(n_points=3000, d=6, k=5, fragments=4, max_iters=7)
+    cref, itref, sseref = kmeans.reference_kmeans(3000, 6, 5, 4, 7, 1e-4)
+    assert res.iterations == itref
+    np.testing.assert_allclose(res.centroids, cref, atol=1e-8)
+    assert res.sse == pytest.approx(sseref, rel=1e-10)
+
+
+def test_kmeans_sse_monotone(rt):
+    res = kmeans.run_kmeans(n_points=4000, d=4, k=6, fragments=4, max_iters=10)
+    # WCSS is non-increasing across Lloyd iterations => shifts shrink overall
+    assert res.shifts[-1] <= res.shifts[0]
+
+
+def test_linreg_matches_oracle(rt):
+    res = linreg.run_linreg(n_rows=3000, p=20, n_pred=400, fragments=4,
+                            pred_blocks=2)
+    bref, pref = linreg.reference_linreg(3000, 20, 400, 4, 2)
+    np.testing.assert_allclose(res.beta, bref, atol=1e-8)
+    np.testing.assert_allclose(res.predictions, pref, atol=1e-8)
+
+
+def test_linreg_recovers_ground_truth(rt):
+    res = linreg.run_linreg(n_rows=8000, p=10, n_pred=100, fragments=4)
+    truth = np.random.default_rng(1234).standard_normal(11)
+    np.testing.assert_allclose(res.beta, truth, atol=0.05)
+
+
+def test_tree_reduce_plain_values():
+    assert tree_reduce(list(range(10)), lambda a, b: a + b) == 45
+    assert tree_reduce([5], lambda a, b: a + b) == 5
+    merges = tree_reduce_spec(5, arity=2)
+    assert len(merges) == 4  # n-1 merges
+
+
+@pytest.mark.parametrize("algo,calib,spec,kw", [
+    (knn, lambda: knn.calibrate(d=8, k=3, units=(200, 400)),
+     lambda c: knn.dag_spec(c, 2000, 4000, 8, 3, train_fragments=8,
+                            test_blocks=4), {}),
+    (kmeans, lambda: kmeans.calibrate(d=8, k=4, units=(500, 1000)),
+     lambda c: kmeans.dag_spec(c, 32000, 8, 4, fragments=16, iterations=2), {}),
+    (linreg, lambda: linreg.calibrate(p=16, units=(500, 1000)),
+     lambda c: linreg.dag_spec(c, 32000, 16, 4000, fragments=16,
+                               pred_blocks=4), {}),
+])
+def test_dag_specs_simulate(algo, calib, spec, kw):
+    costs = calib()
+    tasks = spec(costs)
+    r1 = simulate(tasks, MachineModel(n_nodes=1, workers_per_node=1))
+    r8 = simulate(tasks, MachineModel(n_nodes=1, workers_per_node=8))
+    assert r8.makespan <= r1.makespan + 1e-9
+    assert r1.makespan == pytest.approx(r1.total_work)
+
+
+def test_scaling_efficiency_reasonable():
+    """The DES reproduces the paper's qualitative claim: KNN weak-scales
+    with high efficiency when fragments >= workers."""
+    costs = knn.calibrate(d=8, k=3, units=(200, 400))
+    for workers in (4, 16):
+        tasks = knn.dag_spec(costs, 2000, 1000 * workers, 8, 3,
+                             train_fragments=workers, test_blocks=workers)
+        r = simulate(tasks, MachineModel(n_nodes=1, workers_per_node=workers))
+        base = knn.dag_spec(costs, 2000, 1000, 8, 3, train_fragments=workers,
+                            test_blocks=1)
+        r1 = simulate(base, MachineModel(n_nodes=1, workers_per_node=1))
+        eff = r1.makespan * 1.0 / r.makespan  # weak: T(1 unit,1w)/T(N units,Nw)
+        assert eff > 0.5, (workers, eff)

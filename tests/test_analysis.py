@@ -1,0 +1,73 @@
+"""Roofline analysis helpers: HLO collective parsing + term math."""
+import pytest
+
+from repro.distributed.analysis import (
+    Roofline,
+    active_params,
+    model_flops,
+    parse_collectives,
+)
+from repro.configs import get_config
+
+HLO_SAMPLE = """
+HloModule jit_step
+%fused (x: f32[128,256]) -> f32[128,256] {
+  ...
+}
+ENTRY %main {
+  %ag = bf16[16,4096,512]{2,1,0} all-gather(bf16[16,4096,32]{2,1,0} %p0), replica_groups={{0,1}}, dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %p1), to_apply=%add
+  %rs = f32[512,64]{1,0} reduce-scatter(f32[512,1024]{1,0} %p2), dimensions={1}
+  %cp = bf16[8,128]{1,0} collective-permute(bf16[8,128]{1,0} %p3), source_target_pairs={{0,1}}
+  %a2a = f32[64,64]{1,0} all-to-all(f32[64,64]{1,0} %p4), dimensions={0}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    st = parse_collectives(HLO_SAMPLE)
+    assert st.count == 5
+    assert set(st.by_kind) == {"all-gather", "all-reduce", "reduce-scatter",
+                               "all-to-all", "collective-permute"}
+    # all-gather result: 16*4096*512*2 bytes
+    assert st.by_kind["all-gather"] == 16 * 4096 * 512 * 2
+    # all-reduce double-counted (reduce + broadcast halves)
+    assert st.by_kind["all-reduce"] == 2 * 1024 * 1024 * 4
+    assert st.total_bytes == sum(st.by_kind.values())
+
+
+def test_parse_ignores_non_collectives():
+    st = parse_collectives("%x = f32[8,8] add(f32[8,8] %a, f32[8,8] %b)")
+    assert st.count == 0 and st.total_bytes == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(arch="x", shape="train_4k", mesh="16x16", chips=256,
+                 hlo_flops=256 * 197e12,        # exactly 1s of compute
+                 hlo_bytes=256 * 819e9 * 0.5,   # 0.5s of memory
+                 collective_bytes=256 * 50e9 * 0.25,
+                 model_flops_total=256 * 197e12 * 0.8).finalize()
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.25)
+    assert r.bottleneck == "compute"
+    assert r.useful_ratio == pytest.approx(0.8)
+
+
+def test_active_params_moe_discounts_experts():
+    dense = get_config("granite-3-2b")
+    assert active_params(dense) == pytest.approx(2.63e9, rel=0.05)
+    moe = get_config("deepseek-moe-16b")
+    total = 16.9e9
+    act = active_params(moe)
+    assert act < total * 0.3  # top-6 of 64 + shared + backbone
+    assert act > 1.5e9
+
+
+def test_model_flops_decode_counts_new_tokens_only():
+    cfg = get_config("granite-3-2b")
+    n = active_params(cfg)
+    assert model_flops(cfg, "train", 256, 4096) == pytest.approx(
+        6 * n * 256 * 4096)
+    assert model_flops(cfg, "decode", 128, 32768) == pytest.approx(
+        2 * n * 128)

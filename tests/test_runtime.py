@@ -1,0 +1,186 @@
+"""Core task-runtime semantics (the paper's §3 behaviours)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.dag import TaskState
+from repro.core.futures import TaskFailedError
+
+
+@pytest.fixture()
+def rt():
+    r = api.runtime_start(n_workers=4)
+    yield r
+    api.runtime_stop(wait=False)
+
+
+def test_fig2_add_four_numbers(rt):
+    """The paper's Fig. 2 program."""
+    add = api.task(lambda x, y: x + y, name="add")
+    r1 = add(4, 5)
+    r2 = add(6, 7)
+    r3 = add(r1, r2)
+    assert api.wait_on(r3) == 22
+
+
+def test_dependency_order_is_respected(rt):
+    log = []
+    lock = threading.Lock()
+
+    def record(tag, dep=None):
+        with lock:
+            log.append(tag)
+        return tag
+
+    t = api.task(record)
+    a = t("a")
+    b = t("b", a)
+    c = t("c", b)
+    api.wait_on(c)
+    assert log.index("a") < log.index("b") < log.index("c")
+
+
+def test_wide_fanout_barrier(rt):
+    t = api.task(lambda i: i * i, name="sq")
+    futs = [t(i) for i in range(50)]
+    api.barrier()
+    assert all(f.done() for f in futs)
+    assert api.wait_on(futs) == [i * i for i in range(50)]
+
+
+def test_nested_future_args(rt):
+    t = api.task(lambda xs: sum(xs["vals"]), name="sum")
+    mk = api.task(lambda i: i, name="mk")
+    futs = {"vals": [mk(i) for i in range(5)]}
+    assert api.wait_on(t(futs)) == 10
+
+
+def test_retry_then_success(rt):
+    state = {"n": 0}
+
+    def flaky(x):
+        state["n"] += 1
+        if state["n"] < 3:
+            raise ValueError("transient")
+        return x
+
+    f = api.task(flaky, max_retries=5)(42)
+    assert api.wait_on(f) == 42
+    assert state["n"] == 3
+
+
+def test_permanent_failure_propagates(rt):
+    def boom():
+        raise RuntimeError("dead")
+
+    add = api.task(lambda x, y: x + y, name="add")
+    g = api.task(boom)()
+    h = add(g, 1)
+    i = add(h, 1)  # transitive dependent
+    with pytest.raises(TaskFailedError):
+        api.wait_on(i)
+    api.barrier()  # must not hang
+    states = {n.name: n.state for n in api.current_runtime().graph.nodes()}
+    assert states["boom"] == TaskState.FAILED
+
+
+def test_multiple_returns(rt):
+    t = api.task(lambda x: (x + 1, x - 1), returns=2, name="pm")
+    hi, lo = t(10)
+    assert api.wait_on(hi) == 11 and api.wait_on(lo) == 9
+
+
+def test_inout_versioning():
+    """COMPSs renaming: an INOUT arg gets a new dXvY version."""
+    rt = api.runtime_start(n_workers=2)
+    try:
+        mk = api.task(lambda: np.zeros(3), name="mk")
+        buf = mk()
+        v1 = buf.version
+
+        def bump(x):
+            return x + 1
+
+        rt.submit(bump, (buf,), name="bump", returns=0, inout=[buf])
+        assert buf.version == v1 + 1
+        out = api.wait_on(buf)
+        np.testing.assert_array_equal(out, np.ones(3))
+    finally:
+        api.runtime_stop()
+
+
+def test_numpy_payloads_and_locality_policy():
+    rt = api.runtime_start(n_workers=4, workers_per_node=2, policy="locality")
+    try:
+        gen = api.task(lambda n: np.arange(n, dtype=np.float64), name="gen")
+        s = api.task(lambda a, b: float(np.sum(a) + np.sum(b)), name="s")
+        parts = [gen(100) for _ in range(8)]
+        outs = [s(parts[i], parts[(i + 1) % 8]) for i in range(8)]
+        total = sum(api.wait_on(outs))
+        assert total == pytest.approx(2 * 8 * (99 * 100 / 2))
+    finally:
+        api.runtime_stop()
+
+
+def test_worksteal_policy_completes():
+    api.runtime_start(n_workers=4, policy="worksteal")
+    try:
+        t = api.task(lambda i: i, name="id")
+        assert sorted(api.wait_on([t(i) for i in range(40)])) == list(range(40))
+    finally:
+        api.runtime_stop()
+
+
+def test_speculation_duplicates_straggler():
+    api.runtime_start(n_workers=4, speculation=True, speculation_factor=2.0)
+    try:
+        calls = []
+
+        def work(i, delay):
+            calls.append(i)
+            time.sleep(delay)
+            return i
+
+        t = api.task(work, name="work")
+        futs = [t(i, 0.02) for i in range(6)]
+        straggler = t(99, 1.0)  # way beyond 2x median
+        assert api.wait_on(straggler) == 99
+        api.barrier()
+        stats = api.current_runtime().stats()
+        assert stats["speculative"] >= 1
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_dot_export_matches_paper_dag(rt):
+    add = api.task(lambda x, y: x + y, name="add")
+    r1, r2 = add(1, 2), add(3, 4)
+    r3 = add(r1, r2)
+    api.wait_on(r3)
+    dot = api.current_runtime().graph.to_dot()
+    assert "main" in dot and "sync" in dot
+    assert dot.count("add") >= 3
+    assert "d" in dot and "v" in dot  # dXvY edge labels
+
+
+def test_tracer_utilization_and_gantt(rt):
+    t = api.task(lambda: time.sleep(0.01), name="sleep")
+    for _ in range(8):
+        t()
+    api.barrier()
+    tr = api.current_runtime().tracer
+    assert 0.0 < tr.utilization(4) <= 1.0
+    g = tr.ascii_gantt(width=40)
+    assert "w00" in g
+    prv = tr.to_prv()
+    assert prv.startswith("#Paraver")
+
+
+def test_barrier_timeout(rt):
+    t = api.task(lambda: time.sleep(1.0), name="slow", speculatable=False)
+    t()
+    with pytest.raises(TimeoutError):
+        api.barrier(timeout=0.05)

@@ -1,0 +1,59 @@
+"""Serialization codecs (paper §3.3.3 / Table 1 methodology)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.serialization import (
+    CODECS,
+    MmapCodec,
+    benchmark_codecs,
+    deserialize,
+    serialize,
+)
+
+DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.float16]
+
+
+@pytest.mark.parametrize("codec", ["pickle", "npy", "raw"])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_roundtrip_array(codec, dtype):
+    arr = (np.random.standard_normal((7, 13)) * 10).astype(dtype)
+    out = deserialize(serialize(arr, codec), codec)
+    np.testing.assert_array_equal(np.asarray(out), arr)
+
+
+@pytest.mark.parametrize("codec", ["pickle", "npy", "raw"])
+def test_roundtrip_non_array_falls_back(codec):
+    obj = {"a": [1, 2, 3], "b": "hello"}
+    assert deserialize(serialize(obj, codec), codec) == obj
+
+
+def test_mmap_codec_zero_copy(tmp_path):
+    arr = np.random.standard_normal((64, 64))
+    mc = MmapCodec()
+    p = str(tmp_path / "x.rjx")
+    mc.ser_to_file(arr, p)
+    view = mc.de_from_file(p)
+    assert isinstance(view, np.memmap)
+    np.testing.assert_array_equal(np.asarray(view), arr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 8), min_size=1, max_size=3),
+    dtype=st.sampled_from(["f4", "f8", "i4", "i8", "u1"]),
+)
+def test_raw_codec_roundtrip_property(shape, dtype):
+    arr = np.random.standard_normal(tuple(shape)).astype(np.dtype(dtype))
+    out = deserialize(serialize(arr, "raw"), "raw")
+    np.testing.assert_array_equal(np.asarray(out), arr)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+
+
+def test_benchmark_codecs_table1_shape():
+    res = benchmark_codecs(sizes=(64, 128), repeats=1)
+    assert set(res) >= {"pickle", "npy", "raw", "mmap"}
+    for codec, per_size in res.items():
+        for size, (s, d) in per_size.items():
+            assert s >= 0 and d >= 0

@@ -1,0 +1,105 @@
+"""Discrete-event simulator properties (Graham bounds etc.)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.simulator import CostModel, MachineModel, SimTask, simulate
+
+
+def random_dag(draw, n):
+    tasks = []
+    for i in range(n):
+        max_deps = min(i, 3)
+        k = draw(st.integers(0, max_deps))
+        deps = tuple(sorted(set(
+            draw(st.integers(0, i - 1)) for _ in range(k)))) if i else ()
+        dur = draw(st.floats(0.01, 1.0))
+        tasks.append(SimTask(i, f"t{i % 3}", dur, deps))
+    return tasks
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data(), n=st.integers(1, 30), workers=st.integers(1, 8))
+def test_graham_bounds(data, n, workers):
+    """For zero-overhead machines: max(T1/P, Tinf) <= T_P <= T1/P + Tinf."""
+    tasks = random_dag(data.draw, n)
+    m = MachineModel(n_nodes=1, workers_per_node=workers,
+                     ser_Bps=None, dispatch_overhead_s=0.0)
+    r = simulate(tasks, m)
+    t1 = r.total_work
+    tinf = r.critical_path
+    assert r.makespan >= max(t1 / workers, tinf) - 1e-9
+    assert r.makespan <= t1 / workers + tinf + 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data(), n=st.integers(2, 25))
+def test_single_worker_equals_total_work(data, n):
+    tasks = random_dag(data.draw, n)
+    m = MachineModel(n_nodes=1, workers_per_node=1, dispatch_overhead_s=0.0)
+    r = simulate(tasks, m)
+    assert r.makespan == pytest.approx(r.total_work)
+
+
+def test_transfer_costs_increase_makespan():
+    tasks = [SimTask(0, "a", 0.1, (), out_bytes=10**8),
+             SimTask(1, "b", 0.1, (0,), out_bytes=10**8)]
+    free = simulate(tasks, MachineModel(n_nodes=1, workers_per_node=2))
+    # force cross-node: 2 nodes, 1 worker each; fifo puts b on the idle node
+    costly = simulate(tasks, MachineModel(n_nodes=2, workers_per_node=1,
+                                          bandwidth_Bps=1e9, ser_Bps=None))
+    assert costly.makespan >= free.makespan
+
+def test_locality_policy_avoids_transfers():
+    # chain of tasks each producing big outputs: locality scheduling should
+    # keep the chain on one node
+    tasks = []
+    for i in range(8):
+        deps = (i - 1,) if i else ()
+        tasks.append(SimTask(i, "chain", 0.05, deps, out_bytes=10**9))
+    m = MachineModel(n_nodes=2, workers_per_node=1, bandwidth_Bps=1e9,
+                     ser_Bps=None)
+    r_fifo = simulate(tasks, m, policy="fifo")
+    r_loc = simulate(tasks, m, policy="locality")
+    assert r_loc.transfer_total <= r_fifo.transfer_total + 1e-9
+
+
+def test_dispatch_overhead_serializes_launch():
+    tasks = [SimTask(i, "x", 0.01, ()) for i in range(64)]
+    m0 = MachineModel(n_nodes=1, workers_per_node=64, dispatch_overhead_s=0.0)
+    m1 = MachineModel(n_nodes=1, workers_per_node=64, dispatch_overhead_s=0.01)
+    assert simulate(tasks, m1).makespan > simulate(tasks, m0).makespan * 5
+
+
+def test_cost_model_fit():
+    cm = CostModel.fit([(100, 1.0), (200, 2.0), (300, 3.0)])
+    assert cm(400) == pytest.approx(4.0, rel=1e-6)
+    cm2 = CostModel.fit([(10, 0.5)])
+    assert cm2(20) == pytest.approx(1.0)
+
+
+def test_replay_graph_from_real_run():
+    from repro.core import api
+    from repro.core.simulator import replay_graph
+
+    api.runtime_start(n_workers=2)
+    try:
+        t = api.task(lambda x: x + 1, name="inc")
+        a = t(1)
+        b = t(a)
+        api.wait_on(b)
+        sims = replay_graph(api.current_runtime().graph)
+        assert len(sims) == 2
+        deps = [s.deps for s in sorted(sims, key=lambda s: s.tid)]
+        assert deps[0] == () and len(deps[1]) == 1
+        r = simulate(sims, MachineModel())
+        assert r.makespan > 0
+    finally:
+        api.runtime_stop()
+
+
+def test_cycle_detection():
+    tasks = [SimTask(0, "a", 0.1, (1,)), SimTask(1, "b", 0.1, (0,))]
+    with pytest.raises(Exception):
+        simulate(tasks, MachineModel())
