@@ -1,5 +1,5 @@
 """Paper Figs. 6 & 7: single-node weak/strong scaling of KNN, K-means,
-linear regression.
+linear regression — plus a *live* executor-backend axis.
 
 Methodology (DESIGN.md §8): per-task cost models are calibrated by timing
 the *real* task functions on this machine, then the *same DAGs* the runtime
@@ -7,14 +7,24 @@ builds are replayed through the discrete-event simulator over 1..128 virtual
 workers with a Shaheen-like machine model (per-task master dispatch overhead
 is what produces the paper's roll-off at high core counts).
 
+The ``--backend`` axis (DESIGN.md §11) measures *real* strong scaling of a
+CPU-bound pure-Python task through the runtime, thread vs process
+executors: threads serialize on the GIL, persistent worker processes
+reproduce the paper's per-node worker parallelism.  Run e.g.::
+
+    PYTHONPATH=src python benchmarks/scaling_single_node.py --backend both
+
 Validation targets from the paper (§5.2): KNN weak efficiency > 70% at 128
 cores, K-means > 60%; linreg declines with dependency depth (~41% at 128).
 """
 from __future__ import annotations
 
+import argparse
+import time
 from typing import Callable, Dict, List, Tuple
 
 from repro.algorithms import kmeans, knn, linreg
+from repro.core.runtime import Runtime
 from repro.core.simulator import MachineModel, simulate
 
 CORES = (1, 2, 4, 8, 16, 32, 64, 128)
@@ -83,6 +93,62 @@ def scaling_table(mode: str, dag_fn: Callable, cores=CORES) -> Dict[int, float]:
     return eff
 
 
+# --------------------------------------------------- live backend axis (§11)
+def _spin(units: int) -> int:
+    """CPU-bound pure-Python work: never releases the GIL, so thread
+    workers serialize on it while process workers run truly parallel."""
+    acc = 0
+    for i in range(units * 10_000):
+        acc += (i * i) ^ (acc >> 3)
+    return acc
+
+
+def measure_backend(backend: str, n_workers: int, n_tasks: int = 32,
+                    units: int = 10) -> float:
+    """Wall-seconds to drain ``n_tasks`` CPU-bound tasks on the real
+    runtime (startup/shutdown excluded — the paper's persistent workers
+    amortize those over the application)."""
+    rt = Runtime(n_workers=n_workers, backend=backend, tracing=False)
+    try:
+        rt.wait_on(rt.submit(_spin, (1,), name="warmup"))  # ship code once
+        t0 = time.perf_counter()
+        for _ in range(n_tasks):
+            rt.submit(_spin, (units,), name="spin")
+        rt.barrier()
+        return time.perf_counter() - t0
+    finally:
+        rt.stop(wait=False)
+
+
+def run_backend_axis(backends=("thread", "process"), cores=(1, 2, 4, 8),
+                     n_tasks: int = 32, units: int = 10
+                     ) -> List[Tuple[str, float, str]]:
+    print("# executor-backend strong scaling — CPU-bound pure-Python task")
+    print(f"{n_tasks} tasks, {units * 10_000} loop iterations each")
+    rows: List[Tuple[str, float, str]] = []
+    walls: Dict[Tuple[str, int], float] = {}
+    print("backend " + "".join(f"{n:>9d}" for n in cores))
+    for backend in backends:
+        line = f"{backend:8s}"
+        for n in cores:
+            wall = measure_backend(backend, n, n_tasks=n_tasks, units=units)
+            walls[(backend, n)] = wall
+            line += f"{wall:8.2f}s"
+            rows.append((f"scaling/backend/{backend}@{n}",
+                         wall / n_tasks * 1e6, f"wall={wall:.3f}s"))
+        print(line)
+    if set(backends) >= {"thread", "process"}:
+        for n in cores:
+            sp = walls[("thread", n)] / max(walls[("process", n)], 1e-9)
+            rows.append((f"scaling/backend/process_speedup@{n}", 0.0,
+                         f"speedup={sp:.2f}x"))
+        top = cores[-1]
+        sp = walls[("thread", top)] / max(walls[("process", top)], 1e-9)
+        print(f"\nprocess-vs-thread speedup @ {top} workers: {sp:.2f}x "
+              f"(CPU-bound pure-Python; GIL holds threads at ~1 core)")
+    return rows
+
+
 def run() -> List[Tuple[str, float, str]]:
     print("# Figs. 6/7 analogue — single-node weak/strong scaling efficiency")
     print("calibrating task cost models on this machine ...")
@@ -120,5 +186,32 @@ def run() -> List[Tuple[str, float, str]]:
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="sim",
+                    choices=("sim", "thread", "process", "both"),
+                    help="'sim' replays calibrated DAGs through the "
+                         "discrete-event simulator (paper Figs. 6/7); "
+                         "'thread'/'process'/'both' measure real strong "
+                         "scaling of the executor backends")
+    ap.add_argument("--workers", default="1,2,4,8",
+                    help="comma list of worker counts for the backend axis")
+    ap.add_argument("--tasks", type=int, default=32)
+    ap.add_argument("--units", type=int, default=10,
+                    help="per-task CPU work, in 10k-iteration units")
+    args = ap.parse_args()
+    if args.backend == "sim":
+        run()
+        return
+    backends = ("thread", "process") if args.backend == "both" else (args.backend,)
+    cores = tuple(int(c) for c in args.workers.split(","))
+    rows = run_backend_axis(backends, cores, n_tasks=args.tasks,
+                            units=args.units)
+    print("\n# CSV summary")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
 if __name__ == "__main__":
-    run()
+    main()

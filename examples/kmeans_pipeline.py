@@ -3,8 +3,14 @@ workflow end to end: sequential-style program, automatic DAG, locality
 scheduling, Extrae-style trace, and a replay of the measured DAG on a
 virtual 64-worker machine to project scaling.
 
-Run:  PYTHONPATH=src python examples/kmeans_pipeline.py
+Run:  PYTHONPATH=src python examples/kmeans_pipeline.py [--backend process]
+
+With ``--backend process`` the fragment tasks execute on persistent worker
+processes; the point fragments travel through the shared-memory object
+plane once and are re-read zero-copy on every iteration (DESIGN.md §11).
 """
+import sys
+
 import numpy as np
 
 from repro.algorithms import kmeans
@@ -13,7 +19,9 @@ from repro.core.simulator import MachineModel, replay_graph, simulate
 
 
 def main() -> None:
-    api.runtime_start(n_workers=4, policy="locality", tracing=True)
+    backend = "process" if "process" in sys.argv else "thread"
+    api.runtime_start(n_workers=4, policy="locality", tracing=True,
+                      backend=backend)
     try:
         res = kmeans.run_kmeans(n_points=60_000, d=16, k=8, fragments=8,
                                 max_iters=6)

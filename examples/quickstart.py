@@ -4,8 +4,14 @@ Four numbers are summed through three asynchronous ``add`` tasks; the
 runtime discovers the dependency DAG (main -> {1,2} -> 3 -> sync) and
 prints it in Graphviz form, exactly like ``runcompss --lang=r -g job.R``.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--backend process]
+
+``--backend process`` runs the same program on persistent worker
+*processes* behind the shared-memory object plane (the paper's per-node
+worker model) — the user program does not change at all.
 """
+import sys
+
 from repro.core import api
 
 
@@ -14,7 +20,9 @@ def add(x, y):
 
 
 def main() -> None:
-    api.runtime_start(n_workers=4)           # compss_start()
+    backend = "process" if "--backend" in sys.argv and "process" in sys.argv \
+        else "thread"
+    api.runtime_start(n_workers=4, backend=backend)   # compss_start()
     add_t = api.task(add)                    # task(add, ...)
 
     a, b, c, d = 4, 5, 6, 7

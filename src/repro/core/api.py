@@ -49,8 +49,15 @@ def runtime_start(
     max_retries: int = 0,
     speculation: bool = False,
     speculation_factor: float = 3.0,
+    backend: str = "thread",
 ) -> Runtime:
-    """Initialize the global runtime (``compss_start``)."""
+    """Initialize the global runtime (``compss_start``).
+
+    ``backend`` selects the executor model (see
+    :mod:`repro.core.executors`): ``"thread"`` runs task bodies on the
+    dispatcher threads in this address space; ``"process"`` runs them in
+    persistent worker processes behind a shared-memory object plane (the
+    paper's per-node worker architecture, §3.3.2)."""
     global _runtime
     with _lock:
         if _runtime is not None and not _runtime._stopped:
@@ -62,6 +69,7 @@ def runtime_start(
             tracing=tracing,
             retry=RetryPolicy(max_retries=max_retries),
             speculation=SpeculationConfig(enabled=speculation, factor=speculation_factor),
+            backend=backend,
         )
         return _runtime
 

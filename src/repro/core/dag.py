@@ -86,7 +86,16 @@ class TaskGraph:
                 producer = self._producers.get(key)
                 if producer is not None:
                     p = self._nodes.get(producer)
-                    if p is not None and p.state not in (TaskState.DONE,):
+                    # FAILED producers already published their error and
+                    # released children: counting them as unresolved would
+                    # block this task forever — let it run and fail fast on
+                    # the poisoned input instead
+                    # dedup by producer: a child reading two outputs of the
+                    # same task gets released once, so it must only count
+                    # one unresolved edge
+                    if p is not None and p.state not in (TaskState.DONE,
+                                                         TaskState.FAILED) \
+                            and producer not in node.parents:
                         node.parents.add(producer)
                         p.children.add(node.task_id)
                         unresolved += 1

@@ -1,0 +1,686 @@
+"""Pluggable executor backends (paper §3.3.2: persistent per-node workers).
+
+The runtime's dispatch loop is backend-agnostic: one dispatcher thread per
+worker pulls ready tasks from the :class:`~repro.core.scheduler.Scheduler`
+and asks the executor backend to *invoke* the task function.  Backends
+differ only in **where** the function body runs:
+
+* ``"thread"``   — in the dispatcher thread itself (the original model:
+                   shared address space, values passed by reference; great
+                   for NumPy/JAX tasks that release the GIL).
+* ``"process"``  — in one of N *persistent* worker processes forked at
+                   runtime start (the paper's worker model: Python-level
+                   task bodies run truly in parallel, unconstrained by the
+                   GIL).  Task parameters and results cross the
+                   address-space boundary through a shared-memory object
+                   plane built on the ``raw`` codec from
+                   :mod:`repro.core.serialization`: an ndarray is written
+                   once into a ``multiprocessing.shared_memory`` segment
+                   laid out exactly like a ``raw``-codec blob (packed
+                   header + contiguous buffer), and every worker that later
+                   reads the same ``(data_id, version)`` reconstructs a
+                   zero-copy view from its per-process segment cache — the
+                   RMVL memory-mapped-deserialization property the paper
+                   credits in §3.3.3 / Table 1.  Non-array values fall back
+                   to pickle, and task functions stdlib pickle cannot ship
+                   (lambdas, closures) go through cloudpickle with a
+                   per-worker code cache so each function body crosses the
+                   pipe at most once.
+
+Semantics that differ under ``"process"`` (DESIGN.md §11):
+
+* task bodies observe *read-only* views of plane-resident ndarray inputs —
+  in-place mutation raises instead of silently corrupting the shared copy
+  (mutation is expressed through INOUT parameters, which produce a new
+  datum version);
+* closure state mutated inside a task body stays in the worker process —
+  side-channel communication through captured Python objects does not
+  propagate back to the submitting process.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+from multiprocessing import get_context
+from multiprocessing import shared_memory as _shm_mod
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .serialization import _pack_header, _unpack_header
+
+try:  # optional, but present in the baked image; required for lambda tasks
+    import cloudpickle as _cloudpickle
+except Exception:  # pragma: no cover - cloudpickle is available in CI
+    _cloudpickle = None
+
+# ndarrays at or above this size ride the shared-memory plane; smaller ones
+# are cheaper to pickle straight through the pipe.
+SHM_MIN_BYTES = int(os.environ.get("RJAX_SHM_MIN_BYTES", 16384))
+_MP_CONTEXT = os.environ.get("RJAX_MP_CONTEXT", "fork")
+# serialized-function cache entries kept per side (parent and each worker);
+# oldest entries are evicted so apps creating task wrappers in a loop don't
+# leak closures
+_FN_CACHE_MAX = int(os.environ.get("RJAX_FN_CACHE_MAX", 512))
+
+
+class WorkerCrashedError(RuntimeError):
+    """A worker process died mid-task (segfault/OOM-kill).  Retryable."""
+
+
+class RemoteTaskError(RuntimeError):
+    """A worker-side exception that could not be unpickled; carries the
+    original type name and traceback text."""
+
+    def __init__(self, type_name: str, message: str, traceback_text: str = ""):
+        super().__init__(f"{type_name}: {message}")
+        self.type_name = type_name
+        self.traceback_text = traceback_text
+
+
+def _walk(obj: Any, fn: Callable[[Any], Any], leaf_types: tuple) -> Any:
+    """Structure-preserving map over lists/tuples/dicts applying ``fn`` to
+    leaves of ``leaf_types`` (mirrors runtime._walk, typed)."""
+    if isinstance(obj, leaf_types):
+        return fn(obj)
+    if isinstance(obj, (list, tuple)):
+        mapped = [_walk(o, fn, leaf_types) for o in obj]
+        if isinstance(obj, tuple):
+            return type(obj)(*mapped) if hasattr(obj, "_fields") else tuple(mapped)
+        return mapped
+    if isinstance(obj, dict):
+        return {k: _walk(v, fn, leaf_types) for k, v in obj.items()}
+    return obj
+
+
+def _dispose_segment(seg: _shm_mod.SharedMemory, unlink: bool) -> None:
+    """Release a segment, tolerating live numpy views.
+
+    Store values handed to user code are zero-copy views into the mapping;
+    if any are still referenced, ``close`` raises BufferError.  The mapping
+    then simply lives until those views are collected — we unlink the name
+    (freeing it immediately) and disarm the object so interpreter exit does
+    not spray "cannot close exported pointers exist" tracebacks."""
+    if unlink:
+        try:
+            seg.unlink()
+        except Exception:
+            pass
+    try:
+        seg.close()
+    except BufferError:
+        seg._buf = None       # type: ignore[attr-defined]
+        seg._mmap = None      # type: ignore[attr-defined]
+        try:
+            fd = getattr(seg, "_fd", -1)
+            if fd >= 0:
+                os.close(fd)
+                seg._fd = -1  # type: ignore[attr-defined]
+        except Exception:
+            pass
+    except Exception:
+        pass
+
+
+# Resource-tracker accounting: workers — forked AND spawned — inherit the
+# parent's tracker over an fd, so there is exactly ONE tracker per runtime.
+# Its name-set is idempotent under re-registration (create in a worker,
+# attach in the parent, attach in other workers all collapse to one entry)
+# and the explicit `unlink` in SegmentPlane.close/evict unregisters it.
+# Nobody must ever call resource_tracker.unregister manually: that strips
+# the single shared entry and turns the later unlink into tracker noise,
+# while also losing the crash safety-net (tracker unlinks leftovers if the
+# parent dies without cleanup).
+
+
+class ShmRef:
+    """Picklable handle to one ndarray in the shared-memory plane.
+
+    The segment holds exactly a ``raw``-codec blob body: the packed header
+    travels in the ref, the buffer lives in the segment, so decoding is
+    ``_unpack_header`` + ``np.frombuffer`` — zero copies."""
+
+    __slots__ = ("name", "header", "nbytes", "key")
+
+    def __init__(self, name: str, header: bytes, nbytes: int,
+                 key: Optional[Tuple[int, int]] = None):
+        self.name = name
+        self.header = header
+        self.nbytes = nbytes
+        self.key = key
+
+    def __getstate__(self):
+        return (self.name, self.header, self.nbytes, self.key)
+
+    def __setstate__(self, state):
+        self.name, self.header, self.nbytes, self.key = state
+
+
+def _array_to_segment(arr: np.ndarray) -> Tuple[_shm_mod.SharedMemory, ShmRef]:
+    arr = np.ascontiguousarray(arr)
+    header = _pack_header(arr)
+    seg = _shm_mod.SharedMemory(create=True, size=max(1, arr.nbytes))
+    if arr.nbytes:
+        np.frombuffer(seg.buf, dtype=arr.dtype, count=arr.size)[...] = arr.reshape(-1)
+    return seg, ShmRef(seg.name, header, arr.nbytes)
+
+
+def _segment_to_array(seg: _shm_mod.SharedMemory, ref: ShmRef) -> np.ndarray:
+    dtype, shape, _ = _unpack_header(memoryview(ref.header))
+    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    arr = np.frombuffer(seg.buf, dtype=dtype, count=count).reshape(shape)
+    arr.flags.writeable = False
+    return arr
+
+
+def _shm_eligible(arr: np.ndarray) -> bool:
+    if arr.nbytes < SHM_MIN_BYTES or arr.dtype.hasobject:
+        return False
+    try:
+        _pack_header(arr)
+        return True
+    except TypeError:  # dtype outside the raw-codec table
+        return False
+
+
+class SegmentPlane:
+    """Parent-side registry of shared-memory segments keyed by the datum
+    key ``(data_id, version)`` (plus anonymous result segments).  One datum
+    is copied into the plane at most once no matter how many workers read
+    it; the per-worker segment caches then make repeated reads zero-copy."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._by_key: Dict[Tuple[int, int], Tuple[_shm_mod.SharedMemory, ShmRef]] = {}
+        self._anon: Dict[str, _shm_mod.SharedMemory] = {}
+        self._by_name: Dict[str, _shm_mod.SharedMemory] = {}  # every live segment
+        self.bytes_planed = 0      # bytes copied into the plane (once per datum)
+        self.refs_shipped = 0      # ShmRefs sent over pipes (dedup wins show here)
+
+    def ensure(self, key: Tuple[int, int], arr: np.ndarray) -> ShmRef:
+        with self._lock:
+            if key in self._by_key:
+                self.refs_shipped += 1
+                return self._by_key[key][1]
+        seg, ref = _array_to_segment(arr)
+        ref.key = key
+        with self._lock:
+            dup = self._by_key.get(key)
+            if dup is not None:  # lost a publish race: keep the first
+                _dispose_segment(seg, unlink=True)
+                self.refs_shipped += 1
+                return dup[1]
+            self._by_key[key] = (seg, ref)
+            self._by_name[ref.name] = seg
+            self.bytes_planed += ref.nbytes
+            self.refs_shipped += 1
+        return ref
+
+    def attach(self, ref: ShmRef) -> Tuple[np.ndarray, bool]:
+        """View a worker-shipped segment.  Returns ``(array, fresh)`` —
+        ``fresh`` is False when the segment is already plane-resident (a
+        pass-through result reshipping a ref the parent owns)."""
+        with self._lock:
+            seg = self._by_name.get(ref.name)
+            if seg is not None:
+                return _segment_to_array(seg, ref), False
+        seg = _shm_mod.SharedMemory(name=ref.name)
+        with self._lock:
+            raced = self._by_name.get(ref.name)
+            if raced is not None:
+                _dispose_segment(seg, unlink=False)
+                return _segment_to_array(raced, ref), False
+            self._anon[ref.name] = seg
+            self._by_name[ref.name] = seg
+            self.bytes_planed += ref.nbytes
+        return _segment_to_array(seg, ref), True
+
+    def alias(self, key: Tuple[int, int], ref: ShmRef) -> None:
+        """Promote an adopted (anonymous) result segment to a datum key so
+        later ships of the same datum reuse it instead of re-copying."""
+        with self._lock:
+            seg = self._anon.pop(ref.name, None)
+            if seg is None:
+                return
+            if key in self._by_key:
+                self._anon[ref.name] = seg  # keep ownership; key already bound
+                return
+            self._by_key[key] = (seg, ShmRef(ref.name, ref.header, ref.nbytes, key))
+
+    def evict(self, key: Tuple[int, int]) -> None:
+        with self._lock:
+            item = self._by_key.pop(key, None)
+            if item is not None:
+                self._by_name.pop(item[0].name, None)
+        if item is not None:
+            _dispose_segment(item[0], unlink=True)
+
+    def drop_anonymous(self, name: str) -> None:
+        """Reclaim an adopted-but-never-published result segment."""
+        with self._lock:
+            seg = self._anon.pop(name, None)
+            if seg is not None:
+                self._by_name.pop(name, None)
+        if seg is not None:
+            _dispose_segment(seg, unlink=True)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "segments": len(self._by_key) + len(self._anon),
+                "bytes_planed": self.bytes_planed,
+                "refs_shipped": self.refs_shipped,
+            }
+
+    def close(self) -> None:
+        with self._lock:
+            segs = [s for s, _ in self._by_key.values()] + list(self._anon.values())
+            self._by_key.clear()
+            self._anon.clear()
+            self._by_name.clear()
+        for seg in segs:
+            _dispose_segment(seg, unlink=True)
+
+
+# --------------------------------------------------------------- worker side
+class _WorkerSegmentCache:
+    """Per-process cache: segment name -> (shm, zero-copy array view)."""
+
+    def __init__(self):
+        self._cache: Dict[str, Tuple[_shm_mod.SharedMemory, np.ndarray]] = {}
+        self._refs: Dict[int, ShmRef] = {}   # id(view) -> its ref
+        self.hits = 0
+        self.attaches = 0
+
+    def get(self, ref: ShmRef) -> np.ndarray:
+        hit = self._cache.get(ref.name)
+        if hit is not None:
+            self.hits += 1
+            return hit[1]
+        seg = _shm_mod.SharedMemory(name=ref.name)
+        arr = _segment_to_array(seg, ref)
+        self._cache[ref.name] = (seg, arr)
+        self._refs[id(arr)] = ref
+        self.attaches += 1
+        return arr
+
+    def ref_for(self, arr: np.ndarray) -> Optional[ShmRef]:
+        """The ref of ``arr`` if it IS a cached plane view (identity, not
+        a slice) — lets pass-through results reship instead of re-copy."""
+        ref = self._refs.get(id(arr))
+        if ref is not None:
+            cached = self._cache.get(ref.name)
+            if cached is not None and cached[1] is arr:
+                return ref
+        return None
+
+    def close(self) -> None:
+        for seg, _ in self._cache.values():
+            _dispose_segment(seg, unlink=False)
+        self._cache.clear()
+
+
+def _loads_fn(blob: bytes) -> Callable:
+    tag, body = blob[:1], blob[1:]
+    if tag == b"P":
+        return pickle.loads(body)
+    if tag == b"C":
+        if _cloudpickle is None:
+            raise RuntimeError("cloudpickle unavailable in worker")
+        return _cloudpickle.loads(body)
+    raise RuntimeError("function body missing from worker cache")
+
+
+def _encode_result(result: Any, cache: "_WorkerSegmentCache"
+                   ) -> Tuple[bytes, List[_shm_mod.SharedMemory]]:
+    created: List[_shm_mod.SharedMemory] = []
+
+    def enc(arr: np.ndarray):
+        passthrough = cache.ref_for(arr)
+        if passthrough is not None:   # identity result: reship, don't re-copy
+            return passthrough
+        if not _shm_eligible(arr):
+            return arr
+        seg, ref = _array_to_segment(arr)   # parent takes ownership on adopt()
+        created.append(seg)
+        return ref
+
+    structure = _walk(result, enc, (np.ndarray,))
+    try:
+        return pickle.dumps(structure, protocol=5), created
+    except Exception:
+        if _cloudpickle is None:
+            raise
+        return _cloudpickle.dumps(structure), created
+
+
+def _worker_main(conn, worker_index: int) -> None:
+    """Persistent worker loop: one process, many tasks (§3.3.2)."""
+    cache = _WorkerSegmentCache()
+    fns: Dict[int, Callable] = {}
+    try:
+        while True:
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                break
+            if msg[0] == "exit":
+                break
+            if msg[0] == "stats":
+                conn.send(("stats", {"segment_hits": cache.hits,
+                                     "segment_attaches": cache.attaches,
+                                     "fns_cached": len(fns)}))
+                continue
+            _, fn_token, fn_blob, payload = msg
+            try:
+                fn = fns.get(fn_token)
+                if fn is None:
+                    fn = _loads_fn(fn_blob)
+                    fns[fn_token] = fn
+                    while len(fns) > _FN_CACHE_MAX:
+                        fns.pop(min(fns))   # tokens are monotonic: min = oldest
+                args, kwargs = _walk(pickle.loads(payload), cache.get, (ShmRef,))
+                result = fn(*args, **kwargs)
+                blob, created = _encode_result(result, cache)
+                conn.send(("ok", blob))
+                for seg in created:  # parent adopts; drop our handles
+                    seg.close()
+            except BaseException as err:  # noqa: BLE001 - ships to parent
+                import traceback
+                tb = traceback.format_exc()
+                try:
+                    conn.send(("err", pickle.dumps(err, protocol=5), tb))
+                except Exception:
+                    conn.send(("err", None,
+                               f"{type(err).__name__}|{err}|{tb}"))
+    finally:
+        cache.close()
+        try:
+            conn.close()
+        except Exception:
+            pass
+
+
+# ------------------------------------------------------------------ backends
+class ExecutorBackend:
+    """Owns the persistent workers and the dispatch loop threads."""
+
+    name = "base"
+
+    def __init__(self, n_workers: int, label: str = "rjax"):
+        self.n_workers = int(n_workers)
+        self.label = label
+        self.runtime = None
+        self._threads: List[threading.Thread] = []
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self, runtime) -> None:
+        self.runtime = runtime
+        for w in range(self.n_workers):
+            t = threading.Thread(target=self._dispatch_loop, args=(w,),
+                                 daemon=True, name=f"{self.label}-w{w}")
+            t.start()
+            self._threads.append(t)
+
+    def _dispatch_loop(self, worker: int) -> None:
+        rt = self.runtime
+        node_id = rt.locality_domain(worker)
+        while True:
+            tid = rt.scheduler.take(worker)
+            if tid is None:
+                return
+            rt._note_worker_busy()
+            try:
+                rt._execute(tid, worker, node_id)
+            finally:
+                rt._note_worker_idle()
+                self.task_done()   # reclaim unpublished result segments
+
+    def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
+        for t in self._threads:
+            t.join(timeout=timeout if wait else 0.2)
+
+    # -- invocation ----------------------------------------------------------
+    def invoke(self, worker: int, fn: Callable, args: tuple, kwargs: dict,
+               input_keys: Optional[Dict[int, Tuple[int, int]]] = None) -> Any:
+        """Run ``fn(*args, **kwargs)`` on ``worker`` and return the result.
+        ``input_keys`` maps ``id(value) -> (data_id, version)`` for inputs
+        resolved from the object store (lets the plane dedup by datum)."""
+        raise NotImplementedError
+
+    def publish(self, key: Tuple[int, int], value: Any) -> None:
+        """Hook: ``value`` was published to the store under ``key``."""
+
+    def task_done(self) -> None:
+        """Hook: the current dispatcher thread finished a task's
+        completion path (success or failure)."""
+
+    def stats(self) -> dict:
+        return {"backend": self.name}
+
+
+class ThreadExecutor(ExecutorBackend):
+    """The original in-process model: invoke == plain call."""
+
+    name = "thread"
+
+    def invoke(self, worker, fn, args, kwargs, input_keys=None):
+        return fn(*args, **kwargs)
+
+
+class ProcessExecutor(ExecutorBackend):
+    """Persistent worker processes + shared-memory object plane."""
+
+    name = "process"
+
+    def __init__(self, n_workers: int, label: str = "rjax",
+                 mp_context: Optional[str] = None):
+        super().__init__(n_workers, label)
+        try:
+            self._ctx = get_context(mp_context or _MP_CONTEXT)
+        except ValueError:
+            self._ctx = get_context("spawn")
+        self.plane = SegmentPlane()
+        self._fn_cache: Dict[int, Tuple[int, Any, bytes]] = {}  # id(fn) -> (token, fn, blob)
+        self._next_token = 1
+        self._fn_lock = threading.Lock()
+        self._procs: List[Any] = [None] * self.n_workers
+        self._conns: List[Any] = [None] * self.n_workers
+        self._conn_locks = [threading.Lock() for _ in range(self.n_workers)]
+        self._shipped: List[Set[int]] = [set() for _ in range(self.n_workers)]
+        self._tl = threading.local()   # per-dispatcher decoded-view registry
+        self._closing = False
+        self.worker_restarts = 0
+
+    # -- process management --------------------------------------------------
+    def start(self, runtime) -> None:
+        # the tracker must exist BEFORE the first fork, or each worker
+        # lazily starts its own and the one-tracker accounting (and the
+        # crash safety-net) silently fragments
+        try:
+            from multiprocessing import resource_tracker
+            resource_tracker.ensure_running()
+        except Exception:
+            pass
+        # fork the workers *before* the dispatcher threads exist: forking a
+        # multithreaded process risks inheriting locks held mid-operation
+        for w in range(self.n_workers):
+            self._spawn(w)
+        super().start(runtime)
+
+    def _spawn(self, worker: int) -> None:
+        parent, child = self._ctx.Pipe(duplex=True)
+        p = self._ctx.Process(target=_worker_main, args=(child, worker),
+                              daemon=True, name=f"{self.label}-p{worker}")
+        p.start()
+        child.close()
+        self._procs[worker] = p
+        self._conns[worker] = parent
+        self._shipped[worker] = set()
+
+    def _fn_entry(self, fn: Callable) -> Tuple[int, bytes]:
+        with self._fn_lock:
+            entry = self._fn_cache.get(id(fn))
+            if entry is not None and entry[1] is fn:
+                return entry[0], entry[2]
+            try:
+                blob = b"P" + pickle.dumps(fn, protocol=5)
+            except Exception:
+                if _cloudpickle is None:
+                    raise
+                blob = b"C" + _cloudpickle.dumps(fn)
+            token = self._next_token
+            self._next_token += 1
+            # the cached strong ref to fn keeps id(fn) unique while cached
+            self._fn_cache[id(fn)] = (token, fn, blob)
+            while len(self._fn_cache) > _FN_CACHE_MAX:
+                self._fn_cache.pop(next(iter(self._fn_cache)))
+            return token, blob
+
+    # -- the object plane ----------------------------------------------------
+    def _encode_inputs(self, args: tuple, kwargs: dict,
+                       input_keys: Dict[int, Tuple[int, int]]) -> bytes:
+        def enc(arr: np.ndarray):
+            key = input_keys.get(id(arr))
+            # only *keyed* data (store-resident, re-readable) enters the
+            # plane; a direct one-shot ndarray argument rides the pipe —
+            # a segment for it could never be deduped or evicted
+            if key is None or not _shm_eligible(arr):
+                return arr
+            return self.plane.ensure(key, arr)
+
+        structure = _walk((args, kwargs), enc, (np.ndarray,))
+        try:
+            return pickle.dumps(structure, protocol=5)
+        except Exception:
+            if _cloudpickle is None:
+                raise
+            return _cloudpickle.dumps(structure)
+
+    def _decode_result(self, blob: bytes) -> Any:
+        views: Dict[int, ShmRef] = {}
+
+        def dec(ref: ShmRef):
+            arr, fresh = self.plane.attach(ref)
+            if fresh:   # newly adopted: publish() aliases it or task_done() reclaims it
+                views[id(arr)] = ref
+            return arr
+
+        result = _walk(pickle.loads(blob), dec, (ShmRef,))
+        self._tl.views = views   # consumed by publish() in the same thread
+        return result
+
+    def publish(self, key, value):
+        """Alias a just-decoded result segment to its datum key, so later
+        reads of ``(data_id, version)`` ship a ref instead of bytes."""
+        views = getattr(self._tl, "views", None)
+        if views and isinstance(value, np.ndarray):
+            ref = views.pop(id(value), None)
+            if ref is not None:
+                self.plane.alias(key, ref)
+
+    def task_done(self):
+        """Dispose result segments that were adopted but never published —
+        discarded outputs (``returns=0``), lost speculation races, arity
+        failures — so anonymous segments cannot accumulate."""
+        views = getattr(self._tl, "views", None)
+        if views:
+            for ref in views.values():
+                self.plane.drop_anonymous(ref.name)
+        self._tl.views = None
+
+    # -- invocation ----------------------------------------------------------
+    def invoke(self, worker, fn, args, kwargs, input_keys=None):
+        token, blob = self._fn_entry(fn)
+        payload = self._encode_inputs(args, kwargs, input_keys or {})
+        with self._conn_locks[worker]:
+            conn = self._conns[worker]
+            first = token not in self._shipped[worker]
+            try:
+                conn.send(("task", token, blob if first else b"", payload))
+                self._shipped[worker].add(token)
+                resp = conn.recv()
+            except (EOFError, OSError, BrokenPipeError) as err:
+                if not self._closing:
+                    self._restart(worker)
+                raise WorkerCrashedError(
+                    f"worker process {worker} died executing "
+                    f"{getattr(fn, '__name__', fn)!r}") from err
+        if resp[0] == "ok":
+            return self._decode_result(resp[1])
+        _, enc, tb = resp
+        if enc is not None:
+            try:
+                exc = pickle.loads(enc)
+            except Exception:
+                exc = None
+            if isinstance(exc, BaseException):
+                # chain the worker-side traceback text so remote failures
+                # are debuggable from the submitting process
+                raise exc from RemoteTaskError(type(exc).__name__,
+                                               str(exc), tb or "")
+        type_name, _, rest = (tb or "RemoteTaskError||").partition("|")
+        message, _, tb_text = rest.partition("|")
+        raise RemoteTaskError(type_name, message, tb_text)
+
+    def _restart(self, worker: int) -> None:
+        self.worker_restarts += 1
+        proc = self._procs[worker]
+        try:
+            if proc is not None and proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=2.0)
+        except Exception:
+            pass
+        self._spawn(worker)
+
+    # -- lifecycle -----------------------------------------------------------
+    def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
+        self._closing = True
+        for w, conn in enumerate(self._conns):
+            if conn is None:
+                continue
+            # a dispatcher blocked in recv holds the lock: skip the polite
+            # exit for that worker and terminate it below instead
+            if self._conn_locks[w].acquire(timeout=0.5 if wait else 0.05):
+                try:
+                    conn.send(("exit",))
+                except Exception:
+                    pass
+                finally:
+                    self._conn_locks[w].release()
+        for p in self._procs:
+            if p is None:
+                continue
+            p.join(timeout=2.0 if wait else 0.2)
+            if p.is_alive():
+                try:
+                    p.terminate()
+                    p.join(timeout=1.0)
+                except Exception:
+                    pass
+        for conn in self._conns:
+            try:
+                if conn is not None:
+                    conn.close()
+            except Exception:
+                pass
+        super().shutdown(wait=wait, timeout=timeout)
+        self.plane.close()
+
+    def stats(self) -> dict:
+        s = {"backend": self.name, "worker_restarts": self.worker_restarts}
+        s.update(self.plane.stats())
+        return s
+
+
+BACKENDS = {"thread": ThreadExecutor, "process": ProcessExecutor}
+
+
+def make_executor(backend: str, n_workers: int, label: str = "rjax",
+                  **kw) -> ExecutorBackend:
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown executor backend {backend!r}; choose from {sorted(BACKENDS)}")
+    return BACKENDS[backend](n_workers, label, **kw)

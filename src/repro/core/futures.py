@@ -64,6 +64,9 @@ class ObjectStore:
         self._values: Dict[Tuple[int, int], Any] = {}
         self._errors: Dict[Tuple[int, int], BaseException] = {}
         self._locations: Dict[Tuple[int, int], set] = {}
+        self._nbytes: Dict[Tuple[int, int], int] = {}
+        self._transfers = 0          # cross-domain reads observed
+        self._transfer_bytes = 0
         self._next_data_id = 1
 
     # -- identity allocation -------------------------------------------------
@@ -75,8 +78,14 @@ class ObjectStore:
 
     # -- publication ----------------------------------------------------------
     def put(self, key: Tuple[int, int], value: Any, node: Optional[int] = None) -> None:
+        nbytes = getattr(value, "nbytes", 0)
+        try:
+            nbytes = int(nbytes)
+        except Exception:
+            nbytes = 0
         with self._cond:
             self._values[key] = value
+            self._nbytes[key] = nbytes
             if node is not None:
                 self._locations.setdefault(key, set()).add(node)
             self._cond.notify_all()
@@ -107,14 +116,32 @@ class ObjectStore:
                 raise self._errors[key]
             return self._values[key]
 
-    # -- locality metadata -----------------------------------------------------
+    # -- locality / transfer metadata ------------------------------------------
+    # Every datum records which address-space *domains* hold a copy (node ids
+    # for the thread backend, worker-process ids for the process backend) and
+    # its byte size, so scheduling policies can score ready tasks by resident
+    # input *bytes* — across threads and across processes alike.
     def note_location(self, key: Tuple[int, int], node: int) -> None:
         with self._lock:
-            self._locations.setdefault(key, set()).add(node)
+            held = self._locations.setdefault(key, set())
+            if node not in held:
+                if held:  # a new domain pulled a copy: that's a transfer
+                    self._transfers += 1
+                    self._transfer_bytes += self._nbytes.get(key, 0)
+                held.add(node)
 
     def locations(self, key: Tuple[int, int]) -> set:
         with self._lock:
             return set(self._locations.get(key, ()))
+
+    def nbytes(self, key: Tuple[int, int]) -> int:
+        with self._lock:
+            return self._nbytes.get(key, 0)
+
+    def transfer_stats(self) -> Tuple[int, int]:
+        """(cross-domain reads, bytes moved) — the transfer ledger."""
+        with self._lock:
+            return self._transfers, self._transfer_bytes
 
     # -- housekeeping ------------------------------------------------------------
     def evict(self, key: Tuple[int, int]) -> None:
@@ -122,6 +149,7 @@ class ObjectStore:
         with self._lock:
             self._values.pop(key, None)
             self._locations.pop(key, None)
+            self._nbytes.pop(key, None)
 
     def __len__(self) -> int:
         with self._lock:

@@ -1,10 +1,17 @@
 """The RJAX runtime engine — RCOMPSs' COMPSs core, reproduced.
 
 One ``Runtime`` owns: the versioned object store, the dynamic task graph,
-a scheduling policy, a pool of *persistent* worker threads (the paper's
-persistent-executor model: workers live for the whole application and are
-reused across tasks, §3.3.2), the tracer, fault handling, and the optional
-straggler-speculation monitor.
+a scheduling policy, an *executor backend* holding the pool of persistent
+workers (the paper's persistent-executor model: workers live for the whole
+application and are reused across tasks, §3.3.2), the tracer, fault
+handling, and the optional straggler-speculation monitor.
+
+The executor backend is pluggable (``backend="thread"`` or ``"process"``,
+see :mod:`repro.core.executors`): the runtime always runs one dispatcher
+thread per worker that resolves task inputs, applies fault policy, and
+publishes outputs; the backend decides whether the task *body* runs in
+that thread or in a persistent worker process across a shared-memory
+object plane.
 
 Users normally go through :mod:`repro.core.api` (``task`` / ``barrier`` /
 ``wait_on``), which mirrors the five-function RCOMPSs API.
@@ -19,6 +26,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .dag import TaskGraph, TaskNode, TaskState
+from .executors import make_executor
 from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
 from .futures import Future, ObjectStore, TaskFailedError
 from .scheduler import Scheduler
@@ -62,9 +70,15 @@ class Runtime:
         retry: RetryPolicy = RetryPolicy(),
         speculation: SpeculationConfig = SpeculationConfig(),
         name: str = "rjax",
+        backend: str = "thread",
     ):
         self.n_workers = int(n_workers)
-        self.workers_per_node = workers_per_node or self.n_workers
+        self.backend = backend
+        if workers_per_node is None:
+            # each worker process is its own address space => its own
+            # locality domain; threads all share one
+            workers_per_node = 1 if backend == "process" else self.n_workers
+        self.workers_per_node = workers_per_node
         self.store = ObjectStore()
         self.graph = TaskGraph()
         self.scheduler = Scheduler(
@@ -83,18 +97,27 @@ class Runtime:
         self._idle_workers = self.n_workers
         self._stopped = False
 
-        self._threads: List[threading.Thread] = []
-        for w in range(self.n_workers):
-            t = threading.Thread(target=self._worker_loop, args=(w,), daemon=True,
-                                 name=f"{name}-w{w}")
-            t.start()
-            self._threads.append(t)
+        self.executor = make_executor(backend, self.n_workers, label=name)
+        self.executor.start(self)
 
         self._monitor: Optional[threading.Thread] = None
         if self.speculation.enabled:
             self._monitor = threading.Thread(target=self._speculation_loop, daemon=True,
                                              name=f"{name}-spec")
             self._monitor.start()
+
+    # ----------------------------------------------------------- worker hooks
+    def locality_domain(self, worker: int) -> int:
+        """The address-space/NUMA domain of ``worker`` for locality scoring."""
+        return worker // self.workers_per_node
+
+    def _note_worker_busy(self) -> None:
+        with self._inflight_lock:
+            self._idle_workers -= 1
+
+    def _note_worker_idle(self) -> None:
+        with self._inflight_lock:
+            self._idle_workers += 1
 
     # ------------------------------------------------------------- submission
     def submit(
@@ -167,23 +190,10 @@ class Runtime:
             return out_futures[0]
         return tuple(out_futures) if returns > 1 else out_futures[0] if out_futures else None
 
-    # ------------------------------------------------------------ worker loop
-    def _worker_loop(self, worker: int) -> None:
-        node_id = worker // self.workers_per_node
-        while True:
-            tid = self.scheduler.take(worker)
-            if tid is None:
-                return
-            with self._inflight_lock:
-                self._idle_workers -= 1
-            try:
-                self._execute(tid, worker, node_id)
-            finally:
-                with self._inflight_lock:
-                    self._idle_workers += 1
-
-    def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict]:
+    # ------------------------------------------------------- input resolution
+    def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict, Dict[int, Tuple[int, int]]]:
         nbytes_in = 0
+        input_keys: Dict[int, Tuple[int, int]] = {}
 
         def _fetch(f: Future):
             nonlocal nbytes_in
@@ -196,12 +206,13 @@ class Runtime:
                 raise PoisonedInputError(f.producer_task, err) from err
             nbytes_in += _nbytes(v)
             self.store.note_location(f.key, node_id)
+            input_keys[id(v)] = f.key
             return v
 
         args = _walk(t.args, _fetch)
         kwargs = _walk(t.kwargs, _fetch)
         t.nbytes_in = nbytes_in
-        return args, kwargs
+        return args, kwargs, input_keys
 
     def _execute(self, tid: int, worker: int, node_id: int) -> None:
         t = self.graph.get(tid)
@@ -209,8 +220,9 @@ class Runtime:
             return  # cancelled before start (lost speculation race)
         t0 = time.perf_counter()
         try:
-            args, kwargs = self._resolve_inputs(t, node_id)
-            result = t.fn(*args, **kwargs)
+            args, kwargs, input_keys = self._resolve_inputs(t, node_id)
+            result = self.executor.invoke(worker, t.fn, args, kwargs,
+                                          input_keys=input_keys)
         except PoisonedInputError as err:
             self._finish_failure(t, err, retryable=False)
             self._trace_task(t, worker, node_id, t0, ok=False)
@@ -250,6 +262,10 @@ class Runtime:
             self._logical_done[lid] = True
             return True
 
+    def _put_output(self, key: Tuple[int, int], value: Any, node_id: int) -> None:
+        self.store.put(key, value, node=node_id)
+        self.executor.publish(key, value)
+
     def _finish_success(self, t: TaskNode, result: Any, node_id: int) -> None:
         primary = self.graph.get(self._logical_id(t))
         if not self._claim_completion(t):
@@ -261,7 +277,7 @@ class Runtime:
         if len(out_keys) == 0:
             pass
         elif len(out_keys) == 1:
-            self.store.put(out_keys[0], result, node=node_id)
+            self._put_output(out_keys[0], result, node_id)
         else:
             if not isinstance(result, (tuple, list)) or len(result) != len(out_keys):
                 err = TypeError(
@@ -274,7 +290,7 @@ class Runtime:
                 self._dec_inflight(t)
                 return
             for key, val in zip(out_keys, result):
-                self.store.put(key, val, node=node_id)
+                self._put_output(key, val, node_id)
         ready = self.graph.mark_done(primary.task_id)
         if t.task_id != primary.task_id:
             # speculative clone won: record clone done too
@@ -370,8 +386,7 @@ class Runtime:
             self.barrier()
         self._stopped = True
         self.scheduler.close()
-        for t in self._threads:
-            t.join(timeout=10.0)
+        self.executor.shutdown(wait=wait)
         self.tracer.stop()
 
     # --------------------------------------------------------------- metrics
@@ -389,4 +404,5 @@ class Runtime:
             "critical_path_s": self.graph.critical_path_seconds(),
             "wallclock_s": self.tracer.wallclock(),
             "utilization": self.tracer.utilization(self.n_workers),
+            "executor": self.executor.stats(),
         }

@@ -132,8 +132,20 @@ class Scheduler:
         return tid
 
     def _locality_score(self, task_id: int, node: int) -> float:
+        """Fraction of input *bytes* already resident in this worker's
+        address-space domain (falls back to input count when sizes are
+        unknown, e.g. scalars)."""
         t = self.graph.get(task_id)
         if not t.dep_keys:
             return 0.0
-        local = sum(1 for key in t.dep_keys if node in self.store.locations(key))
-        return local / len(t.dep_keys)
+        total_b = local_b = 0
+        local_n = 0
+        for key in t.dep_keys:
+            b = self.store.nbytes(key)
+            total_b += b
+            if node in self.store.locations(key):
+                local_n += 1
+                local_b += b
+        if total_b > 0:
+            return local_b / total_b
+        return local_n / len(t.dep_keys)

@@ -41,7 +41,8 @@ _MAGIC = b"RJX1"
 _DTYPES = {
     "f2": np.float16, "f4": np.float32, "f8": np.float64,
     "i1": np.int8, "i2": np.int16, "i4": np.int32, "i8": np.int64,
-    "u1": np.uint8, "u4": np.uint32, "u8": np.uint64, "b1": np.bool_,
+    "u1": np.uint8, "u2": np.uint16, "u4": np.uint32, "u8": np.uint64,
+    "b1": np.bool_,
 }
 _DTYPE_CODES = {np.dtype(v).str[1:]: k for k, v in _DTYPES.items()}
 

@@ -1,5 +1,97 @@
+"""Shared test fixtures + a dependency-free ``hypothesis`` fallback.
+
+The property tests (test_serialization, test_simulator, scheduler policy
+tests) are written against the hypothesis API.  When the real library is
+installed it is used unchanged; otherwise a tiny deterministic shim is
+registered in ``sys.modules`` *before* test modules import it, so the
+suite collects and runs green in minimal environments.  The shim supports
+exactly the subset this repo uses: ``@given`` with keyword strategies,
+``@settings(max_examples=, deadline=)``, and the ``integers`` / ``floats``
+/ ``lists`` / ``sampled_from`` / ``data`` strategies.
+"""
+import random
+import sys
+import types
+
 import numpy as np
 import pytest
+
+try:  # pragma: no cover - exercised implicitly when hypothesis exists
+    import hypothesis  # noqa: F401
+except ImportError:
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elements.sample(rng) for _ in range(rng.randint(min_size, max_size))
+        ])
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    class _DataProxy:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.sample(self._rng)
+
+    _DATA_SENTINEL = object()
+
+    def data():
+        s = _Strategy(lambda rng: _DataProxy(rng))
+        s._is_data = True
+        return s
+
+    def settings(max_examples=50, deadline=None, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner(*fargs, **fkwargs):
+                n = getattr(fn, "_shim_max_examples",
+                            getattr(runner, "_shim_max_examples", 25))
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + i)
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*fargs, **drawn, **fkwargs)
+            # no __wrapped__: pytest would unwrap and read the strategy
+            # parameters as fixture requests
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+        return deco
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = integers
+    _st.floats = floats
+    _st.lists = lists
+    _st.sampled_from = sampled_from
+    _st.data = data
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = given
+    _hyp.settings = settings
+    _hyp.strategies = _st
+    _hyp.__is_rjax_shim__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(autouse=True)

@@ -14,6 +14,10 @@ from repro.configs import (
 )
 from repro.models.lm import forward, init_params, loss_fn
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):

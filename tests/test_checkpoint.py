@@ -46,6 +46,7 @@ def test_structure_mismatch_raises(tmp_path):
         restore_checkpoint(str(tmp_path), {"a": jnp.ones(3), "b": jnp.ones(2)})
 
 
+@pytest.mark.slow
 def test_restart_determinism(tmp_path):
     """Train 3+3 steps with a restart == train 6 straight (same seed)."""
     from repro.configs import get_config

@@ -9,6 +9,10 @@ import textwrap
 
 import pytest
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -93,7 +97,18 @@ def test_moe_sharded_matches_local_on_4_devices():
 
 def test_tp_shard_map_equals_gspmd():
     """The §Perf shard_map-TP path computes the identical function (loss and
-    grads) as the GSPMD baseline."""
+    grads) as the *replicated* ground truth.
+
+    Ground truth is the unsharded forward/backward rather than the
+    GSPMD-sharded baseline: on this stack (jaxlib 0.4.36 CPU) the SPMD
+    partitioner miscompiles the GSPMD attention path when params carry the
+    FSDP shardings and the activations enter feature-sharded over ``data``
+    — the reshard it warns about with "involuntary full rematerialization"
+    corrupts values (loss off by ~3e-2, grad max-diff ~0.15 vs truth;
+    identical under the Shardy partitioner, so it is the partitioned HLO,
+    not a jax-level transpose).  The shard_map TP path matches the
+    replicated truth to ~1e-6, so it is the trusted side; the GSPMD
+    baseline only gets a coarse sanity bound until the upstream fix."""
     code = """
     import dataclasses, jax, jax.numpy as jnp
     from repro.configs import get_config, SMOKE_SHAPES, make_batch
@@ -107,21 +122,26 @@ def test_tp_shard_map_equals_gspmd():
         shape = dataclasses.replace(SMOKE_SHAPES["train_4k"], batch=4)
         b = make_batch(cfg, shape)
         params = init_params(cfg, jax.random.PRNGKey(0))
+        cfg_tp = dataclasses.replace(cfg, tp_block="shard_map")
+        # replicated ground truth (single-device semantics)
+        l_ref, _ = jax.jit(lambda p, bb: loss_fn(cfg, p, bb, mesh=mesh))(params, b["batch"])
+        g_ref = jax.jit(jax.grad(
+            lambda p: loss_fn(cfg, p, b["batch"], mesh=mesh)[0]))(params)
         # production contract: parameters carry explicit shardings
         p_sh = to_shardings(param_pspecs(param_axes(cfg), params, rules, mesh),
                             mesh)
-        params = jax.tree.map(jax.device_put, params, p_sh)
-        cfg_tp = dataclasses.replace(cfg, tp_block="shard_map")
-        l_g, _ = jax.jit(lambda p, bb: loss_fn(cfg, p, bb, mesh=mesh))(params, b["batch"])
-        l_t, _ = jax.jit(lambda p, bb: loss_fn(cfg_tp, p, bb, mesh=mesh))(params, b["batch"])
-        g_g = jax.jit(jax.grad(
-            lambda p: loss_fn(cfg, p, b["batch"], mesh=mesh)[0]))(params)
+        params_sh = jax.tree.map(jax.device_put, params, p_sh)
+        l_g, _ = jax.jit(lambda p, bb: loss_fn(cfg, p, bb, mesh=mesh))(params_sh, b["batch"])
+        l_t, _ = jax.jit(lambda p, bb: loss_fn(cfg_tp, p, bb, mesh=mesh))(params_sh, b["batch"])
         g_t = jax.jit(jax.grad(
-            lambda p: loss_fn(cfg_tp, p, b["batch"], mesh=mesh)[0]))(params)
+            lambda p: loss_fn(cfg_tp, p, b["batch"], mesh=mesh)[0]))(params_sh)
         gd = max(float(jnp.max(jnp.abs(a - c)))
-                 for a, c in zip(jax.tree.leaves(g_g), jax.tree.leaves(g_t)))
-        assert abs(float(l_g) - float(l_t)) < 1e-4 and gd < 1e-3, (arch, gd)
-        print(arch, "tp==gspmd", float(l_g))
+                 for a, c in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_t)))
+        # coarse bound only: XLA CPU partitioner miscompile (see docstring)
+        assert abs(float(l_g) - float(l_ref)) < 0.1, (arch, "gspmd fwd")
+        assert abs(float(l_t) - float(l_ref)) < 1e-4, (arch, "tp fwd")
+        assert gd < 1e-3, (arch, gd)
+        print(arch, "tp==truth", float(l_t))
     print("OK")
     """
     assert "OK" in run_sub(code)

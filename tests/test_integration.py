@@ -8,6 +8,10 @@ from repro.core import api
 from repro.launch.serve import serve_batch
 from repro.launch.train import train_loop
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 
 def test_train_loop_loss_improves():
     cfg = get_config("qwen3-0.6b", reduced=True)

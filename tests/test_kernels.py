@@ -12,6 +12,10 @@ from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.rmsnorm import rmsnorm
 from repro.kernels.ssd_scan import ssd_scan
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 
 def _tol(dtype):
     return 2e-2 if dtype == jnp.bfloat16 else 3e-5

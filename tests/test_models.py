@@ -10,6 +10,10 @@ import pytest
 from repro.layers import moe, rglru, ssd
 from repro.models.lm import LMConfig, forward, init_caches, init_params, loss_fn
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 
 def tiny(name, **kw):
     base = dict(name=name, n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,

@@ -9,6 +9,10 @@ import pytest
 
 from repro.models.lm import LMConfig, init_params, loss_fn
 
+# minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
+pytestmark = pytest.mark.slow
+
+
 
 def tiny(**kw):
     base = dict(name="t", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,

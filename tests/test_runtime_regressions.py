@@ -1,0 +1,149 @@
+"""Regression tests for known-delicate Runtime paths.
+
+These pin behaviours that are easy to break when refactoring the
+completion paths: INOUT version-renaming snapshots, the speculation
+duplicate-completion race in ``_claim_completion``, and the multi-output
+arity-mismatch failure path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.dag import TaskNode, TaskState
+from repro.core.futures import TaskFailedError
+
+BACKENDS = ("thread", "process")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_inout_snapshot_reader_sees_pre_rename_version(backend):
+    """A task submitted *before* an INOUT rename must read the old version
+    even when it executes after the rename happened (COMPSs renaming)."""
+    rt = api.runtime_start(n_workers=2, backend=backend)
+    try:
+        mk = api.task(lambda: np.zeros(4), name="mk")
+        buf = mk()
+        v1 = buf.version
+
+        # reader submitted first: snapshots (data_id, v1)
+        reader = api.task(lambda a: float(np.sum(a)), name="reader")(buf)
+
+        rt.submit(lambda x: x + 1, (buf,), name="bump", returns=0, inout=[buf])
+        assert buf.version == v1 + 1
+
+        # a reader submitted *after* the rename sees the new contents
+        late_reader = api.task(lambda a: float(np.sum(a)), name="late")(buf)
+
+        assert api.wait_on(reader) == 0.0        # pre-rename contents
+        assert api.wait_on(late_reader) == 4.0   # post-rename contents
+        assert api.wait_on(buf).tolist() == [1.0] * 4
+    finally:
+        api.runtime_stop()
+
+
+def test_chained_inout_renames_version_per_writer():
+    rt = api.runtime_start(n_workers=2)
+    try:
+        mk = api.task(lambda: np.zeros(2), name="mk")
+        buf = mk()
+        versions = [buf.version]
+        for _ in range(3):
+            rt.submit(lambda x: x + 1, (buf,), name="bump", returns=0, inout=[buf])
+            versions.append(buf.version)
+        assert versions == [1, 2, 3, 4]
+        np.testing.assert_array_equal(api.wait_on(buf), np.full(2, 3.0))
+    finally:
+        api.runtime_stop()
+
+
+def test_claim_completion_is_exactly_once():
+    """The speculation race: primary and clone both finish; only the first
+    claim publishes, the loser is discarded as CANCELLED."""
+    rt = api.runtime_start(n_workers=2)
+    try:
+        f = api.task(lambda: 7, name="seven")()
+        assert api.wait_on(f) == 7
+        primary = rt.graph.get(f.producer_task)
+
+        # the primary already claimed its logical completion
+        assert rt._claim_completion(primary) is False
+
+        # a late speculative clone of the same logical task must lose
+        clone = TaskNode(task_id=rt.graph.next_task_id(), name="seven(spec)",
+                         fn=primary.fn, args=primary.args, kwargs=primary.kwargs,
+                         dep_keys=set(primary.dep_keys), out_keys=[],
+                         speculative_of=primary.task_id, speculatable=False)
+        rt.graph.add_task(clone)
+        assert rt._claim_completion(clone) is False
+
+        with rt._inflight_cond:
+            rt._inflight += 1
+        rt._finish_success(clone, 999, node_id=0)   # duplicate completion
+        assert rt.graph.get(clone.task_id).state == TaskState.CANCELLED
+        assert api.wait_on(f) == 7                   # value not clobbered
+        rt.barrier(timeout=5.0)                      # accounting balanced
+    finally:
+        api.runtime_stop()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("bad_result", [5, (1, 2, 3), [1]])
+def test_multi_output_arity_mismatch_fails_all_outputs(backend, bad_result):
+    """A task declaring N outputs but returning something else publishes
+    TaskFailedError to *every* out key — no waiter may hang."""
+    api.runtime_start(n_workers=2, backend=backend)
+    try:
+        t = api.task(lambda r: r, returns=2, name="badarity")
+        hi, lo = t(bad_result)
+        for fut in (hi, lo):
+            with pytest.raises(TaskFailedError) as exc_info:
+                api.wait_on(fut, timeout=10.0)
+            assert isinstance(exc_info.value.cause, TypeError)
+        api.barrier(timeout=5.0)  # must not hang
+        states = [n.state for n in api.current_runtime().graph.nodes()]
+        assert TaskState.FAILED in states
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_child_of_two_outputs_of_one_task_releases_once():
+    """Regression: a child reading *two outputs of the same producer* must
+    count one unresolved edge — double-counting left it PENDING forever."""
+    api.runtime_start(n_workers=2)
+    try:
+        t = api.task(lambda: (3, 4), returns=2, name="pair")
+        hi, lo = t()
+        add = api.task(lambda a, b: a + b, name="add")
+        assert api.wait_on(add(hi, lo), timeout=10.0) == 7
+    finally:
+        api.runtime_stop()
+
+
+def test_dependent_submitted_after_producer_failed_fails_fast():
+    """Regression: wiring an edge to an already-FAILED producer (whose
+    release ran before the child existed) must not block the child."""
+    api.runtime_start(n_workers=2)
+    try:
+        boom = api.task(lambda: 1 / 0, name="boom")
+        g = boom()
+        api.barrier()  # guarantee the producer is FAILED before we submit
+        child = api.task(lambda x: x, name="reader")(g)
+        with pytest.raises(TaskFailedError):
+            api.wait_on(child, timeout=10.0)
+        api.barrier(timeout=5.0)
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_arity_mismatch_poisons_dependents():
+    api.runtime_start(n_workers=2)
+    try:
+        t = api.task(lambda: 1, returns=2, name="badarity")
+        hi, lo = t()
+        add = api.task(lambda a, b: a + b, name="add")
+        child = add(hi, lo)
+        with pytest.raises(TaskFailedError):
+            api.wait_on(child, timeout=10.0)
+        api.barrier(timeout=5.0)
+    finally:
+        api.runtime_stop(wait=False)

@@ -1,0 +1,125 @@
+"""Scheduler policy unit tests (paper §3.1).
+
+The ``locality`` selection does a ``rotate(-i)/popleft/rotate(i)`` dance
+to extract the best-scoring task from a bounded window — the property
+worth pinning is that every *non-selected* task keeps its queue position.
+``worksteal`` must steal FIFO (oldest first) from the longest victim
+queue while owners pop LIFO.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.dag import TaskGraph, TaskNode
+from repro.core.futures import ObjectStore
+from repro.core.scheduler import Scheduler
+
+
+def _mk_sched(policy, workers_per_node=1):
+    graph = TaskGraph()
+    store = ObjectStore()
+    return Scheduler(graph, store, policy=policy,
+                     workers_per_node=workers_per_node), graph, store
+
+
+def _add_task(graph, store, dep_nbytes_by_node):
+    """One task whose inputs live on the given nodes with given sizes.
+    ``dep_nbytes_by_node``: list of (node, nbytes)."""
+    tid = graph.next_task_id()
+    dep_keys = set()
+    for node, nbytes in dep_nbytes_by_node:
+        did = store.new_data_id()
+        key = (did, 1)
+        store.put(key, np.zeros(max(0, nbytes), dtype=np.uint8), node=node)
+        dep_keys.add(key)
+    node = TaskNode(task_id=tid, name=f"t{tid}", fn=lambda: None, args=(),
+                    kwargs={}, dep_keys=dep_keys, out_keys=[])
+    graph.add_task(node)
+    return tid
+
+
+# ------------------------------------------------------------------ locality
+def test_locality_prefers_resident_bytes():
+    sched, graph, store = _mk_sched("locality")
+    # task A: 1 MiB on node 0; task B: 1 MiB on node 1
+    a = _add_task(graph, store, [(0, 1 << 20)])
+    b = _add_task(graph, store, [(1, 1 << 20)])
+    sched.push_many([a, b])
+    assert sched.take(1, timeout=0.1) == b   # worker 1 -> node 1
+    assert sched.take(0, timeout=0.1) == a
+
+
+def test_locality_scores_by_bytes_not_input_count():
+    sched, graph, store = _mk_sched("locality")
+    # A has 2 small inputs on node 0 (2 KiB); B has 1 big input on node 0
+    # (1 MiB) and 2 small ones elsewhere: byte-weighting must pick B
+    a = _add_task(graph, store, [(1, 1 << 19), (0, 1024), (0, 1024)])
+    b = _add_task(graph, store, [(0, 1 << 20), (1, 1024), (1, 1024)])
+    sched.push_many([a, b])
+    assert sched.take(0, timeout=0.1) == b
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data(), n=st.integers(2, 20))
+def test_locality_window_preserves_order_of_nonselected(data, n):
+    """Property: after one take, the queue equals the original sequence
+    minus the selected element, in the original order."""
+    sched, graph, store = _mk_sched("locality", workers_per_node=1)
+    tids = []
+    for _ in range(n):
+        node = data.draw(st.integers(0, 2))
+        nbytes = data.draw(st.integers(0, 4096))
+        tids.append(_add_task(graph, store, [(node, nbytes)]))
+    sched.push_many(tids)
+    worker = data.draw(st.integers(0, 2))
+    picked = sched.take(worker, timeout=0.1)
+    assert picked in tids
+    remaining = [t for t in tids if t != picked]
+    assert list(sched._queue) == remaining
+
+
+def test_locality_empty_deps_score_zero_and_still_run():
+    sched, graph, store = _mk_sched("locality")
+    a = _add_task(graph, store, [])
+    sched.push_many([a])
+    assert sched.take(0, timeout=0.1) == a
+
+
+# ----------------------------------------------------------------- worksteal
+def test_worksteal_owner_pops_lifo():
+    sched, graph, store = _mk_sched("worksteal")
+    t1, t2, t3 = (_add_task(graph, store, []) for _ in range(3))
+    for t in (t1, t2, t3):
+        sched.push(t, preferred_worker=0)
+    assert sched.take(0, timeout=0.1) == t3  # hottest last-pushed first
+
+
+def test_worksteal_thief_steals_fifo_from_longest_victim():
+    sched, graph, store = _mk_sched("worksteal")
+    short = [_add_task(graph, store, []) for _ in range(2)]
+    long = [_add_task(graph, store, []) for _ in range(5)]
+    for t in short:
+        sched.push(t, preferred_worker=0)
+    for t in long:
+        sched.push(t, preferred_worker=1)
+    # worker 2 owns nothing: must steal the *oldest* task of the *longest*
+    # victim queue (worker 1's)
+    assert sched.take(2, timeout=0.1) == long[0]
+    assert sched.take(2, timeout=0.1) == long[1]  # still FIFO from victim
+
+
+def test_worksteal_prefers_global_queue_before_stealing():
+    sched, graph, store = _mk_sched("worksteal")
+    owned = _add_task(graph, store, [])
+    shared = _add_task(graph, store, [])
+    sched.push(owned, preferred_worker=0)
+    sched.push(shared)  # no preferred worker -> global queue
+    assert sched.take(2, timeout=0.1) == shared
+    assert sched.take(2, timeout=0.1) == owned  # then steals
+
+
+def test_unknown_policy_rejected():
+    graph, store = TaskGraph(), ObjectStore()
+    with pytest.raises(ValueError):
+        Scheduler(graph, store, policy="psychic")

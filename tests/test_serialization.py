@@ -12,7 +12,8 @@ from repro.core.serialization import (
     serialize,
 )
 
-DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.float16]
+DTYPES = [np.float32, np.float64, np.int32, np.int64, np.uint8, np.uint16,
+          np.float16]
 
 
 @pytest.mark.parametrize("codec", ["pickle", "npy", "raw"])
