@@ -3,11 +3,14 @@ workflow end to end: sequential-style program, automatic DAG, locality
 scheduling, Extrae-style trace, and a replay of the measured DAG on a
 virtual 64-worker machine to project scaling.
 
-Run:  PYTHONPATH=src python examples/kmeans_pipeline.py [--backend process]
+Run:  PYTHONPATH=src python examples/kmeans_pipeline.py [--backend process|cluster]
 
 With ``--backend process`` the fragment tasks execute on persistent worker
 processes; the point fragments travel through the shared-memory object
 plane once and are re-read zero-copy on every iteration (DESIGN.md §11).
+With ``--backend cluster`` they run on two real TCP node agents, each
+fragment shipped to a node once and reused from its plane every
+iteration (DESIGN.md §12).
 """
 import sys
 
@@ -19,9 +22,16 @@ from repro.core.simulator import MachineModel, replay_graph, simulate
 
 
 def main() -> None:
-    backend = "process" if "process" in sys.argv else "thread"
-    api.runtime_start(n_workers=4, policy="locality", tracing=True,
-                      backend=backend)
+    backend = "thread"
+    for b in ("process", "cluster"):
+        if b in sys.argv:
+            backend = b
+    if backend == "cluster":
+        api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                          policy="locality", tracing=True)
+    else:
+        api.runtime_start(n_workers=4, policy="locality", tracing=True,
+                          backend=backend)
     try:
         res = kmeans.run_kmeans(n_points=60_000, d=16, k=8, fragments=8,
                                 max_iters=6)

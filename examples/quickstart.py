@@ -4,11 +4,13 @@ Four numbers are summed through three asynchronous ``add`` tasks; the
 runtime discovers the dependency DAG (main -> {1,2} -> 3 -> sync) and
 prints it in Graphviz form, exactly like ``runcompss --lang=r -g job.R``.
 
-Run:  PYTHONPATH=src python examples/quickstart.py [--backend process]
+Run:  PYTHONPATH=src python examples/quickstart.py [--backend process|cluster]
 
 ``--backend process`` runs the same program on persistent worker
 *processes* behind the shared-memory object plane (the paper's per-node
-worker model) — the user program does not change at all.
+worker model); ``--backend cluster`` runs it on two real TCP node agents
+(each with two worker processes) spawned on localhost — the user program
+does not change at all.
 """
 import sys
 
@@ -20,9 +22,14 @@ def add(x, y):
 
 
 def main() -> None:
-    backend = "process" if "--backend" in sys.argv and "process" in sys.argv \
-        else "thread"
-    api.runtime_start(n_workers=4, backend=backend)   # compss_start()
+    backend = "thread"
+    for b in ("process", "cluster"):
+        if "--backend" in sys.argv and b in sys.argv:
+            backend = b
+    if backend == "cluster":
+        api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2)
+    else:
+        api.runtime_start(n_workers=4, backend=backend)   # compss_start()
     add_t = api.task(add)                    # task(add, ...)
 
     a, b, c, d = 4, 5, 6, 7

@@ -1,0 +1,24 @@
+"""repro.cluster — real multi-node execution over TCP (DESIGN.md §12).
+
+The package has four pieces:
+
+* :mod:`repro.cluster.protocol` — the length-prefixed wire format: message
+  metadata rides pickle, ndarrays ride separate raw-codec frames (the
+  ``serialization.py`` header format), so arrays cross the socket without
+  an intermediate copy on the send side.
+* :mod:`repro.cluster.channel`  — the scheduler-side multiplexed connection
+  to one node agent (request/response routing by message id, one reader
+  thread per agent).
+* :mod:`repro.cluster.agent`    — the node agent server
+  (``python -m repro.cluster.agent --connect HOST:PORT --workers N``): runs
+  task bodies on a PR-1 process-executor pool and caches received data in a
+  node-local object plane keyed by ``(data_id, version)``.
+* :mod:`repro.cluster.cluster`  — ``LocalCluster``, a harness that spawns N
+  agents on localhost so tests/CI/benchmarks exercise the real multi-node
+  path on one machine.
+
+The scheduler-side executor backend lives in
+:class:`repro.core.executors.ClusterExecutor` (``backend="cluster"``).
+"""
+from .cluster import LocalCluster  # noqa: F401
+from .protocol import ConnectionClosed  # noqa: F401

@@ -1,0 +1,380 @@
+"""The node agent: one process per cluster node (DESIGN.md §12).
+
+``python -m repro.cluster.agent --connect HOST:PORT --workers N``
+
+The agent dials the scheduler, registers (hello/welcome handshake), forks
+``N`` persistent worker processes (PR 1's :class:`ProcessExecutor` pool —
+the same shared-memory object plane now serves as the *intra-node* tier),
+and then serves the scheduler's task stream:
+
+* ``task``  — decode the payload (``Put`` payloads are cached in the
+  node-local object plane keyed by ``(data_id, version)``; ``Ref`` markers
+  resolve against it — the send-once/reuse-many property), run the body on
+  the requested pool slot, reply with the result (ndarrays as raw-codec
+  frames, each tagged with a cache token).
+* ``alias`` — promote a result token to a datum key: the scheduler posts
+  this when it publishes the task's output, so later tasks scheduled here
+  reference the result without it ever crossing the wire again.
+* ``drop``  — discard an unpublished result token.
+* ``stats`` — report pool + plane statistics.
+* ``exit``  — drain nothing, shut the pool down, leave.
+
+Failure model: a *pool worker* crash is handled inside the agent (the
+inner executor respawns it and the error travels back as a retryable
+``WorkerCrashedError``); an *agent* crash surfaces scheduler-side as a
+dropped connection, which the cluster executor maps to
+``WorkerCrashedError`` and answers by respawning the agent — the
+scheduler re-ships whatever data the replacement needs, since v1 keeps
+the authoritative copy of every datum on the scheduler.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import queue
+import socket
+import sys
+import threading
+import traceback
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.executors import ProcessExecutor, _loads_fn
+from ..core.serialization import as_c_contiguous
+from .protocol import (
+    ConnectionClosed,
+    Frame,
+    Put,
+    array_frame,
+    frame_eligible,
+    frame_to_array,
+    recv_msg,
+    send_msg,
+    unpack_payload,
+)
+
+
+class NodePlane:
+    """Node-local object cache keyed by ``(data_id, version)``: everything
+    this node ever received or produced, so repeat reads never re-cross
+    the wire.  Plus a token side-table for results the scheduler has not
+    yet bound to a datum key."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._data: Dict[Tuple[int, int], Any] = {}
+        self._tmp: Dict[int, Any] = {}
+
+    def lookup(self, key: Tuple[int, int]) -> Any:
+        with self._lock:
+            return self._data[key]
+
+    def store(self, key: Tuple[int, int], value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+
+    def hold(self, token: int, value: Any) -> None:
+        with self._lock:
+            self._tmp[token] = value
+
+    def alias(self, token: int, key: Tuple[int, int]) -> None:
+        with self._lock:
+            v = self._tmp.pop(token, None)
+            if v is not None:
+                self._data[key] = v
+
+    def drop(self, token: int) -> None:
+        with self._lock:
+            self._tmp.pop(token, None)
+
+    def stats(self) -> dict:
+        with self._lock:
+            vals = list(self._data.values())
+            return {
+                "plane_entries": len(vals),
+                "plane_tmp": len(self._tmp),
+                "plane_bytes": sum(int(getattr(v, "nbytes", 0) or 0) for v in vals),
+            }
+
+
+class NodeAgent:
+    def __init__(self, address: str, workers: int,
+                 node_id: Optional[int] = None,
+                 mp_context: Optional[str] = None):
+        host, _, port = address.rpartition(":")
+        self.addr = (host or "127.0.0.1", int(port))
+        self.workers = int(workers)
+        self.node_id = node_id
+        self._mp_context = mp_context
+        self.plane = NodePlane()
+        self.pool: Optional[ProcessExecutor] = None
+        self.sock: Optional[socket.socket] = None
+        self._send_lock = threading.Lock()
+        self._slot_queues: List[queue.Queue] = []
+        self._fns: Dict[int, Any] = {}
+        self._fn_blobs: Dict[int, bytes] = {}
+        self._fn_lock = threading.Lock()
+        self._next_token = 1
+        self._token_lock = threading.Lock()
+        self._done = threading.Event()
+
+    # ------------------------------------------------------------- lifecycle
+    def run(self) -> None:
+        # fork the pool BEFORE connecting and before the slot threads exist
+        # (never fork a multithreaded process, and never let a worker
+        # inherit the scheduler socket — a worker holding it would keep
+        # the connection half-open after this agent dies, hiding the crash
+        # from the scheduler)
+        self.pool = ProcessExecutor(self.workers, label="agent",
+                                    mp_context=self._mp_context)
+        self.pool.spawn_workers()
+        self.sock = socket.create_connection(self.addr, timeout=30.0)
+        self.sock.settimeout(None)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # workers respawned after a crash fork with the socket open: make
+        # them close it at birth
+        self.pool.inherit_blockers.append(self.sock.fileno())
+        send_msg(self.sock, {"op": "hello", "node_id": self.node_id,
+                             "workers": self.workers, "pid": os.getpid(),
+                             "host": socket.gethostname()})
+        welcome, _ = recv_msg(self.sock)
+        assert welcome.get("op") == "welcome", welcome
+        self.node_id = welcome["node_id"]
+        self._slot_queues = [queue.Queue() for _ in range(self.workers)]
+        threads = []
+        for slot in range(self.workers):
+            t = threading.Thread(target=self._slot_loop, args=(slot,),
+                                 daemon=True, name=f"agent{self.node_id}-s{slot}")
+            t.start()
+            threads.append(t)
+        try:
+            self._serve()
+        finally:
+            self._done.set()
+            for q in self._slot_queues:
+                q.put(None)
+            for t in threads:
+                t.join(timeout=2.0)
+            try:
+                self.pool.shutdown(wait=False)
+            except Exception:
+                pass
+            try:
+                self.sock.close()
+            except OSError:
+                pass
+
+    def _serve(self) -> None:
+        while True:
+            try:
+                meta, frames = recv_msg(self.sock)
+            except ConnectionClosed:
+                return  # scheduler went away: nothing left to serve
+            op = meta.get("op")
+            if op == "task":
+                # pre-store Puts and the fn blob HERE, on the reader, before
+                # the task is even queued: slot threads run concurrently, so
+                # the scheduler's wire-FIFO residency guarantee (a Ref never
+                # overtakes its Put; an fn token never beats its body) must
+                # be anchored at the single in-order consumer of the stream
+                try:
+                    self._pre_store(meta, frames)
+                except Exception as err:   # malformed payload: fail the task,
+                    import traceback       # not the whole agent
+                    self._reply({"op": "err", "mid": meta.get("mid"),
+                                 "exc": None,
+                                 "tb": f"{type(err).__name__}|{err}|"
+                                       f"{traceback.format_exc()}"})
+                    continue
+                self._slot_queues[meta["slot"]].put((meta, frames))
+            elif op == "alias":
+                self.plane.alias(meta["token"], tuple(meta["key"]))
+            elif op == "drop":
+                self.plane.drop(meta["token"])
+            elif op == "stats":
+                s = dict(self.plane.stats())
+                s.update(self.pool.stats())
+                s["node_id"] = self.node_id
+                self._reply({"op": "stats", "mid": meta["mid"], "stats": s})
+            elif op == "exit":
+                return
+            else:
+                self._reply({"op": "err", "mid": meta.get("mid"), "exc": None,
+                             "tb": f"agent: unknown op {op!r}"})
+
+    def _reply(self, meta: dict, frames=()) -> None:
+        with self._send_lock:
+            send_msg(self.sock, meta, frames)
+
+    # ------------------------------------------------------------- task path
+    def _pre_store(self, meta: dict, frames) -> None:
+        """Reader-thread half of a task message: pin the fn blob and cache
+        every ``Put`` payload into the plane (frame decode is a zero-copy
+        ``np.frombuffer``, so this stays cheap).  Runs for every task in
+        stream order, whether or not the body later fails — keeping the
+        scheduler's residency/fn ledgers truthful."""
+        blob = meta.get("fn")
+        if blob:
+            with self._fn_lock:
+                self._fn_blobs.setdefault(meta["token"], blob)
+
+        def walk(o):
+            if isinstance(o, Put):
+                try:
+                    self.plane.lookup(o.key)
+                except KeyError:
+                    v = o.value
+                    if isinstance(v, Frame):
+                        v = frame_to_array(frames[v.i])
+                    self.plane.store(o.key, v)
+            elif isinstance(o, (list, tuple)):
+                for x in o:
+                    walk(x)
+            elif isinstance(o, dict):
+                for x in o.values():
+                    walk(x)
+
+        walk(meta["structure"])
+
+    def _fn_for(self, token: int):
+        with self._fn_lock:
+            fn = self._fns.get(token)
+            if fn is None:
+                blob = self._fn_blobs.get(token)
+                if not blob:
+                    raise RuntimeError(f"fn token {token} unknown and no body sent")
+                fn = _loads_fn(blob)
+                self._fns[token] = fn
+            return fn
+
+    def _slot_loop(self, slot: int) -> None:
+        while not self._done.is_set():
+            item = self._slot_queues[slot].get()
+            if item is None:
+                return
+            meta, frames = item
+            mid = meta["mid"]
+            try:
+                fn = self._fn_for(meta["token"])
+                keyed: Dict[int, Tuple[int, int]] = {}
+                args, kwargs = unpack_payload(meta["structure"], frames,
+                                              lookup=self.plane.lookup,
+                                              store=self.plane.store)
+                # keyed ndarray inputs enter the *intra-node* shm plane under
+                # the same (data_id, version), deduping across pool workers
+                for marker_key, v in _keyed_arrays(meta["structure"], self.plane):
+                    keyed[id(v)] = marker_key
+                result = self.pool.invoke(slot, fn, args, kwargs,
+                                          input_keys=keyed)
+                structure, out_frames, tokens = self._encode_result(result)
+                self._reply({"op": "done", "mid": mid, "structure": structure,
+                             "tokens": tokens}, out_frames)
+            except BaseException as err:  # noqa: BLE001 — ships to scheduler
+                tb = traceback.format_exc()
+                try:
+                    enc = pickle.dumps(err, protocol=5)
+                except Exception:
+                    enc = None
+                try:
+                    self._reply({"op": "err", "mid": mid, "exc": enc,
+                                 "tb": f"{type(err).__name__}|{err}|{tb}"})
+                except ConnectionClosed:
+                    return
+            finally:
+                self.pool.task_done()   # reclaim unpublished result segments
+
+    def _encode_result(self, result: Any):
+        """Result ndarrays ride frames; each framed array is parked in the
+        token side-table so a later ``alias`` can pin it into the plane
+        without a round-trip."""
+        frames: List = []
+        tokens: List[int] = []
+
+        def enc(o: Any) -> Any:
+            if isinstance(o, np.ndarray) and frame_eligible(o):
+                with self._token_lock:
+                    token = self._next_token
+                    self._next_token += 1
+                o = as_c_contiguous(o)
+                self.plane.hold(token, o)
+                frames.append(array_frame(o))
+                tokens.append(token)
+                return Frame(len(frames) - 1)
+            if isinstance(o, (list, tuple)):
+                mapped = [enc(x) for x in o]
+                if isinstance(o, tuple):
+                    return type(o)(*mapped) if hasattr(o, "_fields") else tuple(mapped)
+                return mapped
+            if isinstance(o, dict):
+                return {k: enc(v) for k, v in o.items()}
+            return o
+
+        return enc(result), frames, tokens
+
+
+def _keyed_arrays(structure, plane):
+    """Yield ``(key, value)`` for every keyed ndarray the decoded payload
+    contains (both fresh ``Put``s and plane-resident ``Ref``s), so the
+    inner pool's shm plane can dedup them by datum key."""
+    from .protocol import Put, Ref
+
+    out = []
+
+    def walk(o):
+        if isinstance(o, (Ref, Put)):
+            v = plane.lookup(o.key)
+            if isinstance(v, np.ndarray):
+                out.append((o.key, v))
+        elif isinstance(o, (list, tuple)):
+            for x in o:
+                walk(x)
+        elif isinstance(o, dict):
+            for x in o.values():
+                walk(x)
+
+    walk(structure)
+    return out
+
+
+# ------------------------------------------------------------------------ CLI
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.cluster.agent",
+        description="RJAX cluster node agent: connect to a scheduler and "
+                    "serve tasks on a local pool of persistent worker "
+                    "processes.")
+    p.add_argument("--connect", required=True, metavar="HOST:PORT",
+                   help="scheduler address to register with")
+    p.add_argument("--workers", type=int, default=2,
+                   help="worker processes in this node's pool (default 2)")
+    p.add_argument("--node-id", type=int, default=None,
+                   help="node ordinal (assigned by the scheduler if omitted)")
+    p.add_argument("--mp-context", default=None,
+                   help="multiprocessing start method for the pool "
+                        "(fork/spawn; default from RJAX_MP_CONTEXT)")
+    args = p.parse_args(argv)
+
+    # SIGTERM's default action skips all cleanup, which would orphan the
+    # daemon pool workers (they inherit pipes/stdio and can linger
+    # forever).  Raise SystemExit instead so ``run()``'s finally block
+    # shuts the pool down politely.
+    import signal
+
+    def _terminate(signum, frame):
+        raise SystemExit(0)
+
+    signal.signal(signal.SIGTERM, _terminate)
+
+    agent = NodeAgent(args.connect, args.workers, node_id=args.node_id,
+                      mp_context=args.mp_context)
+    try:
+        agent.run()
+    except KeyboardInterrupt:
+        pass
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

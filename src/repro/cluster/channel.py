@@ -1,0 +1,137 @@
+"""Scheduler-side connection to one node agent (DESIGN.md §12).
+
+One TCP connection per agent carries every worker slot's traffic,
+multiplexed by message id: ``request`` blocks the calling dispatcher
+thread until the matching reply arrives, ``post`` is fire-and-forget
+(alias/drop/exit control messages).  A single reader thread per channel
+routes replies; per-connection FIFO ordering is what makes the data-plane
+bookkeeping safe (an ``alias`` posted when a result is published is
+always processed by the agent before any later task that ``Ref``-erences
+the aliased key).
+
+If the agent dies, every pending and future request fails with
+:class:`~repro.cluster.protocol.ConnectionClosed`; the executor maps that
+to a retryable ``WorkerCrashedError`` and respawns the agent.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .protocol import ConnectionClosed, recv_msg, send_msg
+
+
+class _Pending:
+    __slots__ = ("event", "meta", "frames", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.meta: Optional[dict] = None
+        self.frames: Optional[List[memoryview]] = None
+        self.error: Optional[BaseException] = None
+
+
+class AgentChannel:
+    """A registered, live agent connection."""
+
+    def __init__(self, sock: socket.socket, node_id: int, hello: dict):
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass   # not TCP (e.g. a socketpair in tests)
+        self.sock = sock
+        self.node_id = node_id
+        self.hello = hello            # {"workers": N, "pid": ..., "host": ...}
+        self.closed = False
+        self._send_lock = threading.Lock()
+        self._pending: Dict[int, _Pending] = {}
+        self._pending_lock = threading.Lock()
+        self._next_mid = 1
+        self._reader = threading.Thread(target=self._read_loop, daemon=True,
+                                        name=f"agent{node_id}-reader")
+        self._reader.start()
+
+    # ---------------------------------------------------------------- sending
+    def request_async(self, meta: dict, frames: Sequence[Sequence] = ()):
+        """Send a request and return a ``wait(timeout=None)`` callable that
+        blocks for the reply.  Splitting send from wait lets the executor
+        hold its per-agent ordering lock across the send only."""
+        slot = _Pending()
+        with self._pending_lock:
+            if self.closed:
+                raise ConnectionClosed(f"agent {self.node_id} is gone")
+            mid = self._next_mid
+            self._next_mid += 1
+            self._pending[mid] = slot
+        meta = dict(meta, mid=mid)
+        try:
+            with self._send_lock:
+                send_msg(self.sock, meta, frames)
+        except ConnectionClosed:
+            self._fail_all()
+            raise
+
+        def wait(timeout: Optional[float] = None) -> Tuple[dict, List[memoryview]]:
+            if not slot.event.wait(timeout=timeout):
+                with self._pending_lock:
+                    self._pending.pop(mid, None)
+                raise TimeoutError(f"agent {self.node_id} did not reply to "
+                                   f"{meta.get('op')!r} within {timeout}s")
+            if slot.error is not None:
+                raise slot.error
+            return slot.meta, slot.frames
+
+        return wait
+
+    def request(self, meta: dict, frames: Sequence[Sequence] = (),
+                timeout: Optional[float] = None) -> Tuple[dict, List[memoryview]]:
+        return self.request_async(meta, frames)(timeout=timeout)
+
+    def post(self, meta: dict, frames: Sequence[Sequence] = ()) -> None:
+        """Fire-and-forget control message (no reply expected)."""
+        try:
+            with self._send_lock:
+                send_msg(self.sock, meta, frames)
+        except ConnectionClosed:
+            self._fail_all()
+            raise
+
+    # --------------------------------------------------------------- receiving
+    def _read_loop(self) -> None:
+        try:
+            while True:
+                meta, frames = recv_msg(self.sock)
+                mid = meta.get("mid")
+                with self._pending_lock:
+                    slot = self._pending.pop(mid, None)
+                if slot is not None:
+                    slot.meta, slot.frames = meta, frames
+                    slot.event.set()
+        except BaseException as err:  # noqa: BLE001 — a reader that dies
+            # silently (e.g. an unpicklable reply meta) would leave every
+            # dispatcher on this agent blocked forever; ANY exit must fail
+            # the pending requests
+            self._fail_all(err)
+
+    def _fail_all(self, err: Optional[BaseException] = None) -> None:
+        with self._pending_lock:
+            self.closed = True
+            pending = list(self._pending.values())
+            self._pending.clear()
+        for slot in pending:
+            slot.error = err if err is not None else ConnectionClosed(
+                f"agent {self.node_id} connection lost", mid_message=True)
+            slot.event.set()
+
+    # ----------------------------------------------------------------- closing
+    def close(self) -> None:
+        self._fail_all(ConnectionClosed(f"agent {self.node_id} channel closed"))
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,196 @@
+"""Cluster harnesses: who listens, who spawns agents (DESIGN.md §12).
+
+The scheduler side always *listens*; agents always *dial in* (the
+``--connect`` flag), because in real deployments the scheduler's address
+is the one thing every node knows.  ``LocalCluster`` packages that for a
+single machine: bind an ephemeral localhost port, spawn N agent
+subprocesses pointed at it, and hand the listener to the cluster executor
+so it can accept the registrations.  With ``spawn=False`` it degrades to
+a plain listener for externally-started agents (real multi-node: run
+``python -m repro.cluster.agent --connect HOST:PORT --workers N`` on each
+node yourself).
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+from typing import List, Optional
+
+from .channel import AgentChannel
+from .protocol import recv_msg, send_msg
+
+
+def _repro_pythonpath() -> str:
+    """A PYTHONPATH under which agent subprocesses can import ``repro``
+    AND resolve by-reference pickled task functions from the caller's
+    modules (e.g. a test module pytest put on ``sys.path``) — the full
+    parent search path is propagated, deduplicated, order-preserved."""
+    import repro
+    # repro is a namespace package: __path__[0] is .../src/repro
+    root = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    parts = [root] + [p for p in sys.path if p]
+    return os.pathsep.join(dict.fromkeys(parts))
+
+
+class LocalCluster:
+    """Spawn-and-listen harness for N node agents on this machine.
+
+    Usage::
+
+        with LocalCluster(n_agents=2, workers_per_node=2) as cluster:
+            rt = api.runtime_start(backend="cluster", cluster=cluster)
+            ...
+            api.runtime_stop()   # also tears the agents down
+
+    The runtime's cluster executor calls :meth:`accept_agents` during
+    startup and :meth:`respawn` when an agent dies.
+    """
+
+    def __init__(self, n_agents: int = 2, workers_per_node: int = 2,
+                 host: str = "127.0.0.1", port: int = 0, spawn: bool = True,
+                 agent_args: Optional[List[str]] = None):
+        self.n_agents = int(n_agents)
+        self.workers_per_node = int(workers_per_node)
+        self.spawn = spawn
+        self._lock = threading.Lock()
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, port))
+        self._listener.listen(self.n_agents * 2 + 2)
+        self.address = "%s:%d" % self._listener.getsockname()[:2]
+        self._agent_args = list(agent_args or ())
+        self._procs: List[Optional[subprocess.Popen]] = [None] * self.n_agents
+        self._closed = False
+        if spawn:
+            for i in range(self.n_agents):
+                self._spawn(i)
+
+    # ------------------------------------------------------------- spawning
+    def _spawn(self, i: int) -> None:
+        env = dict(os.environ, PYTHONPATH=_repro_pythonpath())
+        cmd = [sys.executable, "-m", "repro.cluster.agent",
+               "--connect", self.address,
+               "--workers", str(self.workers_per_node),
+               "--node-id", str(i), *self._agent_args]
+        self._procs[i] = subprocess.Popen(cmd, env=env)
+
+    @property
+    def can_respawn(self) -> bool:
+        return self.spawn and not self._closed
+
+    # ----------------------------------------------------------- accepting
+    def _accept_one(self, timeout: float):
+        self._listener.settimeout(timeout)
+        try:
+            conn, _ = self._listener.accept()
+        except socket.timeout:
+            raise TimeoutError(
+                f"no agent registered with {self.address} within {timeout}s")
+        finally:
+            self._listener.settimeout(None)
+        # the handshake gets the same deadline: a connected-but-silent peer
+        # (port scanner, stalled agent) must not hang registration forever
+        conn.settimeout(timeout)
+        try:
+            hello, _ = recv_msg(conn)
+        except Exception as err:
+            conn.close()
+            raise ConnectionError(
+                f"agent handshake on {self.address} failed or timed out "
+                f"after {timeout}s: {err}") from err
+        conn.settimeout(None)
+        if hello.get("op") != "hello":
+            conn.close()
+            raise ConnectionError(f"bad registration message: {hello}")
+        return conn, hello
+
+    def accept_agents(self, timeout: float = 60.0) -> List[AgentChannel]:
+        """Accept ``n_agents`` registrations; returns channels ordered by
+        node id.  Defensive against externally-launched agents
+        (``spawn=False``): a wrong ``--workers`` is rejected outright (the
+        scheduler's slot math depends on it), and an out-of-range or
+        duplicate ``--node-id`` is treated as unassigned."""
+        raw = [self._accept_one(timeout) for _ in range(self.n_agents)]
+        for conn, hello in raw:
+            if int(hello.get("workers", -1)) != self.workers_per_node:
+                msg = (f"agent pid={hello.get('pid')} registered with "
+                       f"--workers {hello.get('workers')} but this cluster "
+                       f"requires workers_per_node={self.workers_per_node}")
+                for c, _ in raw:
+                    c.close()
+                raise ConnectionError(msg)
+        taken = set()
+        for _, h in raw:   # claim valid, non-duplicate explicit node ids
+            nid = h.get("node_id")
+            if nid is not None and 0 <= nid < self.n_agents and nid not in taken:
+                taken.add(nid)
+            else:
+                h["node_id"] = None
+        free = iter(i for i in range(self.n_agents) if i not in taken)
+        channels: List[Optional[AgentChannel]] = [None] * self.n_agents
+        for conn, hello in raw:
+            nid = hello.get("node_id")
+            if nid is None:
+                nid = next(free)
+            send_msg(conn, {"op": "welcome", "node_id": nid})
+            channels[nid] = AgentChannel(conn, nid, hello)
+        return channels
+
+    def respawn(self, i: int, timeout: float = 60.0) -> AgentChannel:
+        """Replace a dead agent: kill leftovers, spawn a fresh process,
+        accept its registration."""
+        with self._lock:
+            if not self.can_respawn:
+                raise RuntimeError("cluster cannot respawn agents")
+            proc = self._procs[i]
+            if proc is not None and proc.poll() is None:
+                proc.kill()
+                proc.wait(timeout=5.0)
+            self._spawn(i)
+            conn, hello = self._accept_one(timeout)
+            send_msg(conn, {"op": "welcome", "node_id": i})
+            return AgentChannel(conn, i, hello)
+
+    # ------------------------------------------------------------ teardown
+    def shutdown(self, timeout: float = 5.0) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        # grace period: the executor posts "exit" before calling us, so
+        # agents are usually mid-teardown — let them finish cleanly (a
+        # SIGTERM racing the pool shutdown risks leaving worker processes
+        # behind on platforms where the signal wins)
+        deadline = time.monotonic() + 2.0
+        while time.monotonic() < deadline:
+            if all(p is None or p.poll() is not None for p in self._procs):
+                break
+            time.sleep(0.05)
+        for p in self._procs:
+            if p is None or p.poll() is not None:
+                continue
+            try:
+                p.terminate()
+            except OSError:
+                pass
+        for p in self._procs:
+            if p is None:
+                continue
+            try:
+                p.wait(timeout=timeout)
+            except subprocess.TimeoutExpired:
+                p.kill()
+                p.wait(timeout=2.0)
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "LocalCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,291 @@
+"""Length-prefixed wire protocol for the cluster data plane (DESIGN.md §12).
+
+A *message* is a batch of frames::
+
+    [4s magic "RJW1"][u64 n_frames][u64 len_0 ... u64 len_{n-1}]
+    [frame_0][frame_1]...[frame_{n-1}]
+
+Frame 0 is always pickled metadata (a dict).  Frames 1.. are ndarray
+payloads in the ``raw``-codec layout from :mod:`repro.core.serialization`
+(packed header + contiguous buffer).  On send, the array's own buffer is
+handed to ``sendall`` as a memoryview — no intermediate serialized copy
+(non-contiguous inputs are copied contiguous first, the codec's
+copy-on-encode rule).  On receive, each frame lands in one freshly
+allocated buffer and is reconstructed zero-copy with ``np.frombuffer``.
+
+All length fields are unsigned 64-bit, so single frames and messages
+beyond 4 GiB are representable (dask's comm core made the same choice
+after real workloads hit the u32 ceiling).
+
+Structure packing (``pack_payload`` / ``unpack_payload``) turns a nested
+args/kwargs structure into (picklable metadata, frame list) using three
+markers:
+
+* ``Frame(i)``     — the value is ndarray frame *i* of the message;
+* ``Ref(key)``     — the value is already cached in the receiving node's
+                     object plane under ``(data_id, version)``;
+* ``Put(key, v)``  — cache ``v`` (itself possibly a ``Frame``) under
+                     ``key``, then use it — the send-once half of the
+                     send-once/reuse-many property.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.serialization import _pack_header, _unpack_header, as_c_contiguous
+
+MAGIC = b"RJW1"
+_HEAD = struct.Struct("<4sQ")        # magic, n_frames
+_U64 = struct.Struct("<Q")
+
+# frames are for raw-codec-eligible ndarrays; anything smaller than this
+# is cheaper pickled inline in the metadata frame (keyed data is framed
+# regardless — it gets cached and reused on the far side)
+WIRE_MIN_FRAME_BYTES = 1024
+
+
+class ConnectionClosed(ConnectionError):
+    """The peer went away.  ``mid_message`` distinguishes a clean close
+    between messages from a cut mid-frame (both are fatal for the
+    connection; the executor surfaces either as a retryable
+    ``WorkerCrashedError``)."""
+
+    def __init__(self, message: str = "connection closed", mid_message: bool = False):
+        super().__init__(message)
+        self.mid_message = mid_message
+
+
+# ------------------------------------------------------------------ raw I/O
+def recv_exactly(sock, n: int, mid_message: bool = True) -> memoryview:
+    """Read exactly ``n`` bytes, tolerating arbitrarily short reads."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        try:
+            k = sock.recv_into(view[got:])
+        except (ConnectionResetError, BrokenPipeError, OSError) as err:
+            raise ConnectionClosed(str(err) or "connection reset",
+                                   mid_message=mid_message or got > 0) from err
+        if k == 0:
+            raise ConnectionClosed("peer closed the connection",
+                                   mid_message=mid_message or got > 0)
+        got += k
+    return view
+
+
+def send_msg(sock, meta: dict, frames: Sequence[Sequence] = ()) -> None:
+    """Send one message.  Each entry of ``frames`` is a list of buffer
+    parts (bytes/memoryview) forming one frame; parts are written straight
+    to the socket, so an ndarray's buffer never passes through an
+    intermediate serialized blob."""
+    meta_blob = pickle.dumps(meta, protocol=5)
+    lengths = [len(meta_blob)] + [sum(len(p) for p in f) for f in frames]
+    header = _HEAD.pack(MAGIC, len(lengths)) + b"".join(_U64.pack(l) for l in lengths)
+    try:
+        sock.sendall(header)
+        sock.sendall(meta_blob)
+        for f in frames:
+            for part in f:
+                sock.sendall(part)
+    except (ConnectionResetError, BrokenPipeError, OSError) as err:
+        raise ConnectionClosed(str(err) or "send failed", mid_message=True) from err
+
+
+def recv_msg(sock) -> Tuple[dict, List[memoryview]]:
+    """Receive one message: ``(metadata, [frame, ...])``.  Frames come back
+    as memoryviews over freshly-owned buffers (safe to keep)."""
+    head = recv_exactly(sock, _HEAD.size, mid_message=False)
+    magic, n_frames = _HEAD.unpack(head)
+    if magic != MAGIC:
+        raise ConnectionClosed(f"bad magic {bytes(magic)!r} on wire", mid_message=True)
+    lens_buf = recv_exactly(sock, 8 * n_frames)
+    lengths = struct.unpack(f"<{n_frames}Q", lens_buf)
+    meta = pickle.loads(recv_exactly(sock, lengths[0]))
+    frames = [recv_exactly(sock, l) for l in lengths[1:]]
+    return meta, frames
+
+
+# ------------------------------------------------------------ ndarray frames
+def array_frame(arr: np.ndarray) -> List:
+    """An ndarray as raw-codec frame parts: ``[packed header, buffer]``.
+    Copy-on-encode for non-contiguous inputs (sliced/Fortran/0-d views);
+    contiguous arrays ship their own buffer."""
+    arr = as_c_contiguous(arr)
+    return [_pack_header(arr), memoryview(arr).cast("B")]
+
+
+def frame_to_array(frame) -> np.ndarray:
+    """Zero-copy reconstruction (the RMVL deserialize-side property).
+    Accepts a received contiguous buffer, or an unsent part-list straight
+    from :func:`array_frame` (loopback/testing)."""
+    if isinstance(frame, (list, tuple)):
+        frame = memoryview(b"".join(bytes(p) for p in frame))
+    dtype, shape, off = _unpack_header(frame)
+    count = int(np.prod(shape, dtype=np.int64)) if shape else 1
+    arr = np.frombuffer(frame, dtype=dtype, offset=off, count=count).reshape(shape)
+    arr.flags.writeable = False
+    return arr
+
+
+def frame_eligible(arr: np.ndarray) -> bool:
+    if arr.dtype.hasobject:
+        return False
+    try:
+        _pack_header(arr)
+        return True
+    except TypeError:  # dtype outside the raw-codec table
+        return False
+
+
+# -------------------------------------------------------- structure markers
+class Frame:
+    """Placeholder: the value is ndarray frame ``i`` of this message."""
+
+    __slots__ = ("i",)
+
+    def __init__(self, i: int):
+        self.i = i
+
+    def __getstate__(self):
+        return self.i
+
+    def __setstate__(self, state):
+        self.i = state
+
+
+class Ref:
+    """Placeholder: the value is plane-resident under ``key`` on the
+    receiving node (the reuse-many half)."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, key: Tuple[int, int]):
+        self.key = key
+
+    def __getstate__(self):
+        return self.key
+
+    def __setstate__(self, state):
+        self.key = state
+
+
+class Put:
+    """Placeholder: cache ``value`` under ``key`` on the receiving node,
+    then use it (``value`` may itself be a ``Frame``)."""
+
+    __slots__ = ("key", "value")
+
+    def __init__(self, key: Tuple[int, int], value: Any):
+        self.key = key
+        self.value = value
+
+    def __getstate__(self):
+        return (self.key, self.value)
+
+    def __setstate__(self, state):
+        self.key, self.value = state
+
+
+_MARKERS = (Frame, Ref, Put)
+
+
+def pack_payload(
+    obj: Any,
+    input_keys: Optional[Dict[int, Tuple[int, int]]] = None,
+    resident: Optional[set] = None,
+) -> Tuple[Any, List, Dict[str, Any]]:
+    """Encode a nested structure for the wire.
+
+    Keyed ndarrays (``id(value)`` in ``input_keys``) become ``Ref`` when
+    ``key`` is in ``resident`` (the receiver already holds them) and
+    ``Put`` otherwise; raw-eligible ndarrays ride out-of-band frames,
+    everything else stays inline for frame 0's pickle.  Returns
+    ``(structure, frames, info)`` where ``info`` reports the ``Put`` keys
+    and bytes (the executor's data-plane ledger) and the ``Ref`` count
+    (dedup wins).
+    """
+    input_keys = input_keys or {}
+    resident = resident if resident is not None else set()
+    frames: List = []
+    info = {"put_keys": [], "put_bytes": 0, "refs": 0}
+    put_in_msg: set = set()   # intra-message dedup: same datum twice = one Put
+
+    def frame_of(arr: np.ndarray) -> Frame:
+        frames.append(array_frame(arr))
+        return Frame(len(frames) - 1)
+
+    def walk(o: Any) -> Any:
+        if isinstance(o, np.ndarray):
+            key = input_keys.get(id(o))
+            if key is not None:
+                if key in resident or key in put_in_msg:
+                    info["refs"] += 1
+                    return Ref(key)
+                put_in_msg.add(key)
+                info["put_keys"].append(key)
+                info["put_bytes"] += int(o.nbytes)
+                return Put(key, frame_of(o) if frame_eligible(o) else o)
+            if frame_eligible(o) and o.nbytes >= WIRE_MIN_FRAME_BYTES:
+                return frame_of(o)
+            return o
+        if isinstance(o, (list, tuple)):
+            mapped = [walk(x) for x in o]
+            if isinstance(o, tuple):
+                return type(o)(*mapped) if hasattr(o, "_fields") else tuple(mapped)
+            return mapped
+        if isinstance(o, dict):
+            return {k: walk(v) for k, v in o.items()}
+        return o
+
+    return walk(obj), frames, info
+
+
+def unpack_payload(
+    structure: Any,
+    frames: Sequence[memoryview],
+    lookup: Optional[Callable[[Tuple[int, int]], Any]] = None,
+    store: Optional[Callable[[Tuple[int, int], Any], None]] = None,
+) -> Any:
+    """Decode a ``pack_payload`` structure.  ``lookup(key)`` resolves
+    ``Ref`` markers from the local plane; ``store(key, value)`` caches
+    ``Put`` payloads into it."""
+
+    def walk(o: Any) -> Any:
+        if isinstance(o, Frame):
+            return frame_to_array(frames[o.i])
+        if isinstance(o, Ref):
+            if lookup is None:
+                raise ValueError("Ref marker but no plane lookup provided")
+            return lookup(o.key)
+        if isinstance(o, Put):
+            if lookup is not None:
+                # already cached (e.g. the receiver pre-stored Puts on its
+                # reader thread): reuse THAT object so identity-keyed
+                # downstream dedup sees one value per datum.  Missing may
+                # surface as KeyError or None (dict.get-style lookups);
+                # cached Put values are ndarrays, never None.
+                try:
+                    cached = lookup(o.key)
+                except KeyError:
+                    cached = None
+                if cached is not None:
+                    return cached
+            v = walk(o.value)
+            if store is not None:
+                store(o.key, v)
+            return v
+        if isinstance(o, (list, tuple)):
+            mapped = [walk(x) for x in o]
+            if isinstance(o, tuple):
+                return type(o)(*mapped) if hasattr(o, "_fields") else tuple(mapped)
+            return mapped
+        if isinstance(o, dict):
+            return {k: walk(v) for k, v in o.items()}
+        return o
+
+    return walk(structure)

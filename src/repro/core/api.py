@@ -50,6 +50,8 @@ def runtime_start(
     speculation: bool = False,
     speculation_factor: float = 3.0,
     backend: str = "thread",
+    cluster=None,
+    n_agents: Optional[int] = None,
 ) -> Runtime:
     """Initialize the global runtime (``compss_start``).
 
@@ -57,7 +59,14 @@ def runtime_start(
     :mod:`repro.core.executors`): ``"thread"`` runs task bodies on the
     dispatcher threads in this address space; ``"process"`` runs them in
     persistent worker processes behind a shared-memory object plane (the
-    paper's per-node worker architecture, §3.3.2)."""
+    paper's per-node worker architecture, §3.3.2); ``"cluster"`` runs
+    them on real TCP node agents (DESIGN.md §12) — pass a started
+    ``cluster=`` harness (e.g. ``repro.cluster.LocalCluster``, which also
+    accepts externally-launched ``python -m repro.cluster.agent``
+    processes with ``spawn=False``), or just ``n_agents=N`` to spawn a
+    localhost cluster with ``workers_per_node`` workers on each agent.
+    Under ``"cluster"``, ``n_workers`` is derived:
+    ``n_agents × workers_per_node``."""
     global _runtime
     with _lock:
         if _runtime is not None and not _runtime._stopped:
@@ -70,6 +79,8 @@ def runtime_start(
             retry=RetryPolicy(max_retries=max_retries),
             speculation=SpeculationConfig(enabled=speculation, factor=speculation_factor),
             backend=backend,
+            cluster=cluster,
+            n_agents=n_agents,
         )
         return _runtime
 

@@ -8,6 +8,13 @@ differ only in **where** the function body runs:
 * ``"thread"``   — in the dispatcher thread itself (the original model:
                    shared address space, values passed by reference; great
                    for NumPy/JAX tasks that release the GIL).
+* ``"cluster"``  — in one of N persistent worker processes *on a remote
+                   node agent* reached over TCP (DESIGN.md §12): the
+                   scheduler ships task bodies and only the inputs the
+                   target node does not already hold across a wire-framed
+                   data plane (:mod:`repro.cluster`), and every node runs
+                   its own ``"process"``-style pool, so the shared-memory
+                   plane below serves as the intra-node tier.
 * ``"process"``  — in one of N *persistent* worker processes forked at
                    runtime start (the paper's worker model: Python-level
                    task bodies run truly in parallel, unconstrained by the
@@ -48,7 +55,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from .serialization import _pack_header, _unpack_header
+from .serialization import _pack_header, _unpack_header, as_c_contiguous
 
 try:  # optional, but present in the baked image; required for lambda tasks
     import cloudpickle as _cloudpickle
@@ -158,7 +165,7 @@ class ShmRef:
 
 
 def _array_to_segment(arr: np.ndarray) -> Tuple[_shm_mod.SharedMemory, ShmRef]:
-    arr = np.ascontiguousarray(arr)
+    arr = as_c_contiguous(arr)
     header = _pack_header(arr)
     seg = _shm_mod.SharedMemory(create=True, size=max(1, arr.nbytes))
     if arr.nbytes:
@@ -321,6 +328,26 @@ class _WorkerSegmentCache:
         self._cache.clear()
 
 
+def _dumps_fn(fn: Callable) -> bytes:
+    """Serialize a task function for another address space.
+
+    Functions living in ``__main__`` don't resolve by *reference* in a
+    process with a different ``__main__`` (a TCP node agent, a
+    spawn-context worker), so those ship by *value* via cloudpickle;
+    everything else tries stdlib pickle first, falling back to
+    cloudpickle for lambdas/closures."""
+    by_value = getattr(fn, "__module__", None) in (None, "__main__")
+    if not by_value:
+        try:
+            return b"P" + pickle.dumps(fn, protocol=5)
+        except Exception:
+            pass
+    if _cloudpickle is not None:
+        return b"C" + _cloudpickle.dumps(fn)
+    # forked workers share our __main__, so by-reference still works there
+    return b"P" + pickle.dumps(fn, protocol=5)
+
+
 def _loads_fn(blob: bytes) -> Callable:
     tag, body = blob[:1], blob[1:]
     if tag == b"P":
@@ -330,6 +357,32 @@ def _loads_fn(blob: bytes) -> Callable:
             raise RuntimeError("cloudpickle unavailable in worker")
         return _cloudpickle.loads(body)
     raise RuntimeError("function body missing from worker cache")
+
+
+class _FnRegistry:
+    """Token registry for serialized task functions: one monotonically
+    increasing token per distinct function object, so each boundary (a
+    worker pipe, an agent socket) sees a function body at most once.  The
+    cached strong ref keeps ``id(fn)`` unique while cached; the registry
+    is bounded by ``RJAX_FN_CACHE_MAX``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cache: Dict[int, Tuple[int, Any, bytes]] = {}
+        self._next_token = 1
+
+    def entry(self, fn: Callable) -> Tuple[int, bytes]:
+        with self._lock:
+            entry = self._cache.get(id(fn))
+            if entry is not None and entry[1] is fn:
+                return entry[0], entry[2]
+            blob = _dumps_fn(fn)
+            token = self._next_token
+            self._next_token += 1
+            self._cache[id(fn)] = (token, fn, blob)
+            while len(self._cache) > _FN_CACHE_MAX:
+                self._cache.pop(next(iter(self._cache)))
+            return token, blob
 
 
 def _encode_result(result: Any, cache: "_WorkerSegmentCache"
@@ -355,8 +408,13 @@ def _encode_result(result: Any, cache: "_WorkerSegmentCache"
         return _cloudpickle.dumps(structure), created
 
 
-def _worker_main(conn, worker_index: int) -> None:
+def _worker_main(conn, worker_index: int, close_fds: tuple = ()) -> None:
     """Persistent worker loop: one process, many tasks (§3.3.2)."""
+    for fd in close_fds:   # inherited sibling/parent fds — see _spawn
+        try:
+            os.close(fd)
+        except OSError:
+            pass
     cache = _WorkerSegmentCache()
     fns: Dict[int, Callable] = {}
     try:
@@ -391,9 +449,14 @@ def _worker_main(conn, worker_index: int) -> None:
                 tb = traceback.format_exc()
                 try:
                     conn.send(("err", pickle.dumps(err, protocol=5), tb))
+                except (BrokenPipeError, ConnectionResetError):
+                    break   # parent is gone — exit quietly
                 except Exception:
-                    conn.send(("err", None,
-                               f"{type(err).__name__}|{err}|{tb}"))
+                    try:
+                        conn.send(("err", None,
+                                   f"{type(err).__name__}|{err}|{tb}"))
+                    except OSError:
+                        break
     finally:
         cache.close()
         try:
@@ -482,19 +545,24 @@ class ProcessExecutor(ExecutorBackend):
         except ValueError:
             self._ctx = get_context("spawn")
         self.plane = SegmentPlane()
-        self._fn_cache: Dict[int, Tuple[int, Any, bytes]] = {}  # id(fn) -> (token, fn, blob)
-        self._next_token = 1
-        self._fn_lock = threading.Lock()
+        self._fns = _FnRegistry()
         self._procs: List[Any] = [None] * self.n_workers
         self._conns: List[Any] = [None] * self.n_workers
         self._conn_locks = [threading.Lock() for _ in range(self.n_workers)]
         self._shipped: List[Set[int]] = [set() for _ in range(self.n_workers)]
+        # fds (beyond sibling pipe ends) that forked workers must close so
+        # a dead parent actually EOFs its peers — e.g. the node agent's TCP
+        # socket: a worker inheriting it would keep the scheduler's
+        # connection half-open after the agent dies, masking the crash
+        self.inherit_blockers: List[int] = []
         self._tl = threading.local()   # per-dispatcher decoded-view registry
         self._closing = False
         self.worker_restarts = 0
 
     # -- process management --------------------------------------------------
-    def start(self, runtime) -> None:
+    def spawn_workers(self) -> None:
+        """Fork the persistent worker pool.  Public because the cluster
+        node agent drives this pool directly (no dispatcher threads)."""
         # the tracker must exist BEFORE the first fork, or each worker
         # lazily starts its own and the one-tracker accounting (and the
         # crash safety-net) silently fragments
@@ -503,40 +571,43 @@ class ProcessExecutor(ExecutorBackend):
             resource_tracker.ensure_running()
         except Exception:
             pass
-        # fork the workers *before* the dispatcher threads exist: forking a
-        # multithreaded process risks inheriting locks held mid-operation
         for w in range(self.n_workers):
             self._spawn(w)
+
+    def start(self, runtime) -> None:
+        # fork the workers *before* the dispatcher threads exist: forking a
+        # multithreaded process risks inheriting locks held mid-operation
+        self.spawn_workers()
         super().start(runtime)
 
     def _spawn(self, worker: int) -> None:
         parent, child = self._ctx.Pipe(duplex=True)
-        p = self._ctx.Process(target=_worker_main, args=(child, worker),
+        close_fds: List[int] = []
+        if self._ctx.get_start_method() == "fork":
+            # a forked worker inherits the parent-side pipe end of every
+            # worker spawned so far — INCLUDING ITS OWN — plus any
+            # registered blocker fd.  Unless the child closes them, a dead
+            # parent never EOFs the pipe (the worker itself keeps it open)
+            # and orphaned workers block forever in recv()
+            try:
+                close_fds.append(parent.fileno())
+            except (OSError, ValueError):
+                pass
+            for c in self._conns:
+                if c is not None and c is not parent:
+                    try:
+                        close_fds.append(c.fileno())
+                    except (OSError, ValueError):
+                        pass
+            close_fds.extend(self.inherit_blockers)
+        p = self._ctx.Process(target=_worker_main,
+                              args=(child, worker, tuple(close_fds)),
                               daemon=True, name=f"{self.label}-p{worker}")
         p.start()
         child.close()
         self._procs[worker] = p
         self._conns[worker] = parent
         self._shipped[worker] = set()
-
-    def _fn_entry(self, fn: Callable) -> Tuple[int, bytes]:
-        with self._fn_lock:
-            entry = self._fn_cache.get(id(fn))
-            if entry is not None and entry[1] is fn:
-                return entry[0], entry[2]
-            try:
-                blob = b"P" + pickle.dumps(fn, protocol=5)
-            except Exception:
-                if _cloudpickle is None:
-                    raise
-                blob = b"C" + _cloudpickle.dumps(fn)
-            token = self._next_token
-            self._next_token += 1
-            # the cached strong ref to fn keeps id(fn) unique while cached
-            self._fn_cache[id(fn)] = (token, fn, blob)
-            while len(self._fn_cache) > _FN_CACHE_MAX:
-                self._fn_cache.pop(next(iter(self._fn_cache)))
-            return token, blob
 
     # -- the object plane ----------------------------------------------------
     def _encode_inputs(self, args: tuple, kwargs: dict,
@@ -592,7 +663,7 @@ class ProcessExecutor(ExecutorBackend):
 
     # -- invocation ----------------------------------------------------------
     def invoke(self, worker, fn, args, kwargs, input_keys=None):
-        token, blob = self._fn_entry(fn)
+        token, blob = self._fns.entry(fn)
         payload = self._encode_inputs(args, kwargs, input_keys or {})
         with self._conn_locks[worker]:
             conn = self._conns[worker]
@@ -633,6 +704,12 @@ class ProcessExecutor(ExecutorBackend):
                 proc.join(timeout=2.0)
         except Exception:
             pass
+        old = self._conns[worker]
+        if old is not None:
+            try:
+                old.close()
+            except Exception:
+                pass
         self._spawn(worker)
 
     # -- lifecycle -----------------------------------------------------------
@@ -675,7 +752,247 @@ class ProcessExecutor(ExecutorBackend):
         return s
 
 
-BACKENDS = {"thread": ThreadExecutor, "process": ProcessExecutor}
+class ClusterExecutor(ExecutorBackend):
+    """Dispatch tasks to TCP node agents (DESIGN.md §12).
+
+    One dispatcher thread per remote worker *slot* (``n_agents ×
+    workers_per_node`` in total); slot ``worker`` maps to agent
+    ``worker // workers_per_node``, which is also the task's locality
+    domain, so the ``locality`` policy scores real cross-node residency.
+
+    Data plane: the scheduler keeps the authoritative copy of every datum
+    (v1 is scheduler-mediated transfer) and tracks, per agent, which keys
+    that node already caches.  A keyed ndarray input is shipped inside the
+    task message (``Put``) the *first* time a node needs it and referenced
+    (``Ref``) ever after — the wire-level send-once/reuse-many property.
+    Result arrays come back tagged with agent-side cache tokens; when the
+    runtime publishes them, an ``alias`` control message pins them into
+    the producing node's plane under their datum key, so a node never
+    re-downloads its own outputs.
+
+    Per-agent consistency relies on connection FIFO ordering: residency
+    marks and the messages that justify them are emitted under one
+    per-agent ordering lock, so a ``Ref`` can never overtake its ``Put``
+    or ``alias`` on the wire.
+
+    Failure model: a dropped agent connection surfaces as a retryable
+    :class:`WorkerCrashedError`; if the cluster harness can respawn the
+    agent, the executor does so and clears that node's residency ledger,
+    after which retries re-ship whatever the replacement needs.
+    """
+
+    name = "cluster"
+
+    def __init__(self, n_workers: int, label: str = "rjax", cluster=None):
+        super().__init__(n_workers, label)
+        if cluster is None:
+            raise ValueError(
+                'backend="cluster" needs a cluster= harness '
+                "(e.g. repro.cluster.LocalCluster)")
+        self.cluster = cluster
+        self.n_agents = int(cluster.n_agents)
+        self.wpn = int(cluster.workers_per_node)
+        if self.n_workers != self.n_agents * self.wpn:
+            raise ValueError(
+                f"n_workers={self.n_workers} != n_agents({self.n_agents}) x "
+                f"workers_per_node({self.wpn})")
+        self._channels: List[Any] = [None] * self.n_agents
+        self._order_locks = [threading.Lock() for _ in range(self.n_agents)]
+        self._restart_lock = threading.Lock()
+        self._resident: List[Set[Tuple[int, int]]] = [set() for _ in range(self.n_agents)]
+        self._shipped_fns: List[Set[int]] = [set() for _ in range(self.n_agents)]
+        self._fns = _FnRegistry()
+        self._tl = threading.local()
+        self._closing = False
+        self.agent_restarts = 0
+        self.puts = 0              # keyed ndarrays shipped to some node
+        self.refs = 0              # keyed ndarrays referenced, not re-shipped
+        self.bytes_shipped = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self, runtime) -> None:
+        try:
+            self._channels = self.cluster.accept_agents()
+        except Exception:
+            self.cluster.shutdown()
+            raise
+        super().start(runtime)
+
+    def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
+        from ..cluster.protocol import ConnectionClosed
+        self._closing = True
+        for ch in self._channels:
+            if ch is not None and not ch.closed:
+                try:
+                    ch.post({"op": "exit"})
+                except ConnectionClosed:
+                    pass
+        super().shutdown(wait=wait, timeout=timeout)
+        for ch in self._channels:
+            if ch is not None:
+                ch.close()
+        try:
+            self.cluster.shutdown()
+        except Exception:
+            pass
+
+    # -- invocation ----------------------------------------------------------
+    def invoke(self, worker, fn, args, kwargs, input_keys=None):
+        from ..cluster.protocol import ConnectionClosed, pack_payload
+        a, slot = divmod(worker, self.wpn)
+        ch = self._channels[a]
+        if ch is None or ch.closed:
+            if not self._closing:
+                self._restart_agent(a, ch)   # no-op if already replaced
+            ch = self._channels[a]
+            if ch is None or ch.closed:
+                raise WorkerCrashedError(f"node agent {a} is down")
+        token, blob = self._fns.entry(fn)
+        try:
+            with self._order_locks[a]:
+                structure, frames, info = pack_payload(
+                    (args, kwargs), input_keys or {}, self._resident[a])
+                meta = {"op": "task", "slot": slot, "token": token,
+                        "structure": structure}
+                if token not in self._shipped_fns[a]:
+                    meta["fn"] = blob
+                waiter = ch.request_async(meta, frames)
+                self._shipped_fns[a].add(token)
+                self._resident[a].update(info["put_keys"])
+                self.puts += len(info["put_keys"])
+                self.refs += info["refs"]
+                self.bytes_shipped += info["put_bytes"]
+            rmeta, rframes = waiter()
+        except (ConnectionClosed, OSError) as err:
+            if not self._closing:
+                self._restart_agent(a, ch)
+            raise WorkerCrashedError(
+                f"node agent {a} died executing "
+                f"{getattr(fn, '__name__', fn)!r}") from err
+        if rmeta["op"] == "done":
+            return self._decode_result(a, ch, rmeta, rframes)
+        enc, tb = rmeta.get("exc"), rmeta.get("tb")
+        if enc is not None:
+            try:
+                exc = pickle.loads(enc)
+            except Exception:
+                exc = None
+            if isinstance(exc, BaseException):
+                raise exc from RemoteTaskError(type(exc).__name__,
+                                               str(exc), tb or "")
+        type_name, _, rest = (tb or "RemoteTaskError||").partition("|")
+        message, _, tb_text = rest.partition("|")
+        raise RemoteTaskError(type_name, message, tb_text)
+
+    def _decode_result(self, a: int, ch, rmeta: dict, rframes) -> Any:
+        from ..cluster.protocol import Frame, frame_to_array
+        tokens = rmeta.get("tokens") or []
+        views: Dict[int, Tuple[int, int, Any]] = {}
+
+        def dec(marker: Frame):
+            arr = frame_to_array(rframes[marker.i])
+            # the token is only meaningful on the exact connection that
+            # minted it — a respawned agent restarts its counter, so
+            # publish/drop must verify channel identity, not just index
+            views[id(arr)] = (a, tokens[marker.i], ch)
+            return arr
+
+        result = _walk(rmeta["structure"], dec, (Frame,))
+        self._tl.views = views   # consumed by publish() in the same thread
+        return result
+
+    # -- data-plane hooks ----------------------------------------------------
+    def publish(self, key, value):
+        """The runtime bound a just-returned result to ``(data_id,
+        version)``: pin it into the producing node's plane via ``alias``
+        so later tasks there reference it without a wire crossing."""
+        from ..cluster.protocol import ConnectionClosed
+        views = getattr(self._tl, "views", None)
+        if not views or not isinstance(value, np.ndarray):
+            return
+        entry = views.pop(id(value), None)
+        if entry is None:
+            return
+        a, token, ch = entry
+        if ch.closed or self._channels[a] is not ch:
+            return   # agent died/respawned since: the token is meaningless
+        try:
+            with self._order_locks[a]:
+                if self._channels[a] is not ch:   # re-check under the lock
+                    return
+                ch.post({"op": "alias", "token": token, "key": tuple(key)})
+                self._resident[a].add(tuple(key))
+        except ConnectionClosed:
+            pass   # the restart path resets this node's residency ledger
+
+    def task_done(self):
+        """Drop result tokens that were never published (discarded
+        outputs, lost speculation races) so agent side-tables don't grow."""
+        from ..cluster.protocol import ConnectionClosed
+        views = getattr(self._tl, "views", None)
+        if views:
+            for a, token, ch in views.values():
+                if not ch.closed and self._channels[a] is ch:
+                    try:
+                        ch.post({"op": "drop", "token": token})
+                    except ConnectionClosed:
+                        pass
+        self._tl.views = None
+
+    # -- failure handling ----------------------------------------------------
+    def _restart_agent(self, a: int, failed_ch) -> None:
+        with self._restart_lock:
+            if self._channels[a] is not failed_ch:
+                return   # another dispatcher already replaced it
+            if failed_ch is not None:
+                failed_ch.close()
+            if not getattr(self.cluster, "can_respawn", False):
+                return
+            try:
+                new_ch = self.cluster.respawn(a)
+            except Exception:
+                return
+            with self._order_locks[a]:
+                self._resident[a] = set()
+                self._shipped_fns[a] = set()
+                self._channels[a] = new_ch
+            # the store's residency metadata must die with the agent too,
+            # or locality keeps steering reads at data the replacement
+            # doesn't hold and the transfer ledger undercounts re-ships
+            if self.runtime is not None:
+                self.runtime.store.forget_node(a)
+            self.agent_restarts += 1
+
+    # -- metrics -------------------------------------------------------------
+    def agent_stats(self) -> List[Optional[dict]]:
+        """Round-trip per-agent stats (pool + node plane); ``None`` for
+        agents that are down."""
+        out: List[Optional[dict]] = []
+        for ch in self._channels:
+            if ch is None or ch.closed:
+                out.append(None)
+                continue
+            try:
+                meta, _ = ch.request({"op": "stats"}, timeout=10.0)
+                out.append(meta.get("stats"))
+            except Exception:
+                out.append(None)
+        return out
+
+    def stats(self) -> dict:
+        return {
+            "backend": self.name,
+            "n_agents": self.n_agents,
+            "workers_per_node": self.wpn,
+            "agent_restarts": self.agent_restarts,
+            "puts": self.puts,
+            "refs": self.refs,
+            "bytes_shipped": self.bytes_shipped,
+        }
+
+
+BACKENDS = {"thread": ThreadExecutor, "process": ProcessExecutor,
+            "cluster": ClusterExecutor}
 
 
 def make_executor(backend: str, n_workers: int, label: str = "rjax",

@@ -130,6 +130,15 @@ class ObjectStore:
                     self._transfer_bytes += self._nbytes.get(key, 0)
                 held.add(node)
 
+    def forget_node(self, node: int) -> None:
+        """Drop a domain from every datum's residency set — the address
+        space died (e.g. a node agent crashed).  Locality scoring stops
+        steering reads there, and re-ships to its replacement count as
+        fresh transfers in the ledger."""
+        with self._lock:
+            for held in self._locations.values():
+                held.discard(node)
+
     def locations(self, key: Tuple[int, int]) -> set:
         with self._lock:
             return set(self._locations.get(key, ()))

@@ -71,9 +71,38 @@ class Runtime:
         speculation: SpeculationConfig = SpeculationConfig(),
         name: str = "rjax",
         backend: str = "thread",
+        cluster: Any = None,
+        n_agents: Optional[int] = None,
     ):
+        backend_opts = {}
+        if backend == "cluster":
+            # geometry comes from the cluster harness: n_agents real node
+            # agents × workers_per_node worker processes on each
+            if cluster is None:
+                from repro.cluster import LocalCluster
+                cluster = LocalCluster(n_agents=n_agents or 2,
+                                       workers_per_node=workers_per_node or 2)
+            n_workers = cluster.n_agents * cluster.workers_per_node
+            workers_per_node = cluster.workers_per_node
+            backend_opts["cluster"] = cluster
         self.n_workers = int(n_workers)
         self.backend = backend
+        self.cluster = cluster
+        try:
+            self._init_rest(workers_per_node, policy, tracing, retry,
+                            speculation, name, backend, backend_opts)
+        except BaseException:
+            # a half-built cluster runtime must not leak agent processes
+            # (GC of the listener is not guaranteed, e.g. in a REPL)
+            if cluster is not None:
+                try:
+                    cluster.shutdown()
+                except Exception:
+                    pass
+            raise
+
+    def _init_rest(self, workers_per_node, policy, tracing, retry,
+                   speculation, name, backend, backend_opts) -> None:
         if workers_per_node is None:
             # each worker process is its own address space => its own
             # locality domain; threads all share one
@@ -97,7 +126,8 @@ class Runtime:
         self._idle_workers = self.n_workers
         self._stopped = False
 
-        self.executor = make_executor(backend, self.n_workers, label=name)
+        self.executor = make_executor(backend, self.n_workers, label=name,
+                                      **backend_opts)
         self.executor.start(self)
 
         self._monitor: Optional[threading.Thread] = None

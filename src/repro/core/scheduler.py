@@ -9,7 +9,10 @@ differ only in *which* ready task a worker receives:
                   footprint for wide fan-outs).
 * ``locality``  — prefer the ready task with the most input bytes already
                   resident on the worker's node (COMPSs data-locality-aware
-                  policy, NUMA/ICI-adapted here).
+                  policy).  Domains follow the executor backend: one per
+                  node under ``thread``, per worker process under
+                  ``process``, per TCP node agent under ``cluster`` —
+                  where a miss costs a real wire transfer (DESIGN.md §12).
 * ``worksteal`` — per-worker deques; owner pops LIFO, thieves steal FIFO.
                   Beyond-paper addition used for straggler mitigation.
 """
@@ -126,6 +129,8 @@ class Scheduler:
             score = self._locality_score(tid, node)
             if score > best_score:
                 best_i, best_score = i, score
+                if best_score >= 1.0:
+                    break   # fully local — no better score exists
         self._queue.rotate(-best_i)
         tid = self._queue.popleft()
         self._queue.rotate(best_i)

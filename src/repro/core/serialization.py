@@ -33,6 +33,7 @@ import pickle
 import struct
 import tempfile
 import time
+import weakref
 from typing import Any, Callable, Dict, Tuple
 
 import numpy as np
@@ -87,8 +88,18 @@ def _npy_de(data: bytes) -> Any:
     return np.load(io.BytesIO(data), allow_pickle=False)
 
 
+def as_c_contiguous(obj: Any) -> np.ndarray:
+    """Copy-on-encode for non-contiguous inputs (strided slices, Fortran
+    order): sliced blocks crossing an address-space boundary must
+    round-trip, not raise.  Unlike ``np.ascontiguousarray``, this keeps
+    0-d arrays 0-d (ascontiguousarray silently promotes them to shape
+    ``(1,)``, corrupting the codec header).  Shared by the raw/mmap
+    codecs, the shm object plane, and the cluster wire frames."""
+    return np.asarray(obj, order="C")
+
+
 def _raw_ser(obj: Any) -> bytes:
-    arr = np.ascontiguousarray(obj)
+    arr = as_c_contiguous(obj)
     return _pack_header(arr) + arr.tobytes()
 
 
@@ -117,14 +128,29 @@ DEFAULT_CODEC = "raw"  # measured winner — see benchmarks/serialization_bench.
 
 
 # ----------------------------------------------------------------- file-based
+def _unlink_quiet(path: str) -> None:
+    try:
+        os.unlink(path)
+    except OSError:
+        pass
+
+
 class MmapCodec:
-    """RMVL analogue: file-backed zero-copy deserialization."""
+    """RMVL analogue: file-backed zero-copy deserialization.
+
+    A deserialized ``numpy.memmap`` *view* pins its backing file: nothing
+    else knows when the view dies, so temp spill files used to accumulate
+    in ``$TMPDIR`` forever.  ``owned=True`` ties the file's lifetime to
+    the returned view (a ``weakref.finalize`` unlinks it at GC — on POSIX
+    the mapping stays valid even after the unlink, so live slices keep
+    working); :meth:`spill` packages the write-then-own round trip.
+    """
 
     name = "mmap"
     array_only = True
 
     def ser_to_file(self, obj: Any, path: str) -> int:
-        arr = np.ascontiguousarray(obj)
+        arr = as_c_contiguous(obj)
         header = _pack_header(arr)
         with open(path, "wb") as f:
             f.write(struct.pack("<I", len(header)))
@@ -132,12 +158,27 @@ class MmapCodec:
             arr.tofile(f)
         return 4 + len(header) + arr.nbytes
 
-    def de_from_file(self, path: str) -> np.ndarray:
+    def de_from_file(self, path: str, owned: bool = False) -> np.ndarray:
         with open(path, "rb") as f:
             (hlen,) = struct.unpack("<I", f.read(4))
             header = f.read(hlen)
         dtype, shape, _ = _unpack_header(memoryview(header))
-        return np.memmap(path, dtype=dtype, mode="r", offset=4 + hlen, shape=shape)
+        view = np.memmap(path, dtype=dtype, mode="r", offset=4 + hlen, shape=shape)
+        if owned:
+            weakref.finalize(view, _unlink_quiet, path)
+        return view
+
+    def spill(self, obj: Any, dir: str = None) -> np.ndarray:
+        """Write ``obj`` to a fresh temp file and return a self-cleaning
+        zero-copy view: the file is unlinked when the view is collected."""
+        fd, path = tempfile.mkstemp(prefix="rjax_spill_", suffix=".rjx", dir=dir)
+        os.close(fd)
+        try:
+            self.ser_to_file(obj, path)
+            return self.de_from_file(path, owned=True)
+        except BaseException:
+            _unlink_quiet(path)
+            raise
 
 
 def serialize(obj: Any, codec: str = DEFAULT_CODEC) -> bytes:
@@ -192,4 +233,10 @@ def benchmark_codecs(sizes=(1024, 4096, 8192), dtype=np.float64, repeats: int = 
             s_best = min(s_best, t1 - t0)
             d_best = min(d_best, t2 - t1)
         results.setdefault("mmap", {})[size] = (s_best, d_best)
+        del view
+        _unlink_quiet(path)
+    try:
+        os.rmdir(tmpdir)
+    except OSError:
+        pass
     return results

@@ -1,0 +1,227 @@
+"""Wire-protocol property tests (DESIGN.md §12): framing survives partial
+reads/short writes, >4 GiB length fields, back-to-back messages, and cut
+connections surface as retryable errors."""
+import socket
+import struct
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cluster.channel import AgentChannel
+from repro.cluster.protocol import (
+    ConnectionClosed,
+    Frame,
+    Put,
+    Ref,
+    array_frame,
+    frame_to_array,
+    pack_payload,
+    recv_msg,
+    send_msg,
+    unpack_payload,
+)
+
+
+class TrickleSocket:
+    """A fake socket that fragments every transfer: sendall is chopped into
+    tiny writes and recv_into returns at most ``chunk`` bytes — the
+    adversarial TCP segmentation the framing layer must survive."""
+
+    def __init__(self, chunk: int = 3):
+        self.buf = bytearray()
+        self.chunk = chunk
+        self.closed = False
+
+    def sendall(self, data) -> None:
+        data = bytes(data)
+        for i in range(0, len(data), self.chunk):   # short writes
+            self.buf.extend(data[i:i + self.chunk])
+
+    def recv_into(self, view) -> int:
+        if not self.buf:
+            if self.closed:
+                return 0
+            raise AssertionError("reader starved (protocol desync)")
+        n = min(len(view), self.chunk, len(self.buf))   # partial reads
+        view[:n] = self.buf[:n]
+        del self.buf[:n]
+        return n
+
+
+def test_roundtrip_under_partial_reads_and_short_writes():
+    s = TrickleSocket(chunk=3)
+    arr = np.arange(997, dtype=np.float64)   # odd size: never chunk-aligned
+    send_msg(s, {"op": "task", "n": 42}, [array_frame(arr)])
+    meta, frames = recv_msg(s)
+    assert meta == {"op": "task", "n": 42}
+    np.testing.assert_array_equal(frame_to_array(frames[0]), arr)
+
+
+def test_interleaved_messages_decode_in_order():
+    s = TrickleSocket(chunk=7)
+    a = np.ones(130, dtype=np.float32)
+    b = np.arange(9, dtype=np.int64)
+    send_msg(s, {"mid": 1}, [array_frame(a)])
+    send_msg(s, {"mid": 2}, [array_frame(b), array_frame(a)])
+    send_msg(s, {"mid": 3})
+    m1, f1 = recv_msg(s)
+    m2, f2 = recv_msg(s)
+    m3, f3 = recv_msg(s)
+    assert [m["mid"] for m in (m1, m2, m3)] == [1, 2, 3]
+    np.testing.assert_array_equal(frame_to_array(f1[0]), a)
+    np.testing.assert_array_equal(frame_to_array(f2[0]), b)
+    np.testing.assert_array_equal(frame_to_array(f2[1]), a)
+    assert f3 == []
+
+
+def test_length_fields_are_64_bit():
+    """Frames beyond the u32 ceiling must be representable.  We pack the
+    header for a >4 GiB frame directly (allocating one would be rude) and
+    check the length survives."""
+    big = 2**32 + 12345
+    header = struct.pack("<4sQ", b"RJW1", 2) + struct.pack("<2Q", 10, big)
+    magic, n = struct.unpack_from("<4sQ", header)
+    lens = struct.unpack_from("<2Q", header, 12)
+    assert magic == b"RJW1" and n == 2
+    assert lens == (10, big)
+
+
+def test_truncated_stream_raises_connection_closed():
+    s = TrickleSocket(chunk=5)
+    arr = np.ones(64)
+    send_msg(s, {"mid": 1}, [array_frame(arr)])
+    # cut the stream mid-frame: drop the tail, then "close" the socket
+    del s.buf[len(s.buf) // 2:]
+    s.closed = True
+    with pytest.raises(ConnectionClosed) as exc_info:
+        recv_msg(s)
+    assert exc_info.value.mid_message
+
+
+def test_clean_close_between_messages_is_not_mid_message():
+    s = TrickleSocket()
+    s.closed = True
+    with pytest.raises(ConnectionClosed) as exc_info:
+        recv_msg(s)
+    assert not exc_info.value.mid_message
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.lists(st.integers(1, 6), min_size=0, max_size=3),
+    dtype=st.sampled_from(["f4", "f8", "i4", "i8", "u1", "u2"]),
+    chunk=st.integers(1, 13),
+)
+def test_frame_roundtrip_property(shape, dtype, chunk):
+    arr = (np.random.standard_normal(tuple(shape)) * 50).astype(np.dtype(dtype))
+    s = TrickleSocket(chunk=chunk)
+    send_msg(s, {"k": "v"}, [array_frame(arr)])
+    _, frames = recv_msg(s)
+    out = frame_to_array(frames[0])
+    np.testing.assert_array_equal(out, arr)
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    assert not out.flags.writeable
+
+
+def test_noncontiguous_frames_copy_on_encode():
+    strided = np.arange(256.0).reshape(16, 16)[:, ::2]
+    fortran = np.asfortranarray(np.arange(30.0).reshape(5, 6))
+    zero_d = np.array(7.25)
+    s = TrickleSocket(chunk=9)
+    send_msg(s, {}, [array_frame(strided), array_frame(fortran),
+                     array_frame(zero_d)])
+    _, frames = recv_msg(s)
+    np.testing.assert_array_equal(frame_to_array(frames[0]), strided)
+    np.testing.assert_array_equal(frame_to_array(frames[1]), fortran)
+    np.testing.assert_array_equal(frame_to_array(frames[2]), zero_d)
+
+
+# ---------------------------------------------------------- payload packing
+def test_pack_payload_put_then_ref():
+    arr = np.ones(512, dtype=np.float64)
+    key = (3, 1)
+    resident = set()
+    structure, frames, info = pack_payload(([arr], {}), {id(arr): key}, resident)
+    assert info["put_keys"] == [key] and info["refs"] == 0
+    assert isinstance(structure[0][0], Put)
+    resident.add(key)
+    structure2, frames2, info2 = pack_payload(([arr], {}), {id(arr): key}, resident)
+    assert isinstance(structure2[0][0], Ref)
+    assert info2["refs"] == 1 and frames2 == []   # reuse-many: no bytes
+
+    plane = {}
+    out, _ = unpack_payload(structure, frames, lookup=plane.get,
+                            store=plane.__setitem__)
+    np.testing.assert_array_equal(out[0], arr)
+    out2, _ = unpack_payload(structure2, frames2, lookup=plane.get,
+                             store=plane.__setitem__)
+    assert out2[0] is plane[key]
+
+
+def test_pack_payload_dedups_within_one_message():
+    """The same keyed datum appearing twice in one call ships once: first
+    occurrence is the Put, later ones are Refs against it."""
+    arr = np.ones(512, dtype=np.float64)
+    key = (5, 1)
+    structure, frames, info = pack_payload(
+        ([arr, arr], {"again": arr}), {id(arr): key}, set())
+    assert info["put_keys"] == [key] and info["refs"] == 2
+    assert len(frames) == 1
+    plane = {}
+    out, kw = unpack_payload(structure, frames, lookup=plane.get,
+                             store=plane.__setitem__)
+    np.testing.assert_array_equal(out[0], arr)
+    assert out[1] is plane[key] and kw["again"] is plane[key]
+
+
+def test_pack_payload_inlines_small_anonymous_values():
+    small = np.ones(4)
+    structure, frames, _ = pack_payload(([small, "txt", 5], {}), {}, set())
+    assert frames == []               # rides the metadata pickle
+    out, _ = unpack_payload(structure, frames)
+    np.testing.assert_array_equal(out[0], small)
+    assert out[1:] == ["txt", 5]
+
+
+def test_pack_payload_object_dtype_keyed_inline():
+    arr = np.array([{"a": 1}, None], dtype=object)
+    key = (9, 1)
+    structure, frames, info = pack_payload(([arr], {}), {id(arr): key}, set())
+    assert frames == [] and info["put_keys"] == [key]
+    plane = {}
+    out, _ = unpack_payload(structure, frames, lookup=plane.get,
+                            store=plane.__setitem__)
+    assert out[0][0] == {"a": 1} and key in plane
+
+
+# ------------------------------------------------------- channel disconnects
+def test_agent_disconnect_mid_request_fails_pending():
+    """A peer that dies mid-conversation must fail the in-flight request
+    with ConnectionClosed (which the cluster executor maps to a retryable
+    WorkerCrashedError)."""
+    server, client = socket.socketpair()
+    ch = AgentChannel(client, node_id=0, hello={"workers": 1})
+
+    def half_reply_then_die():
+        recv_msg(server)                     # consume the request
+        server.sendall(b"RJW1\x02")          # start a reply, then vanish
+        server.close()
+
+    t = threading.Thread(target=half_reply_then_die)
+    t.start()
+    with pytest.raises(ConnectionClosed):
+        ch.request({"op": "stats"}, timeout=10.0)
+    t.join()
+    ch.close()
+
+
+def test_channel_refuses_after_close():
+    server, client = socket.socketpair()
+    ch = AgentChannel(client, node_id=1, hello={})
+    ch.close()
+    server.close()
+    with pytest.raises(ConnectionClosed):
+        ch.request({"op": "stats"}, timeout=5.0)
