@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 from typing import List, Tuple
 
@@ -142,7 +143,8 @@ def _localhost_machine(n_agents: int, wpn: int) -> MachineModel:
     )
 
 
-def run_live(agent_counts=(1, 2), wpn: int = 2) -> List[Tuple[str, float, str]]:
+def run_live(agent_counts=(1, 2), wpn: int = 2,
+             json_path: str = None) -> List[Tuple[str, float, str]]:
     """Measured vs simulated efficiency on real TCP node agents."""
     from repro.core import api
 
@@ -186,7 +188,61 @@ def run_live(agent_counts=(1, 2), wpn: int = 2) -> List[Tuple[str, float, str]]:
           "agents;\n sim_eff = the same DAG replayed through the calibrated "
           "DES on a\n matching machine model — agreement validates the "
           "simulator's\n transport/dispatch assumptions at small scale)")
+    if json_path:
+        ooc = run_live_out_of_core(wpn=wpn)
+        top = max(agent_counts)
+        base = min(agent_counts)
+        payload = {"multi_node": {
+            "live_weak_eff": {str(n): round(measured[base] / measured[n], 3)
+                              for n in agent_counts},
+            "sim_weak_eff": {str(n): round(simulated[base] / simulated[n], 3)
+                             for n in agent_counts},
+            "measured_s": {str(n): round(measured[n], 3) for n in agent_counts},
+            "agents": top,
+            "out_of_core": ooc,
+        }}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
     return rows
+
+
+def run_live_out_of_core(wpn: int = 1, budget: str = "400K") -> dict:
+    """Bounded-plane run on the real cluster: K-means whose fragment set
+    exceeds the per-node budget must finish, spill on both the scheduler
+    store and the node agents, and match the unbounded run bitwise."""
+    from repro.algorithms import kmeans
+    from repro.core import api
+
+    def one(mem):
+        rt = api.runtime_start(backend="cluster", n_agents=2,
+                               workers_per_node=wpn, policy="locality",
+                               memory_budget=mem, tracing=False)
+        try:
+            res = kmeans.run_kmeans(n_points=16000, d=10, k=4, fragments=8,
+                                    max_iters=4, seed=0)
+            return res, rt.stats(), rt.executor.agent_stats()
+        finally:
+            api.runtime_stop(wait=False)
+
+    import numpy as np
+    ref, _, _ = one(None)
+    res, stats, agents = one(budget)
+    mem = stats["memory"]
+    out = {
+        "budget": budget,
+        "spills": mem["spills"],
+        "faults": mem["faults"],
+        "node_spills": sum((s or {}).get("plane_spills", 0) for s in agents),
+        "node_faults": sum((s or {}).get("plane_faults", 0) for s in agents),
+        "match": bool(np.array_equal(ref.centroids, res.centroids)
+                      and ref.sse == res.sse),
+    }
+    print(f"out-of-core k-means [cluster, budget {budget}]: "
+          f"store {out['spills']}/{out['faults']}, "
+          f"nodes {out['node_spills']}/{out['node_faults']}, "
+          f"bitwise match: {out['match']}")
+    return out
 
 
 if __name__ == "__main__":
@@ -198,8 +254,16 @@ if __name__ == "__main__":
                     help="comma-separated agent counts for --live")
     ap.add_argument("--wpn", type=int, default=2,
                     help="worker processes per agent for --live")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized --live run: 1 worker/agent, "
+                         "plus the out-of-core ledger")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write --live measurements as JSON (merged into "
+                         "BENCH_pr.json by bench_gate.py)")
     opts = ap.parse_args()
     if opts.live:
-        run_live(tuple(int(x) for x in opts.agents.split(",")), wpn=opts.wpn)
+        wpn = 1 if opts.quick else opts.wpn
+        run_live(tuple(int(x) for x in opts.agents.split(",")), wpn=wpn,
+                 json_path=opts.json)
     else:
         run()

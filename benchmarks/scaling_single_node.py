@@ -20,8 +20,11 @@ cores, K-means > 60%; linreg declines with dependency depth (~41% at 128).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Callable, Dict, List, Tuple
+
+import numpy as np
 
 from repro.algorithms import kmeans, knn, linreg
 from repro.core.runtime import Runtime
@@ -149,6 +152,98 @@ def run_backend_axis(backends=("thread", "process"), cores=(1, 2, 4, 8),
     return rows
 
 
+def measure_dispatch_overhead(backend: str, n_workers: int = 2,
+                              n_tasks: int = 200, repeats: int = 3) -> float:
+    """Per-task master overhead in µs: drain ``n_tasks`` no-op tasks and
+    divide.  Min over ``repeats`` — the stable statistic for a gate."""
+    rt = Runtime(n_workers=n_workers, backend=backend, tracing=False)
+    try:
+        rt.wait_on(rt.submit(_spin, (0,), name="warmup"))
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            for _ in range(n_tasks):
+                rt.submit(_spin, (0,), name="noop")
+            rt.barrier()
+            best = min(best, (time.perf_counter() - t0) / n_tasks * 1e6)
+        return best
+    finally:
+        rt.stop(wait=False)
+
+
+# ----------------------------------------------------- out-of-core probe
+def run_out_of_core(backend: str = "process", budget: str = "400K") -> dict:
+    """K-means with the working set (~1.3 MB of fragments) over a 400 KB
+    per-domain budget: reports the spill/fault ledger and whether the
+    bounded run matches the unbounded one bitwise (DESIGN.md §13)."""
+    from repro.core import api
+
+    def one(mem):
+        rt = api.runtime_start(n_workers=2, backend=backend,
+                               policy="locality", memory_budget=mem,
+                               tracing=False)
+        try:
+            res = kmeans.run_kmeans(n_points=16000, d=10, k=4, fragments=8,
+                                    max_iters=4, seed=0)
+            return res, rt.stats()
+        finally:
+            api.runtime_stop(wait=False)
+
+    ref, _ = one(None)
+    res, stats = one(budget)
+    mem = stats["memory"]
+    ex = stats["executor"]
+    out = {
+        "backend": backend,
+        "budget": budget,
+        "spills": mem["spills"],
+        "faults": mem["faults"],
+        "spill_bytes": mem["spill_bytes"],
+        "plane_spills": ex.get("plane_spills", 0),
+        "plane_faults": ex.get("plane_faults", 0),
+        "match": bool(np.array_equal(ref.centroids, res.centroids)
+                      and ref.sse == res.sse),
+    }
+    print(f"out-of-core k-means [{backend}, budget {budget}]: "
+          f"{out['spills']} spills / {out['faults']} faults "
+          f"(plane: {out['plane_spills']}/{out['plane_faults']}), "
+          f"bitwise match: {out['match']}")
+    return out
+
+
+# ------------------------------------------------------------- quick mode
+def run_quick() -> dict:
+    """CI-sized measurement set: dispatch overhead per backend, simulated
+    scaling efficiency at the paper's core counts, and the out-of-core
+    spill/fault ledger — the payload of ``BENCH_pr.json``."""
+    print("# quick bench — dispatch overhead")
+    overhead = {}
+    for backend in ("thread", "process"):
+        overhead[backend] = round(measure_dispatch_overhead(backend), 1)
+        print(f"  {backend:8s} {overhead[backend]:8.1f} us/task")
+    print("# quick bench — simulated weak/strong efficiency @128 cores")
+    costs = {
+        "knn": knn.calibrate(d=50, k=5, units=(250, 500, 1000)),
+        "kmeans": kmeans.calibrate(d=50, k=8, units=(2000, 5000, 10000)),
+        "linreg": linreg.calibrate(p=200, units=(500, 1000, 2000)),
+    }
+    dagmakers = {"knn": knn_dags, "kmeans": kmeans_dags, "linreg": linreg_dags}
+    eff = {"weak": {}, "strong": {}}
+    for name, maker in dagmakers.items():
+        weak_fn, strong_fn = maker(costs[name])
+        for mode, fn in (("weak", weak_fn), ("strong", strong_fn)):
+            table = scaling_table(mode, fn, cores=(1, 128))
+            eff[mode][name] = round(table[128], 3)
+            print(f"  {name:7s} {mode:6s} eff@128 = {table[128]:.3f}")
+    ooc = run_out_of_core()
+    return {
+        "dispatch_overhead_us": overhead,
+        "weak_eff@128": eff["weak"],
+        "strong_eff@128": eff["strong"],
+        "out_of_core": ooc,
+    }
+
+
 def run() -> List[Tuple[str, float, str]]:
     print("# Figs. 6/7 analogue — single-node weak/strong scaling efficiency")
     print("calibrating task cost models on this machine ...")
@@ -199,7 +294,25 @@ def main() -> None:
     ap.add_argument("--tasks", type=int, default=32)
     ap.add_argument("--units", type=int, default=10,
                     help="per-task CPU work, in 10k-iteration units")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized run: dispatch overhead, eff@128, "
+                         "out-of-core ledger (pairs with --json)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the quick-mode measurements as JSON "
+                         "(merged into BENCH_pr.json by bench_gate.py)")
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="only run the out-of-core k-means probe")
     args = ap.parse_args()
+    if args.out_of_core:
+        run_out_of_core()
+        return
+    if args.quick:
+        payload = {"single_node": run_quick()}
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"wrote {args.json}")
+        return
     if args.backend == "sim":
         run()
         return

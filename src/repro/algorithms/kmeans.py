@@ -9,7 +9,7 @@ function) — one synchronization per iteration, exactly as in Fig. 4.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List
 
 import numpy as np
 

@@ -9,7 +9,7 @@ block and one training fragment and keep the local top-k, a tree of
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List
 
 import numpy as np
 
@@ -57,11 +57,11 @@ def knn_merge(a, b):
     db, lb = b
     k = max(da.shape[1], db.shape[1])
     d = np.concatenate([da, db], axis=1)
-    l = np.concatenate([la, lb], axis=1)
+    lab = np.concatenate([la, lb], axis=1)
     kk = min(k, d.shape[1])
     idx = np.argpartition(d, kk - 1, axis=1)[:, :kk]
     rows = np.arange(d.shape[0])[:, None]
-    dd, ll = d[rows, idx], l[rows, idx]
+    dd, ll = d[rows, idx], lab[rows, idx]
     order = np.argsort(dd, axis=1, kind="stable")
     return dd[rows, order], ll[rows, order]
 

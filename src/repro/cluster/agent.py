@@ -42,6 +42,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.executors import ProcessExecutor, _loads_fn
+from ..core.memory import (
+    MemoryBudget,
+    MemoryGovernor,
+    SpilledValue,
+    budget_from_env,
+    parse_bytes,
+    spill_to_file,
+    spillable,
+)
 from ..core.serialization import as_c_contiguous
 from .protocol import (
     ConnectionClosed,
@@ -60,20 +69,67 @@ class NodePlane:
     """Node-local object cache keyed by ``(data_id, version)``: everything
     this node ever received or produced, so repeat reads never re-cross
     the wire.  Plus a token side-table for results the scheduler has not
-    yet bound to a datum key."""
+    yet bound to a datum key.
 
-    def __init__(self):
-        self._lock = threading.Lock()
+    With a memory budget configured (DESIGN.md §13) the plane is bounded:
+    cold ndarrays past the high watermark spill to node-local mmap-codec
+    files and fault back as zero-copy ``np.memmap`` views on the next
+    ``lookup`` — the scheduler keeps sending ``Ref`` markers for them and
+    never needs to know.  Entries genuinely *lost* (the whole agent died)
+    are re-shipped over the wire by the scheduler's residency reset, which
+    is the remote-``Ref`` fault path."""
+
+    def __init__(self, memory_budget=None):
+        # reentrant: a governed store() can spill (re-entering plane
+        # bookkeeping) while the lock is held
+        self._lock = threading.RLock()
         self._data: Dict[Tuple[int, int], Any] = {}
         self._tmp: Dict[int, Any] = {}
+        self.governor: Optional[MemoryGovernor] = None
+        self.configure_memory(memory_budget)
+
+    def configure_memory(self, budget, high_frac: float = 0.9,
+                         low_frac: float = 0.7) -> None:
+        cap = parse_bytes(budget)
+        self.governor = None if cap is None else MemoryGovernor(
+            MemoryBudget(cap, high_frac, low_frac), self._spill_key,
+            name="node-plane")
+
+    def _spill_key(self, key: Tuple[int, int]) -> int:
+        value = self._data.get(key)
+        if not spillable(value):
+            return 0
+        try:
+            spilled = spill_to_file(
+                value, prefix=f"rjax_node_d{key[0]}v{key[1]}_")
+        except Exception:
+            return 0
+        self._data[key] = spilled
+        return value.nbytes
+
+    def contains(self, key: Tuple[int, int]) -> bool:
+        """Residency probe that never faults (reader-thread pre-store)."""
+        with self._lock:
+            return key in self._data
 
     def lookup(self, key: Tuple[int, int]) -> Any:
         with self._lock:
-            return self._data[key]
+            value = self._data[key]
+            if isinstance(value, SpilledValue):
+                view = value.load()   # file-backed: not re-charged
+                self._data[key] = view
+                if self.governor is not None:
+                    self.governor.fault(key, value.nbytes)
+                return view
+            if self.governor is not None:
+                self.governor.touch(key)
+            return value
 
     def store(self, key: Tuple[int, int], value: Any) -> None:
         with self._lock:
             self._data[key] = value
+            if self.governor is not None and spillable(value):
+                self.governor.admit(key, value.nbytes)
 
     def hold(self, token: int, value: Any) -> None:
         with self._lock:
@@ -83,31 +139,48 @@ class NodePlane:
         with self._lock:
             v = self._tmp.pop(token, None)
             if v is not None:
-                self._data[key] = v
+                self.store(key, v)
 
     def drop(self, token: int) -> None:
         with self._lock:
             self._tmp.pop(token, None)
 
+    def dispose_spills(self) -> None:
+        """Unlink still-spilled entries' files (agent shutdown); faulted
+        views unlink their own file at GC."""
+        with self._lock:
+            for key, value in list(self._data.items()):
+                if isinstance(value, SpilledValue):
+                    value.dispose()
+                    del self._data[key]
+
     def stats(self) -> dict:
         with self._lock:
             vals = list(self._data.values())
-            return {
+            s = {
                 "plane_entries": len(vals),
                 "plane_tmp": len(self._tmp),
                 "plane_bytes": sum(int(getattr(v, "nbytes", 0) or 0) for v in vals),
             }
+            if self.governor is not None:
+                s.update({f"plane_{k}": v
+                          for k, v in self.governor.stats().items()})
+            return s
 
 
 class NodeAgent:
     def __init__(self, address: str, workers: int,
                  node_id: Optional[int] = None,
-                 mp_context: Optional[str] = None):
+                 mp_context: Optional[str] = None,
+                 memory_budget=None):
         host, _, port = address.rpartition(":")
         self.addr = (host or "127.0.0.1", int(port))
         self.workers = int(workers)
         self.node_id = node_id
         self._mp_context = mp_context
+        # explicit (CLI) budget wins; otherwise the scheduler's welcome
+        # message may carry one; otherwise RJAX_MEMORY_BUDGET
+        self.memory_budget = parse_bytes(memory_budget)
         self.plane = NodePlane()
         self.pool: Optional[ProcessExecutor] = None
         self.sock: Optional[socket.socket] = None
@@ -142,6 +215,15 @@ class NodeAgent:
         welcome, _ = recv_msg(self.sock)
         assert welcome.get("op") == "welcome", welcome
         self.node_id = welcome["node_id"]
+        budget = self.memory_budget
+        if budget is None:
+            budget = budget_from_env(welcome.get("memory_budget"))
+        if budget is not None:
+            # both node-local tiers are governed: the wire-facing plane
+            # spills to mmap files, the intra-node shm plane drops
+            # segments (their authoritative copy is here or upstream)
+            self.plane.configure_memory(budget)
+            self.pool.plane.configure_memory(budget)
         self._slot_queues = [queue.Queue() for _ in range(self.workers)]
         threads = []
         for slot in range(self.workers):
@@ -159,6 +241,10 @@ class NodeAgent:
                 t.join(timeout=2.0)
             try:
                 self.pool.shutdown(wait=False)
+            except Exception:
+                pass
+            try:
+                self.plane.dispose_spills()
             except Exception:
                 pass
             try:
@@ -195,7 +281,12 @@ class NodeAgent:
                 self.plane.drop(meta["token"])
             elif op == "stats":
                 s = dict(self.plane.stats())
-                s.update(self.pool.stats())
+                # the inner pool's shm plane reports its own governor under
+                # plane_* too: namespace it so the node plane's ledger (the
+                # wire-facing tier) isn't shadowed
+                for k, v in self.pool.stats().items():
+                    s[f"pool_{k}" if (k in s or k.startswith("plane_"))
+                      else k] = v
                 s["node_id"] = self.node_id
                 self._reply({"op": "stats", "mid": meta["mid"], "stats": s})
             elif op == "exit":
@@ -222,9 +313,7 @@ class NodeAgent:
 
         def walk(o):
             if isinstance(o, Put):
-                try:
-                    self.plane.lookup(o.key)
-                except KeyError:
+                if not self.plane.contains(o.key):   # probe, don't fault
                     v = o.value
                     if isinstance(v, Frame):
                         v = frame_to_array(frames[v.i])
@@ -354,6 +443,10 @@ def main(argv=None) -> int:
     p.add_argument("--mp-context", default=None,
                    help="multiprocessing start method for the pool "
                         "(fork/spawn; default from RJAX_MP_CONTEXT)")
+    p.add_argument("--memory-budget", default=None, metavar="BYTES",
+                   help="node object-plane budget, e.g. 256M or 2G "
+                        "(default: the scheduler's welcome value, then "
+                        "RJAX_MEMORY_BUDGET, then unbounded)")
     args = p.parse_args(argv)
 
     # SIGTERM's default action skips all cleanup, which would orphan the
@@ -368,7 +461,8 @@ def main(argv=None) -> int:
     signal.signal(signal.SIGTERM, _terminate)
 
     agent = NodeAgent(args.connect, args.workers, node_id=args.node_id,
-                      mp_context=args.mp_context)
+                      mp_context=args.mp_context,
+                      memory_budget=args.memory_budget)
     try:
         agent.run()
     except KeyboardInterrupt:

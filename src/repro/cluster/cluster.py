@@ -56,6 +56,10 @@ class LocalCluster:
         self.n_agents = int(n_agents)
         self.workers_per_node = int(workers_per_node)
         self.spawn = spawn
+        # per-node object-plane budget, forwarded in the welcome message;
+        # the runtime sets this from its memory_budget knob before the
+        # executor accepts agents (an agent's own --memory-budget wins)
+        self.memory_budget: Optional[int] = None
         self._lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -136,7 +140,8 @@ class LocalCluster:
             nid = hello.get("node_id")
             if nid is None:
                 nid = next(free)
-            send_msg(conn, {"op": "welcome", "node_id": nid})
+            send_msg(conn, {"op": "welcome", "node_id": nid,
+                            "memory_budget": self.memory_budget})
             channels[nid] = AgentChannel(conn, nid, hello)
         return channels
 
@@ -152,7 +157,8 @@ class LocalCluster:
                 proc.wait(timeout=5.0)
             self._spawn(i)
             conn, hello = self._accept_one(timeout)
-            send_msg(conn, {"op": "welcome", "node_id": i})
+            send_msg(conn, {"op": "welcome", "node_id": i,
+                            "memory_budget": self.memory_budget})
             return AgentChannel(conn, i, hello)
 
     # ------------------------------------------------------------ teardown

@@ -85,7 +85,7 @@ def send_msg(sock, meta: dict, frames: Sequence[Sequence] = ()) -> None:
     intermediate serialized blob."""
     meta_blob = pickle.dumps(meta, protocol=5)
     lengths = [len(meta_blob)] + [sum(len(p) for p in f) for f in frames]
-    header = _HEAD.pack(MAGIC, len(lengths)) + b"".join(_U64.pack(l) for l in lengths)
+    header = _HEAD.pack(MAGIC, len(lengths)) + b"".join(_U64.pack(n) for n in lengths)
     try:
         sock.sendall(header)
         sock.sendall(meta_blob)
@@ -106,7 +106,7 @@ def recv_msg(sock) -> Tuple[dict, List[memoryview]]:
     lens_buf = recv_exactly(sock, 8 * n_frames)
     lengths = struct.unpack(f"<{n_frames}Q", lens_buf)
     meta = pickle.loads(recv_exactly(sock, lengths[0]))
-    frames = [recv_exactly(sock, l) for l in lengths[1:]]
+    frames = [recv_exactly(sock, n) for n in lengths[1:]]
     return meta, frames
 
 

@@ -17,7 +17,7 @@ small concrete batches for smoke tests.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -52,6 +52,8 @@ def runtime_start(
     backend: str = "thread",
     cluster=None,
     n_agents: Optional[int] = None,
+    memory_budget=None,
+    spill_dir: Optional[str] = None,
 ) -> Runtime:
     """Initialize the global runtime (``compss_start``).
 
@@ -66,7 +68,14 @@ def runtime_start(
     processes with ``spawn=False``), or just ``n_agents=N`` to spawn a
     localhost cluster with ``workers_per_node`` workers on each agent.
     Under ``"cluster"``, ``n_workers`` is derived:
-    ``n_agents × workers_per_node``."""
+    ``n_agents × workers_per_node``.
+
+    ``memory_budget`` bounds every object plane (DESIGN.md §13): e.g.
+    ``"256M"`` or ``2**30``; cold arrays past the high watermark spill
+    to mmap-codec files (``spill_dir`` or ``$TMPDIR``) and fault back
+    transparently on the next read, so working sets larger than one
+    node's RAM degrade instead of dying.  Defaults to
+    ``RJAX_MEMORY_BUDGET``; ``None``/``0`` = unbounded."""
     global _runtime
     with _lock:
         if _runtime is not None and not _runtime._stopped:
@@ -81,6 +90,8 @@ def runtime_start(
             backend=backend,
             cluster=cluster,
             n_agents=n_agents,
+            memory_budget=memory_budget,
+            spill_dir=spill_dir,
         )
         return _runtime
 

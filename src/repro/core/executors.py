@@ -55,6 +55,7 @@ from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
+from .memory import MemoryBudget, MemoryGovernor
 from .serialization import _pack_header, _unpack_header, as_c_contiguous
 
 try:  # optional, but present in the baked image; required for lambda tasks
@@ -195,20 +196,62 @@ class SegmentPlane:
     """Parent-side registry of shared-memory segments keyed by the datum
     key ``(data_id, version)`` (plus anonymous result segments).  One datum
     is copied into the plane at most once no matter how many workers read
-    it; the per-worker segment caches then make repeated reads zero-copy."""
+    it; the per-worker segment caches then make repeated reads zero-copy.
 
-    def __init__(self):
-        self._lock = threading.Lock()
+    With a memory budget configured (DESIGN.md §13), the plane is a
+    *bounded* cache tier: keyed segments past the high watermark are
+    evicted coldest-first (the authoritative copy lives in the scheduler's
+    ObjectStore, which spills to disk under its own governor, so dropping
+    the shm copy loses nothing).  A later ``ensure`` of an evicted key
+    re-planes it — counted as a fault.  Keys of in-flight task inputs are
+    pinned by the executor so a ref already on a pipe can never point at
+    an unlinked segment, and every worker is told (piggybacked on its next
+    task message) to drop its cached mapping of evicted names so the
+    memory is actually returned to the OS."""
+
+    def __init__(self, memory_budget=None):
+        # reentrant: governed ensure() may evict (and re-enter plane
+        # bookkeeping) while holding the lock
+        self._lock = threading.RLock()
         self._by_key: Dict[Tuple[int, int], Tuple[_shm_mod.SharedMemory, ShmRef]] = {}
         self._anon: Dict[str, _shm_mod.SharedMemory] = {}
         self._by_name: Dict[str, _shm_mod.SharedMemory] = {}  # every live segment
         self.bytes_planed = 0      # bytes copied into the plane (once per datum)
         self.refs_shipped = 0      # ShmRefs sent over pipes (dedup wins show here)
+        self.governor: Optional[MemoryGovernor] = None
+        self.on_evict: Optional[Callable[[str], None]] = None
+        self._evicted_keys: Set[Tuple[int, int]] = set()
+        self.configure_memory(memory_budget)
+
+    def configure_memory(self, budget, high_frac: float = 0.9,
+                         low_frac: float = 0.7) -> None:
+        from .memory import parse_bytes
+        cap = parse_bytes(budget)
+        self.governor = None if cap is None else MemoryGovernor(
+            MemoryBudget(cap, high_frac, low_frac), self._spill_key,
+            name="shm-plane")
+
+    def _spill_key(self, key: Tuple[int, int]) -> int:
+        """Governor callback: drop one keyed segment (unlink frees the
+        name immediately; the pages return once every attached worker
+        drops its cached mapping — see ``on_evict``)."""
+        item = self._by_key.pop(key, None)
+        if item is None:
+            return 0
+        seg, ref = item
+        self._by_name.pop(seg.name, None)
+        self._evicted_keys.add(key)
+        if self.on_evict is not None:
+            self.on_evict(seg.name)
+        _dispose_segment(seg, unlink=True)
+        return ref.nbytes
 
     def ensure(self, key: Tuple[int, int], arr: np.ndarray) -> ShmRef:
         with self._lock:
             if key in self._by_key:
                 self.refs_shipped += 1
+                if self.governor is not None:
+                    self.governor.touch(key)
                 return self._by_key[key][1]
         seg, ref = _array_to_segment(arr)
         ref.key = key
@@ -222,6 +265,11 @@ class SegmentPlane:
             self._by_name[ref.name] = seg
             self.bytes_planed += ref.nbytes
             self.refs_shipped += 1
+            if self.governor is not None:
+                if key in self._evicted_keys:   # re-plane of an evicted key
+                    self._evicted_keys.discard(key)
+                    self.governor.fault(key, ref.nbytes)
+                self.governor.admit(key, ref.nbytes)
         return ref
 
     def attach(self, ref: ShmRef) -> Tuple[np.ndarray, bool]:
@@ -254,12 +302,19 @@ class SegmentPlane:
                 self._anon[ref.name] = seg  # keep ownership; key already bound
                 return
             self._by_key[key] = (seg, ShmRef(ref.name, ref.header, ref.nbytes, key))
+            if self.governor is not None:
+                self.governor.admit(key, ref.nbytes)
 
     def evict(self, key: Tuple[int, int]) -> None:
         with self._lock:
             item = self._by_key.pop(key, None)
+            self._evicted_keys.discard(key)   # datum GC'd: no fault ahead
             if item is not None:
                 self._by_name.pop(item[0].name, None)
+                if self.governor is not None:
+                    self.governor.release(key)
+                if self.on_evict is not None:
+                    self.on_evict(item[0].name)
         if item is not None:
             _dispose_segment(item[0], unlink=True)
 
@@ -274,11 +329,15 @@ class SegmentPlane:
 
     def stats(self) -> dict:
         with self._lock:
-            return {
+            s = {
                 "segments": len(self._by_key) + len(self._anon),
                 "bytes_planed": self.bytes_planed,
                 "refs_shipped": self.refs_shipped,
             }
+            if self.governor is not None:
+                s.update({f"plane_{k}": v
+                          for k, v in self.governor.stats().items()})
+            return s
 
     def close(self) -> None:
         with self._lock:
@@ -321,6 +380,18 @@ class _WorkerSegmentCache:
             if cached is not None and cached[1] is arr:
                 return ref
         return None
+
+    def drop(self, name: str) -> None:
+        """The parent evicted this segment: close our mapping so the
+        memory actually returns to the OS (an unlinked segment lives on
+        until every attached process closes it).  Safe mid-stream — the
+        parent only sends drops for segments no in-flight task uses."""
+        hit = self._cache.pop(name, None)
+        if hit is None:
+            return
+        seg, arr = hit
+        self._refs.pop(id(arr), None)
+        _dispose_segment(seg, unlink=False)
 
     def close(self) -> None:
         for seg, _ in self._cache.values():
@@ -430,7 +501,13 @@ def _worker_main(conn, worker_index: int, close_fds: tuple = ()) -> None:
                                      "segment_attaches": cache.attaches,
                                      "fns_cached": len(fns)}))
                 continue
-            _, fn_token, fn_blob, payload = msg
+            _, fn_token, fn_blob, payload, evicted = msg
+            if "*" in evicted:     # overflow sentinel: drop everything
+                for name in list(cache._cache):
+                    cache.drop(name)
+            else:
+                for name in evicted:   # parent-evicted segments: drop mappings
+                    cache.drop(name)
             try:
                 fn = fns.get(fn_token)
                 if fn is None:
@@ -538,13 +615,18 @@ class ProcessExecutor(ExecutorBackend):
     name = "process"
 
     def __init__(self, n_workers: int, label: str = "rjax",
-                 mp_context: Optional[str] = None):
+                 mp_context: Optional[str] = None, memory_budget=None):
         super().__init__(n_workers, label)
         try:
             self._ctx = get_context(mp_context or _MP_CONTEXT)
         except ValueError:
             self._ctx = get_context("spawn")
-        self.plane = SegmentPlane()
+        self.plane = SegmentPlane(memory_budget=memory_budget)
+        self.plane.on_evict = self._note_evicted
+        # evicted segment names each worker has not yet been told to drop;
+        # drained into (and piggybacked on) that worker's next task message
+        self._evict_lock = threading.Lock()
+        self._pending_evicts: List[Set[str]] = [set() for _ in range(n_workers)]
         self._fns = _FnRegistry()
         self._procs: List[Any] = [None] * self.n_workers
         self._conns: List[Any] = [None] * self.n_workers
@@ -608,6 +690,23 @@ class ProcessExecutor(ExecutorBackend):
         self._procs[worker] = p
         self._conns[worker] = parent
         self._shipped[worker] = set()
+        with self._evict_lock:   # fresh process, empty segment cache
+            self._pending_evicts[worker] = set()
+
+    # an idle worker's pending-evict set is drained only when it next runs
+    # a task; past this size, collapse it to a drop-everything sentinel so
+    # a cold worker can't accumulate unbounded names
+    _EVICT_PENDING_MAX = 4096
+
+    def _note_evicted(self, name: str) -> None:
+        """Plane hook: queue an evicted segment name for every worker."""
+        with self._evict_lock:
+            for w, pending in enumerate(self._pending_evicts):
+                if "*" in pending:
+                    continue
+                pending.add(name)
+                if len(pending) > self._EVICT_PENDING_MAX:
+                    self._pending_evicts[w] = {"*"}
 
     # -- the object plane ----------------------------------------------------
     def _encode_inputs(self, args: tuple, kwargs: dict,
@@ -664,22 +763,37 @@ class ProcessExecutor(ExecutorBackend):
     # -- invocation ----------------------------------------------------------
     def invoke(self, worker, fn, args, kwargs, input_keys=None):
         token, blob = self._fns.entry(fn)
-        payload = self._encode_inputs(args, kwargs, input_keys or {})
-        with self._conn_locks[worker]:
-            conn = self._conns[worker]
-            first = token not in self._shipped[worker]
-            try:
-                conn.send(("task", token, blob if first else b"", payload))
-                self._shipped[worker].add(token)
-                resp = conn.recv()
-            except (EOFError, OSError, BrokenPipeError) as err:
-                if not self._closing:
-                    self._restart(worker)
-                raise WorkerCrashedError(
-                    f"worker process {worker} died executing "
-                    f"{getattr(fn, '__name__', fn)!r}") from err
-        if resp[0] == "ok":
-            return self._decode_result(resp[1])
+        # pin this task's keyed inputs for the whole round-trip: a ref on
+        # the pipe must never point at a segment the governor unlinked
+        pinned = frozenset((input_keys or {}).values())
+        if self.plane.governor is not None and pinned:
+            self.plane.governor.pin_many(pinned)
+        try:
+            payload = self._encode_inputs(args, kwargs, input_keys or {})
+            with self._conn_locks[worker]:
+                conn = self._conns[worker]
+                first = token not in self._shipped[worker]
+                with self._evict_lock:
+                    evicted = tuple(self._pending_evicts[worker])
+                    self._pending_evicts[worker] = set()
+                try:
+                    conn.send(("task", token, blob if first else b"",
+                               payload, evicted))
+                    self._shipped[worker].add(token)
+                    resp = conn.recv()
+                except (EOFError, OSError, BrokenPipeError) as err:
+                    if not self._closing:
+                        self._restart(worker)
+                    raise WorkerCrashedError(
+                        f"worker process {worker} died executing "
+                        f"{getattr(fn, '__name__', fn)!r}") from err
+            if resp[0] == "ok":
+                # decode while the inputs stay pinned: a pass-through
+                # result reships an input ref, which must still attach
+                return self._decode_result(resp[1])
+        finally:
+            if self.plane.governor is not None and pinned:
+                self.plane.governor.unpin_many(pinned)
         _, enc, tb = resp
         if enc is not None:
             try:

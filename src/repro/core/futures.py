@@ -13,6 +13,14 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, Optional, Tuple
 
+from .memory import (
+    MemoryBudget,
+    MemoryGovernor,
+    SpilledValue,
+    spill_to_file,
+    spillable,
+)
+
 
 class TaskFailedError(RuntimeError):
     """Raised by ``wait_on`` when the producing task exhausted its retries."""
@@ -59,15 +67,68 @@ class ObjectStore:
     """
 
     def __init__(self):
-        self._lock = threading.Lock()
+        # reentrant: a put/get may trigger governed spill/fault paths that
+        # re-enter store accounting from the same thread
+        self._lock = threading.RLock()
         self._cond = threading.Condition(self._lock)
         self._values: Dict[Tuple[int, int], Any] = {}
         self._errors: Dict[Tuple[int, int], BaseException] = {}
         self._locations: Dict[Tuple[int, int], set] = {}
         self._nbytes: Dict[Tuple[int, int], int] = {}
+        self._node_bytes: Dict[int, int] = {}   # resident bytes per domain
         self._transfers = 0          # cross-domain reads observed
         self._transfer_bytes = 0
         self._next_data_id = 1
+        self.governor: Optional[MemoryGovernor] = None
+        self._spill_dir: Optional[str] = None
+        self._spill_min: Optional[int] = None
+
+    # -- memory governance (DESIGN.md §13) ------------------------------------
+    def configure_memory(self, budget, spill_dir: Optional[str] = None,
+                         high_frac: float = 0.9, low_frac: float = 0.7,
+                         min_bytes: Optional[int] = None) -> None:
+        """Bound this store: values past the high watermark spill to
+        mmap-codec files (coldest first) and fault back as zero-copy
+        ``np.memmap`` views on the next read.  ``budget`` of ``None``/0
+        disables governance (the pre-§13 behaviour)."""
+        from .memory import parse_bytes
+        cap = parse_bytes(budget)
+        if cap is None:
+            self.governor = None
+            return
+        self._spill_dir = spill_dir
+        self._spill_min = min_bytes
+        self.governor = MemoryGovernor(
+            MemoryBudget(cap, high_frac, low_frac), self._spill_key,
+            name="store")
+
+    def _spill_key(self, key: Tuple[int, int]) -> int:
+        """Governor callback: replace a resident array with its on-disk
+        form.  Returns bytes freed (0 = not spillable right now)."""
+        value = self._values.get(key)
+        if not spillable(value, self._spill_min):
+            return 0
+        try:
+            spilled = spill_to_file(value, prefix=f"rjax_store_d{key[0]}v{key[1]}_",
+                                    dir=self._spill_dir)
+        except Exception:
+            return 0
+        self._values[key] = spilled
+        return value.nbytes
+
+    def _maybe_fault(self, key: Tuple[int, int], value: Any) -> Any:
+        """Transparent fault path: a spilled entry is read back as a
+        read-only memmap view and stays resident in that (file-backed,
+        kernel-reclaimable) form."""
+        if isinstance(value, SpilledValue):
+            view = value.load()
+            self._values[key] = view
+            if self.governor is not None:
+                self.governor.fault(key, value.nbytes)
+            return view
+        if self.governor is not None:
+            self.governor.touch(key)
+        return value
 
     # -- identity allocation -------------------------------------------------
     def new_data_id(self) -> int:
@@ -87,7 +148,12 @@ class ObjectStore:
             self._values[key] = value
             self._nbytes[key] = nbytes
             if node is not None:
-                self._locations.setdefault(key, set()).add(node)
+                held = self._locations.setdefault(key, set())
+                if node not in held:
+                    held.add(node)
+                    self._node_bytes[node] = self._node_bytes.get(node, 0) + nbytes
+            if self.governor is not None and spillable(value, self._spill_min):
+                self.governor.admit(key, nbytes)
             self._cond.notify_all()
 
     def put_error(self, key: Tuple[int, int], err: BaseException) -> None:
@@ -108,13 +174,13 @@ class ObjectStore:
                 raise TimeoutError(f"timed out waiting for d{key[0]}v{key[1]}")
             if key in self._errors:
                 raise self._errors[key]
-            return self._values[key]
+            return self._maybe_fault(key, self._values[key])
 
     def get_nowait(self, key: Tuple[int, int]) -> Any:
         with self._lock:
             if key in self._errors:
                 raise self._errors[key]
-            return self._values[key]
+            return self._maybe_fault(key, self._values[key])
 
     # -- locality / transfer metadata ------------------------------------------
     # Every datum records which address-space *domains* hold a copy (node ids
@@ -129,15 +195,26 @@ class ObjectStore:
                     self._transfers += 1
                     self._transfer_bytes += self._nbytes.get(key, 0)
                 held.add(node)
+                self._node_bytes[node] = (
+                    self._node_bytes.get(node, 0) + self._nbytes.get(key, 0))
 
     def forget_node(self, node: int) -> None:
         """Drop a domain from every datum's residency set — the address
         space died (e.g. a node agent crashed).  Locality scoring stops
-        steering reads there, and re-ships to its replacement count as
-        fresh transfers in the ledger."""
+        steering reads there, re-ships to its replacement count as fresh
+        transfers in the ledger, and the per-node *budget* ledger resets
+        too (a replacement agent starts with empty memory: leaving the old
+        byte count in place would starve the node of placements)."""
         with self._lock:
             for held in self._locations.values():
                 held.discard(node)
+            self._node_bytes[node] = 0
+
+    def node_bytes(self, node: int) -> int:
+        """Resident governed bytes attributed to one locality domain —
+        the scheduler's memory-aware placement reads this."""
+        with self._lock:
+            return self._node_bytes.get(node, 0)
 
     def locations(self, key: Tuple[int, int]) -> set:
         with self._lock:
@@ -152,13 +229,38 @@ class ObjectStore:
         with self._lock:
             return self._transfers, self._transfer_bytes
 
+    def memory_stats(self) -> dict:
+        """The spill/fault side of the ledger (zeros when ungoverned)."""
+        if self.governor is not None:
+            return self.governor.stats()
+        return {"budget_bytes": None, "bytes_used": 0, "spills": 0,
+                "faults": 0, "spill_bytes": 0, "fault_bytes": 0,
+                "governed_entries": 0}
+
+    def dispose_spills(self) -> None:
+        """Unlink every still-spilled entry's file (runtime shutdown).
+        Faulted views clean up after themselves — their files unlink at
+        view GC — but a value that was spilled and never read again
+        would otherwise leave its temp file behind."""
+        with self._lock:
+            for key, value in list(self._values.items()):
+                if isinstance(value, SpilledValue):
+                    value.dispose()
+                    del self._values[key]
+
     # -- housekeeping ------------------------------------------------------------
     def evict(self, key: Tuple[int, int]) -> None:
         """Drop a value (garbage collection once all consumers ran)."""
         with self._lock:
-            self._values.pop(key, None)
-            self._locations.pop(key, None)
-            self._nbytes.pop(key, None)
+            value = self._values.pop(key, None)
+            if isinstance(value, SpilledValue):
+                value.dispose()
+            if self.governor is not None:
+                self.governor.release(key)
+            nbytes = self._nbytes.pop(key, 0)
+            for node in self._locations.pop(key, ()):
+                self._node_bytes[node] = max(
+                    0, self._node_bytes.get(node, 0) - nbytes)
 
     def __len__(self) -> int:
         with self._lock:

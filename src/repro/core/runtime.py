@@ -29,6 +29,7 @@ from .dag import TaskGraph, TaskNode, TaskState
 from .executors import make_executor
 from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
 from .futures import Future, ObjectStore, TaskFailedError
+from .memory import budget_from_env
 from .scheduler import Scheduler
 from .tracing import TraceEvent, Tracer
 
@@ -73,8 +74,18 @@ class Runtime:
         backend: str = "thread",
         cluster: Any = None,
         n_agents: Optional[int] = None,
+        memory_budget: Any = None,
+        spill_dir: Optional[str] = None,
     ):
+        # memory governance (DESIGN.md §13): explicit knob beats
+        # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
+        # per address-space domain: the scheduler-side store, each
+        # process-backend plane, each cluster node agent.
+        self.memory_budget = budget_from_env(memory_budget)
+        self.spill_dir = spill_dir
         backend_opts = {}
+        if backend == "process" and self.memory_budget:
+            backend_opts["memory_budget"] = self.memory_budget
         if backend == "cluster":
             # geometry comes from the cluster harness: n_agents real node
             # agents × workers_per_node worker processes on each
@@ -85,6 +96,10 @@ class Runtime:
             n_workers = cluster.n_agents * cluster.workers_per_node
             workers_per_node = cluster.workers_per_node
             backend_opts["cluster"] = cluster
+            # agents learn the budget from the welcome handshake (their
+            # own --memory-budget flag wins; see repro.cluster.agent)
+            if self.memory_budget and getattr(cluster, "memory_budget", None) is None:
+                cluster.memory_budget = self.memory_budget
         self.n_workers = int(n_workers)
         self.backend = backend
         self.cluster = cluster
@@ -109,9 +124,12 @@ class Runtime:
             workers_per_node = 1 if backend == "process" else self.n_workers
         self.workers_per_node = workers_per_node
         self.store = ObjectStore()
+        self.store.configure_memory(self.memory_budget, spill_dir=self.spill_dir)
         self.graph = TaskGraph()
         self.scheduler = Scheduler(
-            self.graph, self.store, policy=policy, workers_per_node=self.workers_per_node
+            self.graph, self.store, policy=policy,
+            workers_per_node=self.workers_per_node,
+            node_budget=self.memory_budget,
         )
         self.tracer = Tracer(enabled=tracing)
         self.retry = retry
@@ -321,6 +339,10 @@ class Runtime:
                 return
             for key, val in zip(out_keys, result):
                 self._put_output(key, val, node_id)
+        if out_keys:
+            # observed output footprint feeds memory-aware placement
+            self.scheduler.note_output_bytes(
+                primary.name, sum(self.store.nbytes(k) for k in out_keys))
         ready = self.graph.mark_done(primary.task_id)
         if t.task_id != primary.task_id:
             # speculative clone won: record clone done too
@@ -418,6 +440,7 @@ class Runtime:
         self.scheduler.close()
         self.executor.shutdown(wait=wait)
         self.tracer.stop()
+        self.store.dispose_spills()
 
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:
@@ -435,4 +458,5 @@ class Runtime:
             "wallclock_s": self.tracer.wallclock(),
             "utilization": self.tracer.utilization(self.n_workers),
             "executor": self.executor.stats(),
+            "memory": self.store.memory_stats(),
         }

@@ -13,6 +13,11 @@ differ only in *which* ready task a worker receives:
                   node under ``thread``, per worker process under
                   ``process``, per TCP node agent under ``cluster`` —
                   where a miss costs a real wire transfer (DESIGN.md §12).
+                  With a per-node memory budget configured (DESIGN.md §13)
+                  the policy is additionally *memory-aware*: the placement
+                  score subtracts the projected input+output bytes that
+                  would exceed the node's remaining budget, so tasks flow
+                  to nodes with both the data and the headroom.
 * ``worksteal`` — per-worker deques; owner pops LIFO, thieves steal FIFO.
                   Beyond-paper addition used for straggler mitigation.
 """
@@ -20,10 +25,16 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-from .dag import TaskGraph, TaskNode
+from .dag import TaskGraph
 from .futures import ObjectStore
+
+# weight of the memory-overflow penalty relative to the locality score
+# (which lives in [0, 1]).  > 1 so a fully-local task on a node with NO
+# headroom scores below a fully-remote task on a node with room: paying
+# the transfer beats spilling the node's working set.
+MEMORY_PENALTY = 1.5
 
 
 class Scheduler:
@@ -33,6 +44,7 @@ class Scheduler:
         store: ObjectStore,
         policy: str = "fifo",
         workers_per_node: int = 1,
+        node_budget: Optional[int] = None,
     ):
         if policy not in ("fifo", "lifo", "locality", "worksteal"):
             raise ValueError(f"unknown scheduling policy: {policy}")
@@ -40,6 +52,10 @@ class Scheduler:
         self.graph = graph
         self.store = store
         self.workers_per_node = max(1, workers_per_node)
+        # per-node memory capacity for memory-aware placement (None =
+        # unbounded: pure locality, the pre-§13 behaviour)
+        self.node_budget = node_budget
+        self._out_bytes: Dict[str, int] = {}   # task name -> output-size EMA
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._queue: collections.deque = collections.deque()
@@ -123,26 +139,55 @@ class Scheduler:
             return None
         node = self.node_of(worker)
         window = min(len(self._queue), 64)
-        best_i, best_score = 0, -1.0
+        best_i, best_score = 0, float("-inf")
         for i in range(window):
             tid = self._queue[i]
-            score = self._locality_score(tid, node)
+            score = self._placement_score(tid, node)
             if score > best_score:
                 best_i, best_score = i, score
                 if best_score >= 1.0:
-                    break   # fully local — no better score exists
+                    break   # fully local, no overflow — can't be beaten
         self._queue.rotate(-best_i)
         tid = self._queue.popleft()
         self._queue.rotate(best_i)
         return tid
 
-    def _locality_score(self, task_id: int, node: int) -> float:
-        """Fraction of input *bytes* already resident in this worker's
-        address-space domain (falls back to input count when sizes are
-        unknown, e.g. scalars)."""
+    # ------------------------------------------------- placement scoring
+    def note_output_bytes(self, name: str, nbytes: int) -> None:
+        """Feed back an observed output size so projections for future
+        tasks of the same name track reality (simple half-life EMA)."""
+        with self._lock:
+            prev = self._out_bytes.get(name)
+            self._out_bytes[name] = int(nbytes) if prev is None \
+                else (prev + int(nbytes)) // 2
+
+    def _placement_score(self, task_id: int, node: int) -> float:
+        """Locality score minus a memory-overflow penalty (DESIGN.md §13).
+
+        Projected footprint of running the task on ``node`` = bytes of
+        inputs *not yet resident* there (they would have to be pulled in)
+        plus the projected output (EMA of past outputs of the same task
+        name).  The fraction of that projection exceeding the node's
+        remaining budget, weighted by :data:`MEMORY_PENALTY`, comes off
+        the locality score — so tasks drift to nodes with headroom, but
+        a worker with nothing better to do still makes progress (the
+        budget is a gradient, not an admission check)."""
         t = self.graph.get(task_id)
+        score, nonlocal_b = self._locality_score(t, node)
+        if self.node_budget:
+            projected = nonlocal_b + self._out_bytes.get(t.name, 0)
+            if projected > 0:
+                remaining = max(0, self.node_budget - self.store.node_bytes(node))
+                overflow = max(0, projected - remaining)
+                score -= MEMORY_PENALTY * overflow / projected
+        return score
+
+    def _locality_score(self, t, node: int):
+        """(fraction of input *bytes* already resident in this worker's
+        address-space domain, non-resident input bytes).  Falls back to
+        input count when sizes are unknown, e.g. scalars."""
         if not t.dep_keys:
-            return 0.0
+            return 0.0, 0
         total_b = local_b = 0
         local_n = 0
         for key in t.dep_keys:
@@ -152,5 +197,5 @@ class Scheduler:
                 local_n += 1
                 local_b += b
         if total_b > 0:
-            return local_b / total_b
-        return local_n / len(t.dep_keys)
+            return local_b / total_b, total_b - local_b
+        return local_n / len(t.dep_keys), 0

@@ -24,7 +24,7 @@ import heapq
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass
@@ -103,7 +103,6 @@ def critical_path(tasks: Sequence[SimTask]) -> float:
 
 
 def _topo_order(tasks: Sequence[SimTask]) -> List[int]:
-    by_id = {t.tid: t for t in tasks}
     indeg = {t.tid: len(t.deps) for t in tasks}
     children: Dict[int, List[int]] = {t.tid: [] for t in tasks}
     for t in tasks:

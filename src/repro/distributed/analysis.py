@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 import re
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 from ..models.lm import LMConfig

@@ -20,8 +20,8 @@ These tables are the primary §Perf hillclimb lever: rules are plain data.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any, Dict, Optional, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 from jax.sharding import Mesh, NamedSharding

@@ -7,9 +7,7 @@ the real drivers call them on data.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

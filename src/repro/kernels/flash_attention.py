@@ -39,7 +39,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int,
         n_k_eff = n_k
 
     def body(j, carry):
-        m, l, acc = carry
+        m, lse, acc = carry
         k = k_ref[0, 0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
         v = v_ref[0, 0, pl.ds(j * block_k, block_k), :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
@@ -53,7 +53,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int,
         m_new = jnp.maximum(m, jnp.max(s, axis=1))
         p = jnp.exp(s - m_new[:, None])
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p, axis=1)
+        l_new = lse * alpha + jnp.sum(p, axis=1)
         acc_new = acc * alpha[:, None] + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())))
         return m_new, l_new, acc_new
@@ -61,8 +61,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, block_k: int,
     m0 = jnp.full((bq,), NEG_INF, jnp.float32)
     l0 = jnp.zeros((bq,), jnp.float32)
     a0 = jnp.zeros((bq, d), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n_k_eff, body, (m0, l0, a0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+    m, lse, acc = jax.lax.fori_loop(0, n_k_eff, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(lse, 1e-30)[:, None]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",

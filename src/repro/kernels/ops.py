@@ -13,7 +13,6 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention

@@ -23,7 +23,7 @@ import numpy as np
 from ..configs import ARCH_IDS, get_config
 from ..core import api
 from ..distributed.steps import make_decode_step, make_prefill_step
-from ..models.lm import LMConfig, init_caches, init_params
+from ..models.lm import LMConfig, init_params
 from .mesh import make_local_mesh
 
 

@@ -18,16 +18,13 @@ CPU-scale usage (the end-to-end example):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import math
 import time
-from pathlib import Path
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs import ARCH_IDS, get_config
 from ..core import api

@@ -104,7 +104,7 @@ def _chunked_attn(q, k, v, q_pos, kv_pos, window, chunk: int = 1024,
     qf = q.astype(sd)
 
     def step(carry, inp):
-        m, l, acc = carry
+        m, lse, acc = carry
         k_i, v_i, pos_i = inp
         s = (jnp.einsum("bqkgh,bskh->bkgqs", qf, k_i.astype(sd)) * scale
              ).astype(sd)
@@ -113,7 +113,7 @@ def _chunked_attn(q, k, v, q_pos, kv_pos, window, chunk: int = 1024,
         m_new = jnp.maximum(m, jnp.max(s, axis=-1).astype(jnp.float32))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s.astype(jnp.float32) - m_new[..., None]).astype(sd)
-        l_new = l * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
+        l_new = lse * alpha + jnp.sum(p.astype(jnp.float32), axis=-1)
         acc_new = acc * alpha[..., None] + jnp.einsum(
             "bkgqs,bskh->bkgqh", p, v_i.astype(sd)).astype(jnp.float32)
         return (m_new, l_new, acc_new), None
@@ -121,9 +121,9 @@ def _chunked_attn(q, k, v, q_pos, kv_pos, window, chunk: int = 1024,
     m0 = jnp.full((B, K, G, Sq), NEG_INF, dtype=jnp.float32)
     l0 = jnp.zeros((B, K, G, Sq), dtype=jnp.float32)
     a0 = jnp.zeros((B, K, G, Sq, hd), dtype=jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc),
+    (m, lse, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, pc),
                                   unroll=n_chunks if unroll else 1)
-    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    o = acc / jnp.maximum(lse, 1e-30)[..., None]
     return o.transpose(0, 3, 1, 2, 4)  # (B,Sq,K,G,hd)
 
 

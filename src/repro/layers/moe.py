@@ -26,7 +26,6 @@ size 1); it doubles as the test oracle target and the single-device path.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

@@ -19,7 +19,6 @@ Training path only (no KV cache) — prefill/decode stay on the GSPMD path.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -28,7 +27,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .attention import _chunked_attn, _dense_attn
-from .norms import rmsnorm, rmsnorm_plain
+from .norms import rmsnorm
 from .rope import apply_rope, rope_angles
 
 

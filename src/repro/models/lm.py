@@ -15,9 +15,7 @@ period per step) so the compiled HLO is O(1) in depth; the remainder layers
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -48,7 +48,8 @@ def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, dtype=moment_dtype)
+        def zeros(p):
+            return jnp.zeros(p.shape, dtype=moment_dtype)
         return AdamWState(
             count=jnp.zeros((), jnp.int32),
             mu=jax.tree.map(zeros, params),

@@ -56,8 +56,8 @@ def test_restart_determinism(tmp_path):
     d1 = tmp_path / "a"
     full = train_loop(cfg, steps=6, batch=2, seq=16, workers=2, seed=3,
                       log_every=0)
-    part1 = train_loop(cfg, steps=3, batch=2, seq=16, workers=2, seed=3,
-                       ckpt_dir=str(d1), ckpt_every=3, log_every=0)
+    train_loop(cfg, steps=3, batch=2, seq=16, workers=2, seed=3,
+               ckpt_dir=str(d1), ckpt_every=3, log_every=0)
     part2 = train_loop(cfg, steps=6, batch=2, seq=16, workers=2, seed=3,
                        ckpt_dir=str(d1), restore=True, log_every=0)
     assert part2["restored_from"] == 3

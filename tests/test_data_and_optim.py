@@ -1,5 +1,4 @@
 """Data pipeline, optimizer, gradient compression."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,5 +1,4 @@
 """End-to-end integration: train driver, serve driver, fault injection."""
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,361 @@
+"""Memory governance (DESIGN.md §13): budgets, LRU eviction, spill-to-disk
+mmap faulting, memory-aware placement, and out-of-core end-to-end runs.
+
+The acceptance bar: a K-means run whose working set exceeds
+``RJAX_MEMORY_BUDGET`` finishes with >0 spills and >0 faults and produces
+results bitwise-equal to the unbounded run, on every backend.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.algorithms import kmeans
+from repro.core import api
+from repro.core.dag import TaskGraph, TaskNode
+from repro.core.executors import SHM_MIN_BYTES, SegmentPlane
+from repro.core.futures import ObjectStore
+from repro.core.memory import (
+    LRULedger,
+    MemoryBudget,
+    MemoryGovernor,
+    SpilledValue,
+    parse_bytes,
+    spill_to_file,
+    spillable,
+)
+from repro.core.scheduler import Scheduler
+
+
+# ------------------------------------------------------------- parse_bytes
+def test_parse_bytes_units_and_unbounded():
+    assert parse_bytes("256M") == 256 << 20
+    assert parse_bytes("1g") == 1 << 30
+    assert parse_bytes("1.5k") == 1536
+    assert parse_bytes("4096") == 4096
+    assert parse_bytes(1 << 20) == 1 << 20
+    assert parse_bytes("64kb") == 64 << 10
+    # None / 0 / empty mean "unbounded"
+    assert parse_bytes(None) is None
+    assert parse_bytes(0) is None
+    assert parse_bytes("0") is None
+    assert parse_bytes("") is None
+    with pytest.raises(ValueError):
+        parse_bytes("12 parsecs")
+    with pytest.raises(ValueError):
+        parse_bytes(-1)
+
+
+# ------------------------------------------------------------ budget maths
+def test_budget_watermarks_and_ledger():
+    b = MemoryBudget(1000, high_frac=0.9, low_frac=0.5)
+    b.charge(800)
+    assert not b.over_high()           # 800 <= 900
+    b.charge(150)
+    assert b.over_high()               # 950 > 900
+    assert b.release_target() == 450   # down to 500
+    b.discharge(500)
+    assert b.release_target() == 0
+    b.note_spill(100)
+    b.note_fault(100)
+    s = b.stats()
+    assert s["spills"] == 1 and s["faults"] == 1
+    assert s["spill_bytes"] == 100 and s["fault_bytes"] == 100
+
+
+def test_lru_order_pins_and_victims():
+    led = LRULedger()
+    led.add((1, 1), 100)
+    led.add((2, 1), 100)
+    led.add((3, 1), 100)
+    led.touch((1, 1))                        # (2,1) is now coldest
+    assert [k for k, _ in led.victims(150)] == [(2, 1), (3, 1)]
+    led.pin((2, 1))
+    assert [k for k, _ in led.victims(150)] == [(3, 1), (1, 1)]
+    led.pin((2, 1))
+    led.unpin((2, 1))
+    assert led.pinned((2, 1))                # pin counts nest
+    led.unpin((2, 1))
+    assert not led.pinned((2, 1))
+    assert led.discard((3, 1)) == 100
+    assert (3, 1) not in led
+
+
+def test_governor_soft_bound_when_everything_pinned():
+    spilled = []
+    gov = MemoryGovernor(MemoryBudget(100, high_frac=0.5, low_frac=0.3),
+                         lambda key: spilled.append(key) or 10)
+    gov.pin_many([(1, 1)])
+    gov.admit((1, 1), 200)          # over high, but the only entry is pinned
+    assert spilled == []            # progress beats the watermark
+    gov.unpin_many([(1, 1)])
+    gov.admit((2, 1), 10)           # (1,1) now evictable
+    assert (1, 1) in spilled
+
+
+# ------------------------------------------- store spill/fault round trips
+def _governed_store(budget, tmp_path, min_bytes=0):
+    store = ObjectStore()
+    store.configure_memory(budget, spill_dir=str(tmp_path),
+                           min_bytes=min_bytes)
+    return store
+
+
+@pytest.mark.parametrize("make", [
+    lambda: np.array(3.5),                                   # 0-d
+    lambda: np.asfortranarray(np.arange(24.0).reshape(4, 6)),  # F-order
+    lambda: np.arange(64, dtype=np.int32).reshape(8, 8)[::2, ::2],  # strided
+    lambda: np.arange(100, dtype=np.uint16),
+])
+def test_spill_fault_roundtrip_preserves_values(tmp_path, make):
+    """0-d, Fortran-order, and strided arrays must survive the
+    spill → fault round trip bit-for-bit (shape, dtype, contents)."""
+    store = _governed_store(64, tmp_path)   # tiny: everything spills
+    arr = make()
+    store.put((1, 1), arr, node=0)
+    store.put((2, 1), np.zeros(1024), node=0)  # pushes (1,1) past the mark
+    assert store.memory_stats()["spills"] >= 1
+    back = store.get_nowait((1, 1))
+    assert store.memory_stats()["faults"] >= 1
+    assert isinstance(back, np.memmap)
+    assert back.shape == arr.shape and back.dtype == arr.dtype
+    assert np.array_equal(back, np.ascontiguousarray(arr).reshape(arr.shape))
+
+
+def test_reader_view_survives_full_eviction(tmp_path):
+    """A reader holding a faulted view keeps a valid array even after the
+    store evicts the entry entirely and the spill file is unlinked (POSIX
+    keeps the mapping alive until the last reference drops)."""
+    store = _governed_store(4096, tmp_path)
+    arr = np.arange(2048, dtype=np.float64)
+    store.put((1, 1), arr, node=0)
+    store.put((2, 1), np.ones(4096), node=0)   # evicts (1,1) to disk
+    view = store.get_nowait((1, 1))            # faulted memmap view
+    path = view.filename
+    assert os.path.exists(path)
+    store.evict((1, 1))                        # full eviction unlinks
+    del store
+    assert np.array_equal(view, arr)           # mapping still valid
+    checksum = float(np.sum(view))
+    assert checksum == float(np.sum(arr))
+
+
+def test_spilled_entry_evicted_without_fault_unlinks_file(tmp_path):
+    store = _governed_store(64, tmp_path)
+    store.put((1, 1), np.arange(512, dtype=np.float64), node=0)
+    store.put((2, 1), np.ones(512), node=0)
+    spilled = store._values[(1, 1)]
+    assert isinstance(spilled, SpilledValue)
+    assert os.path.exists(spilled.path)
+    store.evict((1, 1))
+    assert not os.path.exists(spilled.path)
+
+
+def test_spillable_excludes_memmaps_and_objects():
+    assert spillable(np.zeros(4096))
+    assert not spillable(np.zeros(4096, dtype=object), min_bytes=0)
+    assert not spillable([1, 2, 3])
+    back = spill_to_file(np.zeros(4096)).load()
+    assert not spillable(back)   # already file-backed: never re-spilled
+
+
+# ------------------------------------------------- node budget bookkeeping
+def test_node_bytes_tracking_and_forget_node_resets_ledger():
+    """Residency reset after an agent respawn must also reset that node's
+    budget ledger, or placement starves the fresh (empty) node."""
+    store = ObjectStore()
+    a = np.zeros(1000, dtype=np.uint8)
+    store.put((1, 1), a, node=0)
+    store.note_location((1, 1), 1)
+    store.put((2, 1), np.zeros(500, dtype=np.uint8), node=1)
+    assert store.node_bytes(0) == 1000
+    assert store.node_bytes(1) == 1500
+    store.forget_node(1)
+    assert store.node_bytes(1) == 0
+    assert store.locations((1, 1)) == {0}
+    store.evict((1, 1))
+    assert store.node_bytes(0) == 0
+
+
+# ------------------------------------------------ memory-aware placement
+def _mk_sched(node_budget=None, workers_per_node=1):
+    graph = TaskGraph()
+    store = ObjectStore()
+    sched = Scheduler(graph, store, policy="locality",
+                      workers_per_node=workers_per_node,
+                      node_budget=node_budget)
+    return sched, graph, store
+
+
+def _add_task(graph, store, dep_nbytes_by_node, name="t"):
+    tid = graph.next_task_id()
+    dep_keys = set()
+    for node, nbytes in dep_nbytes_by_node:
+        did = store.new_data_id()
+        key = (did, 1)
+        store.put(key, np.zeros(max(0, nbytes), dtype=np.uint8), node=node)
+        dep_keys.add(key)
+    graph.add_task(TaskNode(task_id=tid, name=name, fn=lambda: None,
+                            args=(), kwargs={}, dep_keys=dep_keys,
+                            out_keys=[]))
+    return tid
+
+
+def test_placement_prefers_headroom_over_pure_locality():
+    """A fully-local task whose projected output mostly cannot fit on
+    this node scores below a remote-input task that fits: tasks flow to
+    nodes with both the data and the headroom."""
+    budget = 1 << 20
+    sched, graph, store = _mk_sched(node_budget=budget)
+    # node 0 is mostly full: ~260 KB of headroom left after the filler
+    # and task A's resident input
+    store.put((500, 1), np.zeros(700 << 10, dtype=np.uint8), node=0)
+    # task A: input local to node 0, but its outputs are known to be
+    # ~1 MB — more than 2/3 of that projection overflows the headroom
+    a = _add_task(graph, store, [(0, 64 << 10)], name="big_out")
+    sched.note_output_bytes("big_out", 1 << 20)
+    # task B: input lives on node 1 (remote for worker 0), small output —
+    # its ~128 KB transfer fits node 0's headroom
+    b = _add_task(graph, store, [(1, 128 << 10)], name="small_out")
+    sched.note_output_bytes("small_out", 1024)
+    sched.push_many([a, b])
+    # pure locality would hand worker 0 task A (score 1.0 vs 0.0); the
+    # memory-aware score penalizes A's overflow below B's small,
+    # affordable transfer
+    assert sched.take(0, timeout=0.1) == b
+    # worker 1 (node 1, has headroom) then takes A
+    assert sched.take(1, timeout=0.1) == a
+
+
+def test_placement_without_budget_is_pure_locality():
+    sched, graph, store = _mk_sched(node_budget=None)
+    store.put((500, 1), np.zeros(1 << 20, dtype=np.uint8), node=0)
+    a = _add_task(graph, store, [(0, 1 << 18)], name="big_out")
+    sched.note_output_bytes("big_out", 1 << 19)
+    b = _add_task(graph, store, [(1, 1 << 18)], name="small_out")
+    sched.push_many([a, b])
+    assert sched.take(0, timeout=0.1) == a   # unbounded: locality wins
+
+
+def test_progress_beats_budget_when_every_choice_overflows():
+    """The budget is a gradient, not an admission check: a worker with
+    only overflowing candidates still takes one."""
+    sched, graph, store = _mk_sched(node_budget=4096)
+    store.put((500, 1), np.zeros(4096, dtype=np.uint8), node=0)
+    a = _add_task(graph, store, [(1, 1 << 20)], name="huge")
+    sched.push_many([a])
+    assert sched.take(0, timeout=0.1) == a
+
+
+# ------------------------------------------------- segment-plane eviction
+@pytest.mark.skipif(os.environ.get("RJAX_MP_CONTEXT") == "spawn",
+                    reason="plane unit test independent of start method")
+def test_segment_plane_evicts_cold_and_counts_faults():
+    nbytes = max(SHM_MIN_BYTES, 1 << 16)
+    plane = SegmentPlane(memory_budget=int(nbytes * 2.2))
+    evicted_names = []
+    plane.on_evict = evicted_names.append
+    arrs = {k: np.full(nbytes // 8, float(k)) for k in (1, 2, 3)}
+    try:
+        plane.ensure((1, 1), arrs[1])
+        plane.ensure((2, 1), arrs[2])
+        plane.ensure((3, 1), arrs[3])          # crosses the high mark
+        stats = plane.stats()
+        assert stats["plane_spills"] >= 1
+        assert len(evicted_names) == stats["plane_spills"]
+        # re-planing an evicted key is a fault, and pinned keys survive
+        plane.governor.pin_many([(2, 1), (3, 1)])
+        plane.ensure((1, 1), arrs[1])
+        stats = plane.stats()
+        assert stats["plane_faults"] >= 1 or (1, 1) in plane._by_key
+        plane.governor.unpin_many([(2, 1), (3, 1)])
+    finally:
+        plane.close()
+
+
+def test_segment_plane_pinned_keys_never_evicted():
+    nbytes = max(SHM_MIN_BYTES, 1 << 16)
+    plane = SegmentPlane(memory_budget=int(nbytes * 1.5))
+    try:
+        plane.governor.pin_many([(1, 1)])
+        plane.ensure((1, 1), np.ones(nbytes // 8))
+        plane.ensure((2, 1), np.ones(nbytes // 8))
+        plane.ensure((3, 1), np.ones(nbytes // 8))
+        assert (1, 1) in plane._by_key   # over budget, but pinned
+        plane.governor.unpin_many([(1, 1)])
+    finally:
+        plane.close()
+
+
+# ----------------------------------------------------- end-to-end, bounded
+def _oob_kmeans(backend, budget, tmp_path, **kw):
+    rt = api.runtime_start(n_workers=2, backend=backend, policy="locality",
+                           memory_budget=budget, tracing=False,
+                           spill_dir=str(tmp_path), **kw)
+    try:
+        res = kmeans.run_kmeans(n_points=16000, d=10, k=4, fragments=8,
+                                max_iters=4, seed=0)
+        return res, rt.stats()
+    finally:
+        api.runtime_stop(wait=False)
+
+
+@pytest.mark.parametrize("backend", ["thread", "process"])
+def test_out_of_core_kmeans_matches_unbounded(tmp_path, backend):
+    """Working set (8 × 160 KB fragments) over a 400 KB budget: the run
+    must finish, spill, fault, and match the unbounded result bitwise."""
+    ref, ref_stats = _oob_kmeans(backend, None, tmp_path)
+    assert ref_stats["memory"]["spills"] == 0
+    res, stats = _oob_kmeans(backend, "400K", tmp_path)
+    mem = stats["memory"]
+    assert mem["spills"] > 0 and mem["faults"] > 0
+    assert np.array_equal(ref.centroids, res.centroids)
+    assert ref.iterations == res.iterations
+    assert ref.sse == res.sse
+    if backend == "process":
+        ex = stats["executor"]
+        assert ex["plane_spills"] > 0 and ex["plane_faults"] > 0
+
+
+def test_out_of_core_kmeans_cluster_backend(tmp_path):
+    """Same bar on the real TCP cluster: scheduler store AND node-agent
+    planes spill/fault, results bitwise-equal to the unbounded run."""
+    rt = api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           policy="locality", tracing=False)
+    try:
+        ref = kmeans.run_kmeans(n_points=16000, d=10, k=4, fragments=8,
+                                max_iters=4, seed=0)
+    finally:
+        api.runtime_stop(wait=False)
+
+    rt = api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           policy="locality", memory_budget="400K",
+                           spill_dir=str(tmp_path), tracing=False)
+    try:
+        res = kmeans.run_kmeans(n_points=16000, d=10, k=4, fragments=8,
+                                max_iters=4, seed=0)
+        stats = rt.stats()
+        agents = rt.executor.agent_stats()
+    finally:
+        api.runtime_stop(wait=False)
+    mem = stats["memory"]
+    assert mem["spills"] > 0 and mem["faults"] > 0
+    node_spills = sum((s or {}).get("plane_spills", 0) for s in agents)
+    node_faults = sum((s or {}).get("plane_faults", 0) for s in agents)
+    assert node_spills > 0 and node_faults > 0
+    assert np.array_equal(ref.centroids, res.centroids)
+    assert ref.sse == res.sse
+
+
+def test_env_knob_reaches_runtime(monkeypatch, tmp_path):
+    monkeypatch.setenv("RJAX_MEMORY_BUDGET", "1M")
+    rt = api.runtime_start(n_workers=2, tracing=False,
+                           spill_dir=str(tmp_path))
+    try:
+        assert rt.memory_budget == 1 << 20
+        assert rt.store.governor is not None
+        assert rt.scheduler.node_budget == 1 << 20
+    finally:
+        api.runtime_stop(wait=False)

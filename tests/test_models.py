@@ -7,8 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.layers import moe, rglru, ssd
-from repro.models.lm import LMConfig, forward, init_caches, init_params, loss_fn
+from repro.layers import moe, rglru
+from repro.models.lm import LMConfig, forward, init_params, loss_fn
 
 # minutes of JAX compile+run on CPU: opt-in via `-m slow` (see pytest.ini)
 pytestmark = pytest.mark.slow

@@ -13,7 +13,6 @@ from hypothesis import strategies as st
 from repro.cluster.channel import AgentChannel
 from repro.cluster.protocol import (
     ConnectionClosed,
-    Frame,
     Put,
     Ref,
     array_frame,

@@ -9,7 +9,6 @@ filesystem (O_APPEND writes are atomic for these sizes), which holds in
 both address-space models.
 """
 import os
-import threading
 import time
 
 import numpy as np
@@ -141,8 +140,8 @@ def test_inout_versioning(backend):
 
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_numpy_payloads_and_locality_policy(backend):
-    rt = api.runtime_start(n_workers=4, workers_per_node=2, policy="locality",
-                           backend=backend)
+    api.runtime_start(n_workers=4, workers_per_node=2, policy="locality",
+                      backend=backend)
     try:
         gen = api.task(lambda n: np.arange(n, dtype=np.float64), name="gen")
         s = api.task(lambda a, b: float(np.sum(a) + np.sum(b)), name="s")
@@ -174,7 +173,7 @@ def test_speculation_duplicates_straggler(backend):
             return i
 
         t = api.task(work, name="work")
-        futs = [t(i, 0.02) for i in range(6)]
+        [t(i, 0.02) for i in range(6)]
         straggler = t(99, 1.0)  # way beyond 2x median
         assert api.wait_on(straggler) == 99
         api.barrier()

@@ -7,7 +7,6 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.serialization import (
-    CODECS,
     MmapCodec,
     benchmark_codecs,
     deserialize,
@@ -102,8 +101,8 @@ def test_mmap_unowned_view_leaves_user_file_alone(tmp_path):
     mc = MmapCodec()
     p = str(tmp_path / "keep.rjx")
     mc.ser_to_file(arr, p)
-    view = mc.de_from_file(p)
-    del view
+    _view = mc.de_from_file(p)
+    del _view
     gc.collect()
     assert os.path.exists(p)
 

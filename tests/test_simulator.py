@@ -1,5 +1,4 @@
 """Discrete-event simulator properties (Graham bounds etc.)."""
-import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
