@@ -44,10 +44,12 @@ def deep_merge(dst: dict, src: dict) -> dict:
 
 
 def iter_out_of_core(tree, path=""):
+    # any key named out_of_core* is a spill/fault ledger block (e.g. the
+    # single-node quick bench emits out_of_core + out_of_core_thread)
     if isinstance(tree, dict):
         for k, v in tree.items():
             where = f"{path}.{k}" if path else k
-            if k == "out_of_core" and isinstance(v, dict):
+            if k.startswith("out_of_core") and isinstance(v, dict):
                 yield where, v
             else:
                 yield from iter_out_of_core(v, where)

@@ -82,7 +82,10 @@ def run_kmeans(
 
     frag_n = [n_points // fragments] * fragments
     frag_n[-1] += n_points - sum(frag_n)
-    frags = [fill_t(seed + i, frag_n[i], d) for i in range(fragments)]
+    # fan-out loops go through map_tasks: one batched submission instead
+    # of per-task graph/inflight locking (DESIGN.md §14)
+    frags = api.map_tasks(fill_t, [(seed + i, frag_n[i], d)
+                                   for i in range(fragments)])
 
     rng = np.random.default_rng(seed)
     centroids = rng.standard_normal((k, d)) * 5.0
@@ -90,7 +93,7 @@ def run_kmeans(
     sse = float("inf")
     it = 0
     for it in range(1, max_iters + 1):
-        partials = [psum_t(f, centroids) for f in frags]
+        partials = api.map_tasks(psum_t, [(f, centroids) for f in frags])
         acc = tree_reduce(partials, merge_t, arity=merge_arity)
         res = upd_t(acc, centroids)
         centroids, shift, sse = api.wait_on(res)  # per-iteration sync (Fig. 4)

@@ -100,7 +100,9 @@ def run_knn(
 
     frag_n = [n_train // train_fragments] * train_fragments
     frag_n[-1] += n_train - sum(frag_n)
-    frags = [fill_t(seed + i, frag_n[i], d, n_classes) for i in range(train_fragments)]
+    # fragment fan-outs use batched submission (DESIGN.md §14)
+    frags = api.map_tasks(fill_t, [(seed + i, frag_n[i], d, n_classes)
+                                   for i in range(train_fragments)])
 
     blk_n = [n_test // test_blocks] * test_blocks
     blk_n[-1] += n_test - sum(blk_n)
@@ -108,7 +110,7 @@ def run_knn(
     n_tasks = train_fragments
     for b in range(test_blocks):
         test_b = gen_test_t(10_000 + seed + b, blk_n[b], d, n_classes)
-        locals_ = [frag_t(f, test_b, k) for f in frags]
+        locals_ = api.map_tasks(frag_t, [(f, test_b, k) for f in frags])
         merged = tree_reduce(locals_, merge_t, arity=merge_arity)
         preds.append(classify_t(merged, n_classes))
         n_tasks += 1 + train_fragments + (train_fragments - 1) + 1

@@ -98,20 +98,21 @@ def run_linreg(
 
     frag_n = [n_rows // fragments] * fragments
     frag_n[-1] += n_rows - sum(frag_n)
-    frags = [fill_t(seed + i, frag_n[i], p) for i in range(fragments)]
+    # fragment fan-outs use batched submission (DESIGN.md §14)
+    frags = api.map_tasks(fill_t, [(seed + i, frag_n[i], p)
+                                   for i in range(fragments)])
 
-    ztzs = [ztz_t(f) for f in frags]
-    ztys = [zty_t(f) for f in frags]
+    ztzs = api.map_tasks(ztz_t, [(f,) for f in frags])
+    ztys = api.map_tasks(zty_t, [(f,) for f in frags])
     ztz = tree_reduce(ztzs, merge_t, arity=merge_arity)
     zty = tree_reduce(ztys, merge_t, arity=merge_arity)
     beta = fit_t(ztz, zty, ridge)
 
     blk_m = [n_pred // pred_blocks] * pred_blocks
     blk_m[-1] += n_pred - sum(blk_m)
-    preds = []
-    for b in range(pred_blocks):
-        Xp = genpred_t(50_000 + seed + b, blk_m[b], p)
-        preds.append(pred_t(Xp, beta))
+    Xps = api.map_tasks(genpred_t, [(50_000 + seed + b, blk_m[b], p)
+                                    for b in range(pred_blocks)])
+    preds = api.map_tasks(pred_t, [(Xp, beta) for Xp in Xps])
     beta_v = api.wait_on(beta)
     preds_v = api.wait_on(preds)
     n_tasks = fragments * 3 + 2 * (fragments - 1) + 1 + 2 * pred_blocks

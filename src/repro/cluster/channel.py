@@ -2,34 +2,43 @@
 
 One TCP connection per agent carries every worker slot's traffic,
 multiplexed by message id: ``request`` blocks the calling dispatcher
-thread until the matching reply arrives, ``post`` is fire-and-forget
-(alias/drop/exit control messages).  A single reader thread per channel
-routes replies; per-connection FIFO ordering is what makes the data-plane
-bookkeeping safe (an ``alias`` posted when a result is published is
-always processed by the agent before any later task that ``Ref``-erences
-the aliased key).
+thread until the matching reply arrives, ``request_cb`` registers a
+completion *callback* instead (the pipelined dispatch path, DESIGN.md
+§14: a slot streams up to depth requests and the reader thread routes
+each reply straight into the executor's completion handler), and ``post``
+is fire-and-forget (alias/drop/exit control messages).  A single reader
+thread per channel routes replies; per-connection FIFO ordering is what
+makes the data-plane bookkeeping safe (an ``alias`` posted when a result
+is published is always processed by the agent before any later task that
+``Ref``-erences the aliased key).
 
 If the agent dies, every pending and future request fails with
-:class:`~repro.cluster.protocol.ConnectionClosed`; the executor maps that
-to a retryable ``WorkerCrashedError`` and respawns the agent.
+:class:`~repro.cluster.protocol.ConnectionClosed`: blocking waiters are
+woken with the error, and callback requests are drained (with the error)
+on a dedicated thread — never on the thread that noticed the failure,
+which may hold the executor's per-agent ordering lock.  The executor maps
+either to a retryable ``WorkerCrashedError`` and respawns the agent.
 """
 from __future__ import annotations
 
 import socket
+import sys
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+import traceback
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from .protocol import ConnectionClosed, recv_msg, send_msg
 
 
 class _Pending:
-    __slots__ = ("event", "meta", "frames", "error")
+    __slots__ = ("event", "meta", "frames", "error", "callback")
 
-    def __init__(self):
+    def __init__(self, callback: Optional[Callable] = None):
         self.event = threading.Event()
         self.meta: Optional[dict] = None
         self.frames: Optional[List[memoryview]] = None
         self.error: Optional[BaseException] = None
+        self.callback = callback
 
 
 class AgentChannel:
@@ -88,6 +97,37 @@ class AgentChannel:
                 timeout: Optional[float] = None) -> Tuple[dict, List[memoryview]]:
         return self.request_async(meta, frames)(timeout=timeout)
 
+    def request_cb(self, meta: dict, frames: Sequence[Sequence],
+                   callback: Callable) -> None:
+        """Send a request whose reply is delivered as
+        ``callback(meta, frames, error)`` on the channel's reader thread
+        (``error`` is None on success).  Exactly one invocation per
+        accepted request; if the *send itself* fails, the callback is NOT
+        invoked — the ``ConnectionClosed`` propagates to the caller, which
+        owns that task's completion (every other pending request is failed
+        through its own callback/waiter)."""
+        slot = _Pending(callback=callback)
+        with self._pending_lock:
+            if self.closed:
+                raise ConnectionClosed(f"agent {self.node_id} is gone")
+            mid = self._next_mid
+            self._next_mid += 1
+            self._pending[mid] = slot
+        meta = dict(meta, mid=mid)
+        try:
+            with self._send_lock:
+                send_msg(self.sock, meta, frames)
+        except ConnectionClosed:
+            # if the reader noticed the death first it already owns (or
+            # drained) every pending slot, ours included — in that case the
+            # callback fires with the error and we must NOT also raise, or
+            # the task would be completed twice
+            with self._pending_lock:
+                owned = self._pending.pop(mid, None) is not None
+            self._fail_all()
+            if owned:
+                raise
+
     def post(self, meta: dict, frames: Sequence[Sequence] = ()) -> None:
         """Fire-and-forget control message (no reply expected)."""
         try:
@@ -105,7 +145,17 @@ class AgentChannel:
                 mid = meta.get("mid")
                 with self._pending_lock:
                     slot = self._pending.pop(mid, None)
-                if slot is not None:
+                if slot is None:
+                    continue
+                if slot.callback is not None:
+                    # completion runs here, outside the pending lock; a
+                    # raising completion is an executor bug — surfacing it
+                    # must not take the whole channel down
+                    try:
+                        slot.callback(meta, frames, None)
+                    except BaseException:
+                        traceback.print_exc(file=sys.stderr)
+                else:
                     slot.meta, slot.frames = meta, frames
                     slot.event.set()
         except BaseException as err:  # noqa: BLE001 — a reader that dies
@@ -119,10 +169,30 @@ class AgentChannel:
             self.closed = True
             pending = list(self._pending.values())
             self._pending.clear()
+        if not pending:
+            return
+        err = err if err is not None else ConnectionClosed(
+            f"agent {self.node_id} connection lost", mid_message=True)
+        cb_slots = []
         for slot in pending:
-            slot.error = err if err is not None else ConnectionClosed(
-                f"agent {self.node_id} connection lost", mid_message=True)
-            slot.event.set()
+            if slot.callback is not None:
+                cb_slots.append(slot)
+            else:
+                slot.error = err
+                slot.event.set()
+        if cb_slots:
+            # drain callbacks on their own thread: _fail_all may run on a
+            # sender thread that holds the executor's per-agent ordering
+            # lock, which the failure handlers (agent restart) also take
+            def drain():
+                for slot in cb_slots:
+                    try:
+                        slot.callback(None, None, err)
+                    except BaseException:
+                        traceback.print_exc(file=sys.stderr)
+
+            threading.Thread(target=drain, daemon=True,
+                             name=f"agent{self.node_id}-fail").start()
 
     # ----------------------------------------------------------------- closing
     def close(self) -> None:

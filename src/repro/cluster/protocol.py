@@ -30,6 +30,7 @@ markers:
 """
 from __future__ import annotations
 
+import os
 import pickle
 import struct
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -46,6 +47,14 @@ _U64 = struct.Struct("<Q")
 # is cheaper pickled inline in the metadata frame (keyed data is framed
 # regardless — it gets cached and reused on the far side)
 WIRE_MIN_FRAME_BYTES = 1024
+
+# messages whose total size (header + metadata + all frames) is at or
+# below this are copied into ONE contiguous buffer and written with a
+# single sendall — with TCP_NODELAY on, each sendall is its own packet,
+# so a small task message with a handful of little Ref/Put frames would
+# otherwise cost one packet per part (DESIGN.md §14).  Large frames keep
+# the zero-copy path: their buffers go to sendall directly.
+WIRE_COALESCE_MAX = int(os.environ.get("RJAX_WIRE_COALESCE", 65536))
 
 
 class ConnectionClosed(ConnectionError):
@@ -80,15 +89,29 @@ def recv_exactly(sock, n: int, mid_message: bool = True) -> memoryview:
 
 def send_msg(sock, meta: dict, frames: Sequence[Sequence] = ()) -> None:
     """Send one message.  Each entry of ``frames`` is a list of buffer
-    parts (bytes/memoryview) forming one frame; parts are written straight
-    to the socket, so an ndarray's buffer never passes through an
-    intermediate serialized blob."""
+    parts (bytes/memoryview) forming one frame.
+
+    Small messages (≤ ``WIRE_COALESCE_MAX`` total) are coalesced into one
+    buffer and one ``sendall`` — one syscall, one packet — which is the
+    common shape for pipelined task requests whose inputs are all ``Ref``
+    markers or small ``Put`` frames.  Past the threshold, the header and
+    metadata still go out in one write but each large frame part is handed
+    to ``sendall`` straight from the array's own buffer — no intermediate
+    serialized copy."""
     meta_blob = pickle.dumps(meta, protocol=5)
     lengths = [len(meta_blob)] + [sum(len(p) for p in f) for f in frames]
     header = _HEAD.pack(MAGIC, len(lengths)) + b"".join(_U64.pack(n) for n in lengths)
+    total = len(header) + sum(lengths)
     try:
-        sock.sendall(header)
-        sock.sendall(meta_blob)
+        if total <= WIRE_COALESCE_MAX:
+            buf = bytearray(header)
+            buf += meta_blob
+            for f in frames:
+                for part in f:
+                    buf += part
+            sock.sendall(buf)
+            return
+        sock.sendall(header + meta_blob)
         for f in frames:
             for part in f:
                 sock.sendall(part)

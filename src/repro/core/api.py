@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import functools
 import threading
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Iterable, List, Optional
 
 from .fault import RetryPolicy, SpeculationConfig
 from .runtime import Runtime
@@ -54,6 +54,7 @@ def runtime_start(
     n_agents: Optional[int] = None,
     memory_budget=None,
     spill_dir: Optional[str] = None,
+    pipeline_depth: Optional[int] = None,
 ) -> Runtime:
     """Initialize the global runtime (``compss_start``).
 
@@ -75,7 +76,12 @@ def runtime_start(
     to mmap-codec files (``spill_dir`` or ``$TMPDIR``) and fault back
     transparently on the next read, so working sets larger than one
     node's RAM degrade instead of dying.  Defaults to
-    ``RJAX_MEMORY_BUDGET``; ``None``/``0`` = unbounded."""
+    ``RJAX_MEMORY_BUDGET``; ``None``/``0`` = unbounded.
+
+    ``pipeline_depth`` bounds the in-flight task descriptors per worker
+    on the out-of-process backends (DESIGN.md §14): depth 1 is classic
+    stop-and-wait dispatch, higher depths overlap dispatch with remote
+    execution.  Defaults to ``RJAX_PIPELINE_DEPTH`` (4)."""
     global _runtime
     with _lock:
         if _runtime is not None and not _runtime._stopped:
@@ -92,6 +98,7 @@ def runtime_start(
             n_agents=n_agents,
             memory_budget=memory_budget,
             spill_dir=spill_dir,
+            pipeline_depth=pipeline_depth,
         )
         return _runtime
 
@@ -138,6 +145,11 @@ class TaskFunction:
             priority=self.priority, speculatable=self.speculatable,
         )
 
+    def map(self, args_list: Iterable[tuple]) -> List[Any]:
+        """Fan-out: submit one task per positional-args tuple in a single
+        batch (see :func:`map_tasks`)."""
+        return map_tasks(self, args_list)
+
     def inline(self, *args, **kwargs):
         """Run synchronously, bypassing the runtime (debugging aid)."""
         return self.fn(*args, **kwargs)
@@ -151,6 +163,27 @@ def task(fn: Optional[Callable] = None, *, returns: int = 1, name: Optional[str]
         return TaskFunction(f, returns=returns, name=name, max_retries=max_retries,
                             priority=priority, speculatable=speculatable)
     return wrap(fn) if fn is not None else wrap
+
+
+def map_tasks(task_fn: Any, args_list: Iterable[tuple]) -> List[Any]:
+    """Submit one task per entry of ``args_list`` (each a tuple of
+    positional arguments) in a single batched call, amortizing the
+    per-task graph/store/in-flight locking over the whole fan-out
+    (DESIGN.md §14).  ``task_fn`` may be a :class:`TaskFunction` or a
+    plain callable.  Returns the Futures in order — semantically identical
+    to ``[task_fn(*a) for a in args_list]``, just cheaper to submit::
+
+        frags = api.map_tasks(fill_t, [(seed + i, n, d) for i in range(k)])
+    """
+    rt = current_runtime()
+    if isinstance(task_fn, TaskFunction):
+        return rt.submit_many(
+            task_fn.fn, [tuple(a) for a in args_list],
+            name=task_fn.name, returns=task_fn.returns,
+            max_retries=task_fn.max_retries, priority=task_fn.priority,
+            speculatable=task_fn.speculatable,
+        )
+    return rt.submit_many(task_fn, [tuple(a) for a in args_list])
 
 
 def barrier(timeout: Optional[float] = None) -> None:

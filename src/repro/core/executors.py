@@ -34,6 +34,17 @@ differ only in **where** the function body runs:
                    per-worker code cache so each function body crosses the
                    pipe at most once.
 
+Dispatch pipelining (DESIGN.md §14): the out-of-process backends are
+*credit-based*.  Each worker (process pipe / cluster agent slot) accepts
+up to ``pipeline_depth`` in-flight task descriptors; the dispatcher thread
+hands a task off and immediately pulls the next one, while completions
+are drained elsewhere — a per-pool collector thread for the process
+backend, the per-agent channel reader for the cluster backend.  For the
+common all-keyed-ndarray task the process backend replaces the per-task
+pickle frame with a compact binary descriptor (fn-registry token, segment
+refs, evict piggyback).  A worker/agent that dies with depth > 1 tasks in
+flight fails *all* of them as retryable :class:`WorkerCrashedError`.
+
 Semantics that differ under ``"process"`` (DESIGN.md §11):
 
 * task bodies observe *read-only* views of plane-resident ndarray inputs —
@@ -46,9 +57,12 @@ Semantics that differ under ``"process"`` (DESIGN.md §11):
 """
 from __future__ import annotations
 
+import collections
 import os
 import pickle
+import struct
 import threading
+import time
 from multiprocessing import get_context
 from multiprocessing import shared_memory as _shm_mod
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
@@ -231,10 +245,22 @@ class SegmentPlane:
             MemoryBudget(cap, high_frac, low_frac), self._spill_key,
             name="shm-plane")
 
+    def reclaim(self) -> None:
+        """Re-run watermark enforcement under the PLANE lock.  Spill
+        callbacks mutate ``_by_key``, so every governor entry that can
+        evict must hold the plane lock first (plane → governor is the
+        global lock order; entering via the governor alone would race
+        ``ensure``'s check-then-read and can deadlock ABBA)."""
+        if self.governor is None:
+            return
+        with self._lock:
+            self.governor.reclaim()
+
     def _spill_key(self, key: Tuple[int, int]) -> int:
         """Governor callback: drop one keyed segment (unlink frees the
         name immediately; the pages return once every attached worker
-        drops its cached mapping — see ``on_evict``)."""
+        drops its cached mapping — see ``on_evict``).  Only ever invoked
+        with the plane lock held (admit via ensure, or :meth:`reclaim`)."""
         item = self._by_key.pop(key, None)
         if item is None:
             return 0
@@ -430,6 +456,27 @@ def _loads_fn(blob: bytes) -> Callable:
     raise RuntimeError("function body missing from worker cache")
 
 
+def _rebuild_remote_error(enc, tb) -> BaseException:
+    """Reconstruct an exception shipped from another address space (a
+    pool worker's ``E`` reply, an agent's ``err`` meta) without raising:
+    unpickle the original and chain the remote traceback text, or fall
+    back to the ``type|message|tb`` encoding when it didn't pickle."""
+    if enc is not None:
+        try:
+            exc = pickle.loads(enc)
+        except Exception:
+            exc = None
+        if isinstance(exc, BaseException):
+            # chain the remote traceback text so failures are debuggable
+            # from the submitting process
+            exc.__cause__ = RemoteTaskError(type(exc).__name__,
+                                            str(exc), tb or "")
+            return exc
+    type_name, _, rest = (tb or "RemoteTaskError||").partition("|")
+    message, _, tb_text = rest.partition("|")
+    return RemoteTaskError(type_name, message, tb_text)
+
+
 class _FnRegistry:
     """Token registry for serialized task functions: one monotonically
     increasing token per distinct function object, so each boundary (a
@@ -479,8 +526,85 @@ def _encode_result(result: Any, cache: "_WorkerSegmentCache"
         return _cloudpickle.dumps(structure), created
 
 
+# --------------------------------------------- pipe wire format (DESIGN.md §14)
+# Parent -> worker messages are raw byte strings (send_bytes/recv_bytes), the
+# first byte selecting the kind:
+#
+#   b"X"  exit
+#   b"P"  pickle.dumps((token, fn_blob, structure, evicted)) — the general
+#         task message, ONE pickle pass with the args/kwargs structure
+#         inline (ShmRefs and small values pickle fine)
+#   b"Q"  like "P" but the structure needed cloudpickle: the tuple carries
+#         cloudpickle.dumps(structure) as bytes instead
+#   b"D"  compact binary descriptor for the common all-keyed-ndarray case:
+#         fn token + evict piggyback + flat ShmRef args — no pickle frame
+#         on the hot path at all
+#   b"M"  batch: u32 count, then per task u32 length + sub-message (each a
+#         P/Q/D message) — a dispatcher with several credits free ships
+#         them in ONE pipe write; the worker answers one reply per
+#         sub-message, preserving per-task FIFO.
+#
+# Worker -> parent replies are raw byte strings too, one per task message in
+# FIFO order (which is what lets the parent run a single completion
+# collector per pool):
+#
+#   b"K" + result-structure pickle          task succeeded
+#   b"E" + pickle.dumps((exc_blob, tb))     task raised
+_DESC_HEAD = struct.Struct("<QHH")   # fn token, n_evicted, n_refs
+_DESC_U16 = struct.Struct("<H")
+_DESC_U64 = struct.Struct("<Q")
+
+
+def _pack_descriptor(token: int, evicted: Tuple[str, ...],
+                     refs: Tuple[ShmRef, ...]) -> bytes:
+    out = [b"D", _DESC_HEAD.pack(token, len(evicted), len(refs))]
+    for name in evicted:
+        nb = name.encode("ascii")
+        out.append(_DESC_U16.pack(len(nb)))
+        out.append(nb)
+    for ref in refs:
+        nb = ref.name.encode("ascii")
+        out.append(_DESC_U16.pack(len(nb)))
+        out.append(nb)
+        out.append(_DESC_U16.pack(len(ref.header)))
+        out.append(ref.header)
+        out.append(_DESC_U64.pack(ref.nbytes))
+    return b"".join(out)
+
+
+def _unpack_descriptor(buf: bytes):
+    token, n_ev, n_refs = _DESC_HEAD.unpack_from(buf, 1)
+    off = 1 + _DESC_HEAD.size
+    evicted = []
+    for _ in range(n_ev):
+        (ln,) = _DESC_U16.unpack_from(buf, off)
+        off += 2
+        evicted.append(buf[off:off + ln].decode("ascii"))
+        off += ln
+    refs = []
+    for _ in range(n_refs):
+        (ln,) = _DESC_U16.unpack_from(buf, off)
+        off += 2
+        name = buf[off:off + ln].decode("ascii")
+        off += ln
+        (hl,) = _DESC_U16.unpack_from(buf, off)
+        off += 2
+        header = bytes(buf[off:off + hl])
+        off += hl
+        (nb,) = _DESC_U64.unpack_from(buf, off)
+        off += 8
+        refs.append(ShmRef(name, header, nb))
+    return token, evicted, refs
+
+
+_BATCH_U32 = struct.Struct("<I")
+
+
 def _worker_main(conn, worker_index: int, close_fds: tuple = ()) -> None:
-    """Persistent worker loop: one process, many tasks (§3.3.2)."""
+    """Persistent worker loop: one process, many tasks (§3.3.2).  Tasks
+    arrive pipelined (up to the parent's credit depth queued in the pipe,
+    possibly several per batch message) and are answered strictly in
+    arrival order."""
     for fd in close_fds:   # inherited sibling/parent fds — see _spawn
         try:
             os.close(fd)
@@ -488,52 +612,91 @@ def _worker_main(conn, worker_index: int, close_fds: tuple = ()) -> None:
             pass
     cache = _WorkerSegmentCache()
     fns: Dict[int, Callable] = {}
-    try:
-        while True:
-            try:
-                msg = conn.recv()
-            except (EOFError, OSError):
-                break
-            if msg[0] == "exit":
-                break
-            if msg[0] == "stats":
-                conn.send(("stats", {"segment_hits": cache.hits,
-                                     "segment_attaches": cache.attaches,
-                                     "fns_cached": len(fns)}))
-                continue
-            _, fn_token, fn_blob, payload, evicted = msg
+
+    def run_task(raw) -> bool:
+        """Execute one P/Q/D task message; False = parent is gone.  The
+        parse runs INSIDE the try: an argument whose unpickling raises
+        (import drift, reduce hooks) must cost one error reply, not the
+        worker — killing the worker would take every pipelined sibling
+        down with it and re-crash the respawn on retry."""
+        try:
+            kind = raw[:1]
+            desc_refs = None
+            structure = None
+            if kind == b"D":
+                fn_token, evicted, desc_refs = _unpack_descriptor(raw)
+                fn_blob = b""
+            else:  # b"P"/b"Q": general pickled task tuple
+                fn_token, fn_blob, structure, evicted = \
+                    pickle.loads(memoryview(raw)[1:])
             if "*" in evicted:     # overflow sentinel: drop everything
                 for name in list(cache._cache):
                     cache.drop(name)
             else:
-                for name in evicted:   # parent-evicted segments: drop mappings
+                for name in evicted:   # parent-evicted: drop mappings
                     cache.drop(name)
+            fn = fns.get(fn_token)
+            if fn is None:
+                fn = _loads_fn(fn_blob)
+                fns[fn_token] = fn
+                while len(fns) > _FN_CACHE_MAX:
+                    fns.pop(min(fns))   # tokens are monotonic: min = oldest
+            if desc_refs is not None:
+                args = tuple(cache.get(r) for r in desc_refs)
+                kwargs: dict = {}
+            else:
+                if kind == b"Q":   # cloudpickled structure
+                    if _cloudpickle is None:
+                        raise RuntimeError("cloudpickle unavailable in worker")
+                    structure = _cloudpickle.loads(structure)
+                args, kwargs = _walk(structure, cache.get, (ShmRef,))
+            result = fn(*args, **kwargs)
+            blob, created = _encode_result(result, cache)
+            conn.send_bytes(b"K" + blob)
+            for seg in created:  # parent adopts; drop our handles
+                seg.close()
+        except BaseException as err:  # noqa: BLE001 - ships to parent
+            import traceback
+            tb = traceback.format_exc()
             try:
-                fn = fns.get(fn_token)
-                if fn is None:
-                    fn = _loads_fn(fn_blob)
-                    fns[fn_token] = fn
-                    while len(fns) > _FN_CACHE_MAX:
-                        fns.pop(min(fns))   # tokens are monotonic: min = oldest
-                args, kwargs = _walk(pickle.loads(payload), cache.get, (ShmRef,))
-                result = fn(*args, **kwargs)
-                blob, created = _encode_result(result, cache)
-                conn.send(("ok", blob))
-                for seg in created:  # parent adopts; drop our handles
-                    seg.close()
-            except BaseException as err:  # noqa: BLE001 - ships to parent
-                import traceback
-                tb = traceback.format_exc()
+                conn.send_bytes(b"E" + pickle.dumps(
+                    (pickle.dumps(err, protocol=5), tb), protocol=5))
+            except (BrokenPipeError, ConnectionResetError):
+                return False   # parent is gone — exit quietly
+            except Exception:
                 try:
-                    conn.send(("err", pickle.dumps(err, protocol=5), tb))
-                except (BrokenPipeError, ConnectionResetError):
-                    break   # parent is gone — exit quietly
-                except Exception:
-                    try:
-                        conn.send(("err", None,
-                                   f"{type(err).__name__}|{err}|{tb}"))
-                    except OSError:
+                    conn.send_bytes(b"E" + pickle.dumps(
+                        (None, f"{type(err).__name__}|{err}|{tb}"),
+                        protocol=5))
+                except OSError:
+                    return False
+        return True
+
+    try:
+        while True:
+            try:
+                raw = conn.recv_bytes()
+            except (EOFError, OSError):
+                break
+            kind = raw[:1]
+            if kind == b"X":
+                break
+            if kind == b"M":   # batch: unpack, run each in order
+                (count,) = _BATCH_U32.unpack_from(raw, 1)
+                off = 1 + 4
+                alive = True
+                for _ in range(count):
+                    (ln,) = _BATCH_U32.unpack_from(raw, off)
+                    off += 4
+                    alive = run_task(raw[off:off + ln])
+                    off += ln
+                    if not alive:
                         break
+                if not alive:
+                    break
+                continue
+            if not run_task(raw):
+                break
     finally:
         cache.close()
         try:
@@ -544,19 +707,33 @@ def _worker_main(conn, worker_index: int, close_fds: tuple = ()) -> None:
 
 # ------------------------------------------------------------------ backends
 class ExecutorBackend:
-    """Owns the persistent workers and the dispatch loop threads."""
+    """Owns the persistent workers and the dispatch loop threads.
+
+    ``pipelined`` backends run the credit-based dispatch loop: the
+    dispatcher thread of worker ``w`` may have up to ``pipeline_depth``
+    tasks in flight (begin_task → async submit), and the backend promises
+    that every submitted task eventually reaches exactly one completion
+    (success, failure, or crash-requeue) on some completion thread."""
 
     name = "base"
+    pipelined = False
 
-    def __init__(self, n_workers: int, label: str = "rjax"):
+    def __init__(self, n_workers: int, label: str = "rjax",
+                 pipeline_depth: int = 1):
         self.n_workers = int(n_workers)
         self.label = label
+        self.pipeline_depth = max(1, int(pipeline_depth))
         self.runtime = None
         self._threads: List[threading.Thread] = []
+        self._credits: Optional[List[threading.Semaphore]] = None
+        self._stop_dispatch = False
 
     # -- lifecycle -----------------------------------------------------------
     def start(self, runtime) -> None:
         self.runtime = runtime
+        if self.pipelined:
+            self._credits = [threading.Semaphore(self.pipeline_depth)
+                             for _ in range(self.n_workers)]
         for w in range(self.n_workers):
             t = threading.Thread(target=self._dispatch_loop, args=(w,),
                                  daemon=True, name=f"{self.label}-w{w}")
@@ -566,18 +743,73 @@ class ExecutorBackend:
     def _dispatch_loop(self, worker: int) -> None:
         rt = self.runtime
         node_id = rt.locality_domain(worker)
+        if not self.pipelined:
+            while True:
+                tid = rt.scheduler.take(worker)
+                if tid is None:
+                    return
+                rt._note_worker_busy()
+                try:
+                    rt._execute(tid, worker, node_id)
+                finally:
+                    rt._note_worker_idle()
+                    self.task_done()   # reclaim unpublished result segments
+            return
+        # credit-based pipelined dispatch (DESIGN.md §14)
+        credits = self._credits[worker]
+        depth = self.pipeline_depth
         while True:
+            credits.acquire()
+            if self._stop_dispatch:
+                credits.release()
+                return
             tid = rt.scheduler.take(worker)
             if tid is None:
+                credits.release()
                 return
-            rt._note_worker_busy()
-            try:
-                rt._execute(tid, worker, node_id)
-            finally:
-                rt._note_worker_idle()
-                self.task_done()   # reclaim unpublished result segments
+            tids = [tid]
+            # opportunistic batching: while credits are free AND ready
+            # tasks are queued, grab them too — they ship in one write
+            while len(tids) < depth and credits.acquire(blocking=False):
+                if self._stop_dispatch:
+                    credits.release()
+                    break
+                nxt = rt.scheduler.take(worker, timeout=0)
+                if nxt is None:
+                    credits.release()
+                    break
+                tids.append(nxt)
+            exs = []
+            for t in tids:
+                rt._note_worker_busy()
+                ex = rt.begin_task(t, worker, node_id)
+                if ex is None:   # cancelled / completed during resolution
+                    rt._note_worker_idle()
+                    credits.release()
+                    continue
+                exs.append(ex)
+            if exs:
+                # hand off; the backend guarantees exactly one completion
+                # call per execution
+                self._submit_batch(worker, exs)
+
+    def _submit_pipelined(self, worker: int, ex) -> None:
+        raise NotImplementedError
+
+    def _submit_batch(self, worker: int, exs: List) -> None:
+        for ex in exs:
+            self._submit_pipelined(worker, ex)
+
+    def _halt_dispatch(self) -> None:
+        """Wake dispatchers blocked on credits so they observe shutdown."""
+        self._stop_dispatch = True
+        if self._credits:
+            for c in self._credits:
+                for _ in range(self.pipeline_depth):
+                    c.release()
 
     def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
+        self._halt_dispatch()
         for t in self._threads:
             t.join(timeout=timeout if wait else 0.2)
 
@@ -593,7 +825,7 @@ class ExecutorBackend:
         """Hook: ``value`` was published to the store under ``key``."""
 
     def task_done(self) -> None:
-        """Hook: the current dispatcher thread finished a task's
+        """Hook: the current completion thread finished a task's
         completion path (success or failure)."""
 
     def stats(self) -> dict:
@@ -609,14 +841,34 @@ class ThreadExecutor(ExecutorBackend):
         return fn(*args, **kwargs)
 
 
+class _Inflight:
+    """One task on a worker's pipe, awaiting its FIFO-ordered reply."""
+
+    __slots__ = ("ex", "pinned")
+
+    def __init__(self, ex, pinned):
+        self.ex = ex
+        self.pinned = pinned
+
+
 class ProcessExecutor(ExecutorBackend):
-    """Persistent worker processes + shared-memory object plane."""
+    """Persistent worker processes + shared-memory object plane.
+
+    Runtime mode (``start()``) is pipelined: each worker pipe carries up
+    to ``pipeline_depth`` in-flight task messages, dispatcher threads hand
+    off without blocking, and one per-pool *collector* thread drains every
+    worker's replies (replies are strictly FIFO per pipe, so completion
+    matching is a deque pop).  Pool mode (``spawn_workers()`` +
+    ``invoke()``, used by the cluster node agent) stays synchronous
+    stop-and-wait per slot thread."""
 
     name = "process"
+    pipelined = True
 
     def __init__(self, n_workers: int, label: str = "rjax",
-                 mp_context: Optional[str] = None, memory_budget=None):
-        super().__init__(n_workers, label)
+                 mp_context: Optional[str] = None, memory_budget=None,
+                 pipeline_depth: int = 1):
+        super().__init__(n_workers, label, pipeline_depth=pipeline_depth)
         try:
             self._ctx = get_context(mp_context or _MP_CONTEXT)
         except ValueError:
@@ -632,14 +884,24 @@ class ProcessExecutor(ExecutorBackend):
         self._conns: List[Any] = [None] * self.n_workers
         self._conn_locks = [threading.Lock() for _ in range(self.n_workers)]
         self._shipped: List[Set[int]] = [set() for _ in range(self.n_workers)]
+        # pipelined-mode state: per-worker FIFO of in-flight tasks and the
+        # reply collector thread
+        self._inflight: List[collections.deque] = [collections.deque()
+                                                   for _ in range(self.n_workers)]
+        self._inflight_locks = [threading.Lock() for _ in range(self.n_workers)]
+        self._collector: Optional[threading.Thread] = None
+        self._collector_stop = threading.Event()
+        self._conn_gen = 0   # bumped per (re)spawn; keys the selector registry
         # fds (beyond sibling pipe ends) that forked workers must close so
         # a dead parent actually EOFs its peers — e.g. the node agent's TCP
         # socket: a worker inheriting it would keep the scheduler's
         # connection half-open after the agent dies, masking the crash
         self.inherit_blockers: List[int] = []
-        self._tl = threading.local()   # per-dispatcher decoded-view registry
+        self._tl = threading.local()   # per-completion-thread decoded views
         self._closing = False
         self.worker_restarts = 0
+        self.descriptor_sends = 0      # compact-descriptor fast-path hits
+        self.batched_sends = 0         # multi-task M messages shipped
 
     # -- process management --------------------------------------------------
     def spawn_workers(self) -> None:
@@ -661,6 +923,10 @@ class ProcessExecutor(ExecutorBackend):
         # multithreaded process risks inheriting locks held mid-operation
         self.spawn_workers()
         super().start(runtime)
+        self._collector = threading.Thread(target=self._collector_loop,
+                                           daemon=True,
+                                           name=f"{self.label}-collect")
+        self._collector.start()
 
     def _spawn(self, worker: int) -> None:
         parent, child = self._ctx.Pipe(duplex=True)
@@ -690,6 +956,7 @@ class ProcessExecutor(ExecutorBackend):
         self._procs[worker] = p
         self._conns[worker] = parent
         self._shipped[worker] = set()
+        self._conn_gen += 1   # collector rebuilds its selector registry
         with self._evict_lock:   # fresh process, empty segment cache
             self._pending_evicts[worker] = set()
 
@@ -709,8 +976,8 @@ class ProcessExecutor(ExecutorBackend):
                     self._pending_evicts[w] = {"*"}
 
     # -- the object plane ----------------------------------------------------
-    def _encode_inputs(self, args: tuple, kwargs: dict,
-                       input_keys: Dict[int, Tuple[int, int]]) -> bytes:
+    def _encode_structure(self, args: tuple, kwargs: dict,
+                          input_keys: Dict[int, Tuple[int, int]]):
         def enc(arr: np.ndarray):
             key = input_keys.get(id(arr))
             # only *keyed* data (store-resident, re-readable) enters the
@@ -720,13 +987,22 @@ class ProcessExecutor(ExecutorBackend):
                 return arr
             return self.plane.ensure(key, arr)
 
-        structure = _walk((args, kwargs), enc, (np.ndarray,))
+        return _walk((args, kwargs), enc, (np.ndarray,))
+
+    def _pack_task_bytes(self, token: int, blob: bytes, first: bool,
+                         structure, evicted) -> bytes:
+        """The general task message: one pickle pass with the structure
+        inline; cloudpickle fallback rides a ``Q`` message."""
+        fn_field = blob if first else b""
         try:
-            return pickle.dumps(structure, protocol=5)
+            return b"P" + pickle.dumps((token, fn_field, structure, evicted),
+                                       protocol=5)
         except Exception:
             if _cloudpickle is None:
                 raise
-            return _cloudpickle.dumps(structure)
+            return b"Q" + pickle.dumps(
+                (token, fn_field, _cloudpickle.dumps(structure), evicted),
+                protocol=5)
 
     def _decode_result(self, blob: bytes) -> Any:
         views: Dict[int, ShmRef] = {}
@@ -760,7 +1036,210 @@ class ProcessExecutor(ExecutorBackend):
                 self.plane.drop_anonymous(ref.name)
         self._tl.views = None
 
-    # -- invocation ----------------------------------------------------------
+    def _remote_error(self, enc, tb) -> BaseException:
+        return _rebuild_remote_error(enc, tb)
+
+    # -- pipelined dispatch (runtime mode) -----------------------------------
+    def _submit_pipelined(self, worker: int, ex) -> None:
+        self._submit_batch(worker, [ex])
+
+    def _submit_batch(self, worker: int, exs: List) -> None:
+        """Ship up to ``pipeline_depth`` claimed tasks in ONE pipe write
+        (an ``M`` batch when more than one) — fewer syscalls and worker
+        wakeups per task.  Every task ends up either in the in-flight FIFO
+        (the collector completes it) or completed here (encode/send
+        failure)."""
+        items: List[Tuple[bytes, _Inflight]] = []
+        with self._conn_locks[worker]:
+            conn = self._conns[worker]
+            for ex in exs:
+                # pin this task's keyed inputs BEFORE encoding plants them
+                # in the plane: a concurrent completion's reclaim (or a
+                # sibling input's admit) could otherwise evict a segment
+                # between its ensure() and the send, leaving a ref on the
+                # pipe that points at an unlinked name.  Pins work for
+                # keys not yet admitted; unpinned at completion.
+                pinned = frozenset(ex.input_keys.values())
+                if self.plane.governor is not None and pinned:
+                    self.plane.governor.pin_many(pinned)
+                try:
+                    token, blob = self._fns.entry(ex.t.fn)
+                    structure = self._encode_structure(ex.args, ex.kwargs,
+                                                       ex.input_keys)
+                    first = token not in self._shipped[worker]
+                    with self._evict_lock:
+                        evicted = tuple(self._pending_evicts[worker])
+                        self._pending_evicts[worker] = set()
+                    args_s, kwargs_s = structure
+                    if not first and not kwargs_s \
+                            and isinstance(args_s, tuple) \
+                            and all(type(a) is ShmRef for a in args_s):
+                        # the common all-keyed-ndarray case: compact
+                        # binary descriptor, no per-task pickle frame
+                        msg = _pack_descriptor(token, evicted, args_s)
+                        self.descriptor_sends += 1
+                    else:
+                        msg = self._pack_task_bytes(token, blob, first,
+                                                    structure, evicted)
+                        if first:
+                            # committed optimistically: a failed send is a
+                            # crash, and respawn resets the shipped set
+                            self._shipped[worker].add(token)
+                except BaseException as err:   # encode failure: task fails
+                    self._finish_entry(worker, _Inflight(ex, pinned),
+                                       error=err)
+                    continue
+                items.append((msg, _Inflight(ex, pinned)))
+            if not items:
+                return
+            if len(items) == 1:
+                out = items[0][0]
+            else:
+                parts = [b"M", _BATCH_U32.pack(len(items))]
+                for msg, _ in items:
+                    parts.append(_BATCH_U32.pack(len(msg)))
+                    parts.append(msg)
+                out = b"".join(parts)
+                self.batched_sends += 1
+            with self._inflight_locks[worker]:
+                for _, entry in items:
+                    self._inflight[worker].append(entry)
+            try:
+                conn.send_bytes(out)
+                return   # in flight; the collector completes them
+            except BaseException as err:
+                # send failed — usually a crashed worker.  If the collector
+                # already drained our entries (it races us on EOF), it owns
+                # those completions; we own whatever is still queued.
+                owned = []
+                with self._inflight_locks[worker]:
+                    for _, entry in items:
+                        try:
+                            self._inflight[worker].remove(entry)
+                            owned.append(entry)
+                        except ValueError:
+                            pass
+                for entry in owned:
+                    crash = WorkerCrashedError(
+                        f"worker process {worker} died executing "
+                        f"{getattr(entry.ex.t.fn, '__name__', entry.ex.t.fn)!r}")
+                    crash.__cause__ = err
+                    self._finish_entry(worker, entry, error=crash)
+
+    def _finish_entry(self, worker: int, entry: _Inflight, *,
+                      result: Any = None, error: Optional[BaseException] = None
+                      ) -> None:
+        """Exactly-once completion bookkeeping for one in-flight task."""
+        rt = self.runtime
+        try:
+            if error is not None:
+                rt.fail_task(entry.ex, error)
+            else:
+                rt.complete_task(entry.ex, result)
+        finally:
+            if self.plane.governor is not None and entry.pinned:
+                self.plane.governor.unpin_many(entry.pinned)
+                # admits under a fully-pinned working set skip eviction;
+                # re-enforce the watermark now that this task's pins are
+                # off (via the plane: it must hold its lock to evict)
+                self.plane.reclaim()
+            self.task_done()
+            rt._note_worker_idle()
+            self._credits[worker].release()
+
+    def _collector_loop(self) -> None:
+        import selectors
+        sel = selectors.DefaultSelector()
+        my_gen = -1
+        try:
+            while not self._collector_stop.is_set():
+                if my_gen != self._conn_gen:
+                    # a worker was (re)spawned: rebuild the registry — the
+                    # selector itself is persistent across wakes, which is
+                    # the whole point (mp.connection.wait builds and tears
+                    # one down per call)
+                    my_gen = self._conn_gen
+                    sel.close()
+                    sel = selectors.DefaultSelector()
+                    for w, c in enumerate(self._conns):
+                        if c is not None:
+                            try:
+                                sel.register(c, selectors.EVENT_READ, w)
+                            except (ValueError, OSError):
+                                pass
+                try:
+                    events = sel.select(timeout=0.1)
+                except OSError:
+                    time.sleep(0.005)
+                    continue
+                for key, _ in events:
+                    w, conn = key.data, key.fileobj
+                    if self._conns[w] is not conn:
+                        continue
+                    # one message per event: the persistent selector is
+                    # level-triggered, so leftover replies re-arm it
+                    # immediately — no per-message poll() (which would
+                    # rebuild a selector per call, the very cost this
+                    # thread exists to avoid)
+                    try:
+                        self._collect_one(w, conn)
+                    except BaseException:
+                        # a completion that raises (publish failure, shm
+                        # exhaustion) must not kill the ONLY collector —
+                        # that would freeze every pipeline with no error
+                        import traceback
+                        traceback.print_exc()
+        finally:
+            sel.close()
+
+    def _collect_one(self, w: int, conn) -> None:
+        try:
+            resp = conn.recv_bytes()
+        except (EOFError, OSError):
+            self._on_worker_crash(w, conn)
+            return
+        kind = resp[:1]
+        with self._inflight_locks[w]:
+            entry = (self._inflight[w].popleft()
+                     if self._inflight[w] else None)
+        if entry is None:
+            return   # stray reply (e.g. raced a crash drain)
+        if kind == b"K":
+            self._tl.views = None
+            try:
+                result = self._decode_result(memoryview(resp)[1:])
+            except BaseException as err:
+                self._finish_entry(w, entry, error=err)
+            else:
+                self._finish_entry(w, entry, result=result)
+        else:
+            enc, tb = pickle.loads(memoryview(resp)[1:])
+            self._finish_entry(w, entry, error=self._remote_error(enc, tb))
+
+    def _on_worker_crash(self, worker: int, conn) -> None:
+        """EOF on a worker pipe: fail EVERY in-flight task of that worker
+        as a retryable crash and respawn it."""
+        with self._conn_locks[worker]:
+            if self._conns[worker] is not conn:
+                return   # already handled
+            with self._inflight_locks[worker]:
+                entries = list(self._inflight[worker])
+                self._inflight[worker].clear()
+            if self._closing:
+                try:
+                    conn.close()
+                except Exception:
+                    pass
+                self._conns[worker] = None
+            else:
+                self._restart(worker)
+        n = len(entries)
+        for entry in entries:
+            self._finish_entry(worker, entry, error=WorkerCrashedError(
+                f"worker process {worker} died with {n} task(s) in flight "
+                f"(executing up to {entry.ex.t.name!r})"))
+
+    # -- synchronous invocation (pool mode: the cluster node agent) ----------
     def invoke(self, worker, fn, args, kwargs, input_keys=None):
         token, blob = self._fns.entry(fn)
         # pin this task's keyed inputs for the whole round-trip: a ref on
@@ -769,7 +1248,7 @@ class ProcessExecutor(ExecutorBackend):
         if self.plane.governor is not None and pinned:
             self.plane.governor.pin_many(pinned)
         try:
-            payload = self._encode_inputs(args, kwargs, input_keys or {})
+            structure = self._encode_structure(args, kwargs, input_keys or {})
             with self._conn_locks[worker]:
                 conn = self._conns[worker]
                 first = token not in self._shipped[worker]
@@ -777,37 +1256,25 @@ class ProcessExecutor(ExecutorBackend):
                     evicted = tuple(self._pending_evicts[worker])
                     self._pending_evicts[worker] = set()
                 try:
-                    conn.send(("task", token, blob if first else b"",
-                               payload, evicted))
+                    conn.send_bytes(self._pack_task_bytes(
+                        token, blob, first, structure, evicted))
                     self._shipped[worker].add(token)
-                    resp = conn.recv()
+                    resp = conn.recv_bytes()
                 except (EOFError, OSError, BrokenPipeError) as err:
                     if not self._closing:
                         self._restart(worker)
                     raise WorkerCrashedError(
                         f"worker process {worker} died executing "
                         f"{getattr(fn, '__name__', fn)!r}") from err
-            if resp[0] == "ok":
+            if resp[:1] == b"K":
                 # decode while the inputs stay pinned: a pass-through
                 # result reships an input ref, which must still attach
-                return self._decode_result(resp[1])
+                return self._decode_result(memoryview(resp)[1:])
         finally:
             if self.plane.governor is not None and pinned:
                 self.plane.governor.unpin_many(pinned)
-        _, enc, tb = resp
-        if enc is not None:
-            try:
-                exc = pickle.loads(enc)
-            except Exception:
-                exc = None
-            if isinstance(exc, BaseException):
-                # chain the worker-side traceback text so remote failures
-                # are debuggable from the submitting process
-                raise exc from RemoteTaskError(type(exc).__name__,
-                                               str(exc), tb or "")
-        type_name, _, rest = (tb or "RemoteTaskError||").partition("|")
-        message, _, tb_text = rest.partition("|")
-        raise RemoteTaskError(type_name, message, tb_text)
+        enc, tb = pickle.loads(memoryview(resp)[1:])
+        raise self._remote_error(enc, tb)
 
     def _restart(self, worker: int) -> None:
         self.worker_restarts += 1
@@ -829,14 +1296,15 @@ class ProcessExecutor(ExecutorBackend):
     # -- lifecycle -----------------------------------------------------------
     def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
         self._closing = True
+        self._halt_dispatch()
         for w, conn in enumerate(self._conns):
             if conn is None:
                 continue
-            # a dispatcher blocked in recv holds the lock: skip the polite
-            # exit for that worker and terminate it below instead
+            # a slot thread blocked in recv holds the lock (pool mode):
+            # skip the polite exit for that worker and terminate it below
             if self._conn_locks[w].acquire(timeout=0.5 if wait else 0.05):
                 try:
-                    conn.send(("exit",))
+                    conn.send_bytes(b"X")
                 except Exception:
                     pass
                 finally:
@@ -851,6 +1319,9 @@ class ProcessExecutor(ExecutorBackend):
                     p.join(timeout=1.0)
                 except Exception:
                     pass
+        self._collector_stop.set()
+        if self._collector is not None:
+            self._collector.join(timeout=2.0)
         for conn in self._conns:
             try:
                 if conn is not None:
@@ -861,7 +1332,10 @@ class ProcessExecutor(ExecutorBackend):
         self.plane.close()
 
     def stats(self) -> dict:
-        s = {"backend": self.name, "worker_restarts": self.worker_restarts}
+        s = {"backend": self.name, "worker_restarts": self.worker_restarts,
+             "pipeline_depth": self.pipeline_depth,
+             "descriptor_sends": self.descriptor_sends,
+             "batched_sends": self.batched_sends}
         s.update(self.plane.stats())
         return s
 
@@ -873,6 +1347,10 @@ class ClusterExecutor(ExecutorBackend):
     workers_per_node`` in total); slot ``worker`` maps to agent
     ``worker // workers_per_node``, which is also the task's locality
     domain, so the ``locality`` policy scores real cross-node residency.
+    Each slot streams up to ``pipeline_depth`` task requests before any
+    completion arrives (DESIGN.md §14); the agent's reader enqueues them
+    on the slot's queue in wire order, and the channel's reader thread
+    routes replies straight into the completion path.
 
     Data plane: the scheduler keeps the authoritative copy of every datum
     (v1 is scheduler-mediated transfer) and tracks, per agent, which keys
@@ -887,18 +1365,22 @@ class ClusterExecutor(ExecutorBackend):
     Per-agent consistency relies on connection FIFO ordering: residency
     marks and the messages that justify them are emitted under one
     per-agent ordering lock, so a ``Ref`` can never overtake its ``Put``
-    or ``alias`` on the wire.
+    or ``alias`` on the wire — pipelining does not change this, because
+    the marks are made at *send* time under the same lock.
 
-    Failure model: a dropped agent connection surfaces as a retryable
-    :class:`WorkerCrashedError`; if the cluster harness can respawn the
-    agent, the executor does so and clears that node's residency ledger,
-    after which retries re-ship whatever the replacement needs.
+    Failure model: a dropped agent connection fails every in-flight task
+    on that agent as a retryable :class:`WorkerCrashedError`; if the
+    cluster harness can respawn the agent, the executor does so and clears
+    that node's residency ledger, after which retries re-ship whatever the
+    replacement needs.
     """
 
     name = "cluster"
+    pipelined = True
 
-    def __init__(self, n_workers: int, label: str = "rjax", cluster=None):
-        super().__init__(n_workers, label)
+    def __init__(self, n_workers: int, label: str = "rjax", cluster=None,
+                 pipeline_depth: int = 1):
+        super().__init__(n_workers, label, pipeline_depth=pipeline_depth)
         if cluster is None:
             raise ValueError(
                 'backend="cluster" needs a cluster= harness '
@@ -935,6 +1417,7 @@ class ClusterExecutor(ExecutorBackend):
     def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
         from ..cluster.protocol import ConnectionClosed
         self._closing = True
+        self._halt_dispatch()
         for ch in self._channels:
             if ch is not None and not ch.closed:
                 try:
@@ -950,8 +1433,8 @@ class ClusterExecutor(ExecutorBackend):
         except Exception:
             pass
 
-    # -- invocation ----------------------------------------------------------
-    def invoke(self, worker, fn, args, kwargs, input_keys=None):
+    # -- pipelined dispatch --------------------------------------------------
+    def _submit_pipelined(self, worker: int, ex) -> None:
         from ..cluster.protocol import ConnectionClosed, pack_payload
         a, slot = divmod(worker, self.wpn)
         ch = self._channels[a]
@@ -960,43 +1443,78 @@ class ClusterExecutor(ExecutorBackend):
                 self._restart_agent(a, ch)   # no-op if already replaced
             ch = self._channels[a]
             if ch is None or ch.closed:
-                raise WorkerCrashedError(f"node agent {a} is down")
-        token, blob = self._fns.entry(fn)
+                self._finish_cluster(worker, ex, error=WorkerCrashedError(
+                    f"node agent {a} is down"))
+                return
+        t = ex.t
         try:
+            token, blob = self._fns.entry(t.fn)
             with self._order_locks[a]:
                 structure, frames, info = pack_payload(
-                    (args, kwargs), input_keys or {}, self._resident[a])
+                    (ex.args, ex.kwargs), ex.input_keys, self._resident[a])
                 meta = {"op": "task", "slot": slot, "token": token,
                         "structure": structure}
                 if token not in self._shipped_fns[a]:
                     meta["fn"] = blob
-                waiter = ch.request_async(meta, frames)
+                ch.request_cb(
+                    meta, frames,
+                    lambda rmeta, rframes, err, _w=worker, _a=a, _ch=ch,
+                    _ex=ex: self._on_reply(_w, _a, _ch, _ex, rmeta,
+                                           rframes, err))
                 self._shipped_fns[a].add(token)
                 self._resident[a].update(info["put_keys"])
                 self.puts += len(info["put_keys"])
                 self.refs += info["refs"]
                 self.bytes_shipped += info["put_bytes"]
-            rmeta, rframes = waiter()
         except (ConnectionClosed, OSError) as err:
             if not self._closing:
                 self._restart_agent(a, ch)
-            raise WorkerCrashedError(
+            crash = WorkerCrashedError(
                 f"node agent {a} died executing "
-                f"{getattr(fn, '__name__', fn)!r}") from err
-        if rmeta["op"] == "done":
-            return self._decode_result(a, ch, rmeta, rframes)
-        enc, tb = rmeta.get("exc"), rmeta.get("tb")
-        if enc is not None:
+                f"{getattr(t.fn, '__name__', t.fn)!r}")
+            crash.__cause__ = err
+            self._finish_cluster(worker, ex, error=crash)
+        except BaseException as err:   # pack/pickle failure: plain failure
+            self._finish_cluster(worker, ex, error=err)
+
+    def _on_reply(self, worker: int, a: int, ch, ex, rmeta, rframes,
+                  err) -> None:
+        """Completion path, on the channel reader (or its failure
+        drainer): exactly one call per streamed task."""
+        if err is not None:
+            if not self._closing:
+                self._restart_agent(a, ch)
+            crash = WorkerCrashedError(
+                f"node agent {a} died with task {ex.t.name!r} in flight")
+            crash.__cause__ = err
+            self._finish_cluster(worker, ex, error=crash)
+            return
+        if rmeta.get("op") == "done":
+            self._tl.views = None
             try:
-                exc = pickle.loads(enc)
-            except Exception:
-                exc = None
-            if isinstance(exc, BaseException):
-                raise exc from RemoteTaskError(type(exc).__name__,
-                                               str(exc), tb or "")
-        type_name, _, rest = (tb or "RemoteTaskError||").partition("|")
-        message, _, tb_text = rest.partition("|")
-        raise RemoteTaskError(type_name, message, tb_text)
+                result = self._decode_result(a, ch, rmeta, rframes)
+            except BaseException as derr:
+                self._finish_cluster(worker, ex, error=derr)
+            else:
+                self._finish_cluster(worker, ex, result=result)
+        else:
+            self._finish_cluster(worker, ex, error=self._remote_error(rmeta))
+
+    def _finish_cluster(self, worker: int, ex, *, result: Any = None,
+                        error: Optional[BaseException] = None) -> None:
+        rt = self.runtime
+        try:
+            if error is not None:
+                rt.fail_task(ex, error)
+            else:
+                rt.complete_task(ex, result)
+        finally:
+            self.task_done()
+            rt._note_worker_idle()
+            self._credits[worker].release()
+
+    def _remote_error(self, rmeta: dict) -> BaseException:
+        return _rebuild_remote_error(rmeta.get("exc"), rmeta.get("tb"))
 
     def _decode_result(self, a: int, ch, rmeta: dict, rframes) -> Any:
         from ..cluster.protocol import Frame, frame_to_array
@@ -1098,6 +1616,7 @@ class ClusterExecutor(ExecutorBackend):
             "backend": self.name,
             "n_agents": self.n_agents,
             "workers_per_node": self.wpn,
+            "pipeline_depth": self.pipeline_depth,
             "agent_restarts": self.agent_restarts,
             "puts": self.puts,
             "refs": self.refs,

@@ -82,6 +82,10 @@ class ObjectStore:
         self.governor: Optional[MemoryGovernor] = None
         self._spill_dir: Optional[str] = None
         self._spill_min: Optional[int] = None
+        # bumped on every residency/budget-relevant change (a key gaining a
+        # domain, a spill, an evict, a node reset); the locality scheduler
+        # keys its per-node placement caches off this (DESIGN.md §14)
+        self.residency_epoch = 0
 
     # -- memory governance (DESIGN.md §13) ------------------------------------
     def configure_memory(self, budget, spill_dir: Optional[str] = None,
@@ -114,6 +118,7 @@ class ObjectStore:
         except Exception:
             return 0
         self._values[key] = spilled
+        self.residency_epoch += 1
         return value.nbytes
 
     def _maybe_fault(self, key: Tuple[int, int], value: Any) -> Any:
@@ -137,6 +142,14 @@ class ObjectStore:
             self._next_data_id += 1
             return did
 
+    def new_data_ids(self, n: int) -> range:
+        """Allocate ``n`` consecutive data ids under one lock acquisition
+        (fan-out submission)."""
+        with self._lock:
+            first = self._next_data_id
+            self._next_data_id += n
+            return range(first, first + n)
+
     # -- publication ----------------------------------------------------------
     def put(self, key: Tuple[int, int], value: Any, node: Optional[int] = None) -> None:
         nbytes = getattr(value, "nbytes", 0)
@@ -152,6 +165,7 @@ class ObjectStore:
                 if node not in held:
                     held.add(node)
                     self._node_bytes[node] = self._node_bytes.get(node, 0) + nbytes
+                    self.residency_epoch += 1
             if self.governor is not None and spillable(value, self._spill_min):
                 self.governor.admit(key, nbytes)
             self._cond.notify_all()
@@ -197,6 +211,7 @@ class ObjectStore:
                 held.add(node)
                 self._node_bytes[node] = (
                     self._node_bytes.get(node, 0) + self._nbytes.get(key, 0))
+                self.residency_epoch += 1
 
     def forget_node(self, node: int) -> None:
         """Drop a domain from every datum's residency set — the address
@@ -209,6 +224,7 @@ class ObjectStore:
             for held in self._locations.values():
                 held.discard(node)
             self._node_bytes[node] = 0
+            self.residency_epoch += 1
 
     def node_bytes(self, node: int) -> int:
         """Resident governed bytes attributed to one locality domain —
@@ -261,6 +277,7 @@ class ObjectStore:
             for node in self._locations.pop(key, ()):
                 self._node_bytes[node] = max(
                     0, self._node_bytes.get(node, 0) - nbytes)
+            self.residency_epoch += 1
 
     def __len__(self) -> int:
         with self._lock:

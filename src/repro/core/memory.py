@@ -289,6 +289,14 @@ class MemoryGovernor:
             for k in keys:
                 self._ledger.unpin(k)
 
+    def reclaim(self) -> None:
+        """Re-run watermark enforcement outside an admit.  Needed by deep
+        dispatch pipelines (DESIGN.md §14): a working set admitted while
+        every entry was pinned by in-flight tasks sails past the high
+        watermark untouched, so completions re-enforce after unpinning."""
+        with self._lock:
+            self._enforce()
+
     # -- enforcement ---------------------------------------------------------
     def _enforce(self, exclude: Iterable[Key] = ()) -> None:
         if not self.budget.over_high():

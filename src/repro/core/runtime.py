@@ -6,18 +6,26 @@ workers (the paper's persistent-executor model: workers live for the whole
 application and are reused across tasks, §3.3.2), the tracer, fault
 handling, and the optional straggler-speculation monitor.
 
-The executor backend is pluggable (``backend="thread"`` or ``"process"``,
-see :mod:`repro.core.executors`): the runtime always runs one dispatcher
-thread per worker that resolves task inputs, applies fault policy, and
-publishes outputs; the backend decides whether the task *body* runs in
-that thread or in a persistent worker process across a shared-memory
-object plane.
+The executor backend is pluggable (``backend="thread"``, ``"process"`` or
+``"cluster"``, see :mod:`repro.core.executors`).  The task lifecycle is
+split into three runtime-owned phases so backends can *pipeline* the
+middle one (DESIGN.md §14):
+
+* :meth:`begin_task`    — claim the task (mark RUNNING) and resolve its
+                          inputs from the store;
+* the backend invokes the body — synchronously on the dispatcher thread
+  (``thread``), or asynchronously with up to ``pipeline_depth`` task
+  descriptors in flight per worker (``process``/``cluster``), completions
+  drained by a collector thread / channel reader;
+* :meth:`complete_task` / :meth:`fail_task` — publish outputs or apply
+  the retry policy, release dependents, trace.
 
 Users normally go through :mod:`repro.core.api` (``task`` / ``barrier`` /
 ``wait_on``), which mirrors the five-function RCOMPSs API.
 """
 from __future__ import annotations
 
+import os
 import statistics
 import threading
 import time
@@ -25,13 +33,24 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .dag import TaskGraph, TaskNode, TaskState
+from .dag import TaskGraph, TaskNode
 from .executors import make_executor
 from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
 from .futures import Future, ObjectStore, TaskFailedError
 from .memory import budget_from_env
 from .scheduler import Scheduler
 from .tracing import TraceEvent, Tracer
+
+# per-worker in-flight task budget for pipelined backends (DESIGN.md §14);
+# 1 reproduces the stop-and-wait dispatch of earlier revisions
+DEFAULT_PIPELINE_DEPTH = 4
+
+
+def pipeline_depth_from_env(explicit: Optional[int] = None) -> int:
+    if explicit is not None:
+        return max(1, int(explicit))
+    return max(1, int(os.environ.get("RJAX_PIPELINE_DEPTH",
+                                     DEFAULT_PIPELINE_DEPTH)))
 
 
 def _walk(obj: Any, fn: Callable[[Any], Any]) -> Any:
@@ -61,6 +80,24 @@ def _nbytes(v: Any) -> int:
     return 0
 
 
+class TaskExecution:
+    """One claimed task with resolved inputs — the unit a pipelined
+    backend keeps in flight between ``begin_task`` and completion."""
+
+    __slots__ = ("t", "args", "kwargs", "input_keys", "t0", "worker", "node_id")
+
+    def __init__(self, t: TaskNode, args: tuple, kwargs: dict,
+                 input_keys: Dict[int, Tuple[int, int]], t0: float,
+                 worker: int, node_id: int):
+        self.t = t
+        self.args = args
+        self.kwargs = kwargs
+        self.input_keys = input_keys
+        self.t0 = t0
+        self.worker = worker
+        self.node_id = node_id
+
+
 class Runtime:
     def __init__(
         self,
@@ -76,6 +113,7 @@ class Runtime:
         n_agents: Optional[int] = None,
         memory_budget: Any = None,
         spill_dir: Optional[str] = None,
+        pipeline_depth: Optional[int] = None,
     ):
         # memory governance (DESIGN.md §13): explicit knob beats
         # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
@@ -83,9 +121,14 @@ class Runtime:
         # process-backend plane, each cluster node agent.
         self.memory_budget = budget_from_env(memory_budget)
         self.spill_dir = spill_dir
+        # dispatch pipelining (DESIGN.md §14): explicit knob beats
+        # RJAX_PIPELINE_DEPTH; depth 1 = stop-and-wait
+        self.pipeline_depth = pipeline_depth_from_env(pipeline_depth)
         backend_opts = {}
         if backend == "process" and self.memory_budget:
             backend_opts["memory_budget"] = self.memory_budget
+        if backend in ("process", "cluster"):
+            backend_opts["pipeline_depth"] = self.pipeline_depth
         if backend == "cluster":
             # geometry comes from the cluster harness: n_agents real node
             # agents × workers_per_node worker processes on each
@@ -238,6 +281,61 @@ class Runtime:
             return out_futures[0]
         return tuple(out_futures) if returns > 1 else out_futures[0] if out_futures else None
 
+    def submit_many(
+        self,
+        fn: Callable,
+        args_list: Sequence[tuple],
+        *,
+        name: Optional[str] = None,
+        returns: int = 1,
+        max_retries: Optional[int] = None,
+        priority: int = 0,
+        speculatable: bool = True,
+    ) -> List[Any]:
+        """Fan-out submission: one task per entry of ``args_list`` (each a
+        tuple of positional arguments), amortizing the per-task graph,
+        store and in-flight locking over the whole batch (DESIGN.md §14).
+        Returns one Future (or tuple of Futures when ``returns > 1``) per
+        entry, in order.  Semantically identical to calling :meth:`submit`
+        in a loop; INOUT parameters are not supported here."""
+        if self._stopped:
+            raise RuntimeError("runtime is stopped")
+        args_list = list(args_list)
+        if not args_list:
+            return []
+        tname = name or getattr(fn, "__name__", "task")
+        n = len(args_list)
+        tids = self.graph.next_task_ids(n)
+        dids = iter(self.store.new_data_ids(n * returns))
+        max_r = self.retry.max_retries if max_retries is None else max_retries
+
+        nodes: List[TaskNode] = []
+        futures_out: List[Any] = []
+        for tid, raw_args in zip(tids, args_list):
+            dep_keys: set = set()
+
+            def _collect(f: Future, _deps=dep_keys):
+                _deps.add(f.key)
+                return Future(f.data_id, f.version, f.producer_task, self.store)
+
+            args = _walk(tuple(raw_args), _collect)
+            out_futures = [Future(next(dids), 1, tid, self.store)
+                           for _ in range(returns)]
+            nodes.append(TaskNode(
+                task_id=tid, name=tname, fn=fn, args=args, kwargs={},
+                dep_keys=dep_keys,
+                out_keys=[f.key for f in out_futures],
+                max_retries=max_r, priority=priority,
+                speculatable=speculatable,
+            ))
+            futures_out.append(out_futures[0] if returns == 1
+                               else tuple(out_futures))
+        with self._inflight_cond:
+            self._inflight += n
+        ready = self.graph.add_tasks(nodes)
+        self.scheduler.push_many(ready)
+        return futures_out
+
     # ------------------------------------------------------- input resolution
     def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict, Dict[int, Tuple[int, int]]]:
         nbytes_in = 0
@@ -262,32 +360,75 @@ class Runtime:
         t.nbytes_in = nbytes_in
         return args, kwargs, input_keys
 
-    def _execute(self, tid: int, worker: int, node_id: int) -> None:
-        t = self.graph.get(tid)
-        if not self.graph.mark_running(tid, worker, node_id):
-            return  # cancelled before start (lost speculation race)
+    # --------------------------------------------------------- task lifecycle
+    def begin_task(self, tid: int, worker: int, node_id: int
+                   ) -> Optional[TaskExecution]:
+        """Claim ``tid`` and resolve its inputs.  Returns ``None`` when the
+        task was cancelled before start (lost speculation race) or input
+        resolution already completed it (poisoned input / resolve error) —
+        in both cases no completion call must follow."""
+        t = self.graph.claim_running(tid, worker, node_id)
+        if t is None:
+            return None  # cancelled before start (lost speculation race)
         t0 = time.perf_counter()
         try:
             args, kwargs, input_keys = self._resolve_inputs(t, node_id)
-            result = self.executor.invoke(worker, t.fn, args, kwargs,
-                                          input_keys=input_keys)
         except PoisonedInputError as err:
             self._finish_failure(t, err, retryable=False)
             self._trace_task(t, worker, node_id, t0, ok=False)
-            return
+            return None
         except BaseException as err:
-            if self.retry.should_retry(t.attempts, t.max_retries, err):
-                if self.retry.backoff_seconds:
-                    time.sleep(self.retry.backoff_seconds)
-                self.graph.requeue_for_retry(tid)
-                self.scheduler.push(tid)
-                self._trace_task(t, worker, node_id, t0, ok=False, retried=True)
-                return
-            self._finish_failure(t, err, retryable=True)
-            self._trace_task(t, worker, node_id, t0, ok=False)
+            self._handle_task_error(t, err, worker, node_id, t0)
+            return None
+        return TaskExecution(t, args, kwargs, input_keys, t0, worker, node_id)
+
+    def complete_task(self, ex: TaskExecution, result: Any) -> None:
+        """Successful body execution: publish outputs, release children."""
+        self._finish_success(ex.t, result, ex.node_id)
+        self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=True)
+
+    def fail_task(self, ex: TaskExecution, err: BaseException) -> None:
+        """Body execution raised: apply the retry policy or fail."""
+        if isinstance(err, PoisonedInputError):
+            self._finish_failure(ex.t, err, retryable=False)
+            self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=False)
             return
-        self._finish_success(t, result, node_id)
-        self._trace_task(t, worker, node_id, t0, ok=True)
+        self._handle_task_error(ex.t, err, ex.worker, ex.node_id, ex.t0)
+
+    def _handle_task_error(self, t: TaskNode, err: BaseException,
+                           worker: int, node_id: int, t0: float) -> None:
+        if self.retry.should_retry(t.attempts, t.max_retries, err):
+            if self.retry.backoff_seconds:
+                # completions run on shared threads (the pool collector, a
+                # channel reader) — a blocking sleep there would stall
+                # every worker's completions, so backoff is a timer
+                timer = threading.Timer(self.retry.backoff_seconds,
+                                        self._requeue_retry, args=(t.task_id,))
+                timer.daemon = True
+                timer.start()
+            else:
+                self._requeue_retry(t.task_id)
+            self._trace_task(t, worker, node_id, t0, ok=False, retried=True)
+            return
+        self._finish_failure(t, err, retryable=True)
+        self._trace_task(t, worker, node_id, t0, ok=False)
+
+    def _requeue_retry(self, task_id: int) -> None:
+        self.graph.requeue_for_retry(task_id)
+        self.scheduler.push(task_id)
+
+    def _execute(self, tid: int, worker: int, node_id: int) -> None:
+        """Synchronous task lifecycle — the non-pipelined (thread) path."""
+        ex = self.begin_task(tid, worker, node_id)
+        if ex is None:
+            return
+        try:
+            result = self.executor.invoke(worker, ex.t.fn, ex.args, ex.kwargs,
+                                          input_keys=ex.input_keys)
+        except BaseException as err:
+            self.fail_task(ex, err)
+            return
+        self.complete_task(ex, result)
 
     def _trace_task(self, t: TaskNode, worker: int, node_id: int, t0: float,
                     ok: bool, retried: bool = False) -> None:
@@ -315,7 +456,14 @@ class Runtime:
         self.executor.publish(key, value)
 
     def _finish_success(self, t: TaskNode, result: Any, node_id: int) -> None:
-        primary = self.graph.get(self._logical_id(t))
+        try:
+            primary = self.graph.get(self._logical_id(t))
+        except KeyError:
+            # the logical task was pruned long after completion (graph
+            # retention) — this can only be a very late clone: discard
+            self.graph.mark_cancelled(t.task_id)
+            self._dec_inflight(t)
+            return
         if not self._claim_completion(t):
             # lost the speculation race — discard
             self.graph.mark_cancelled(t.task_id)
@@ -358,7 +506,12 @@ class Runtime:
         self.scheduler.push_many(ready)
 
     def _finish_failure(self, t: TaskNode, err: BaseException, retryable: bool) -> None:
-        primary = self.graph.get(self._logical_id(t))
+        try:
+            primary = self.graph.get(self._logical_id(t))
+        except KeyError:
+            self.graph.mark_cancelled(t.task_id)
+            self._dec_inflight(t)
+            return
         if not self._claim_completion(t):
             self.graph.mark_cancelled(t.task_id)
             self._dec_inflight(t)
@@ -379,21 +532,25 @@ class Runtime:
         cfg = self.speculation
         while not self._stopped:
             time.sleep(cfg.poll_interval)
-            with self._inflight_lock:
-                idle = self._idle_workers
-            if idle <= 0 or self.scheduler.queue_len() > 0:
+            if self.scheduler.queue_len() > 0:
                 continue
-            done_by_name: Dict[str, List[float]] = {}
-            running: List[TaskNode] = []
+            # indexed scans (DESIGN.md §14): the running set and the
+            # bounded per-name duration history replace the full-graph walk
+            running = self.graph.running_nodes()
+            if not running:
+                continue
+            # idle capacity = workers with NOTHING in flight.  (The
+            # _idle_workers counter decrements once per in-flight task, so
+            # under pipeline_depth > 1 it goes negative while half the
+            # pool sits idle — it cannot gate speculation.)
+            busy_workers = {n.worker for n in running}
+            if len(busy_workers) >= self.n_workers:
+                continue
             now = time.perf_counter()
-            for n in self.graph.nodes():
-                if n.state == TaskState.DONE and n.speculative_of is None:
-                    done_by_name.setdefault(n.name, []).append(n.duration)
-                elif n.state == TaskState.RUNNING and n.speculatable \
-                        and n.speculative_of is None:
-                    running.append(n)
             for n in running:
-                ds = done_by_name.get(n.name, ())
+                if not n.speculatable or n.speculative_of is not None:
+                    continue
+                ds = self.graph.done_durations(n.name)
                 if len(ds) < cfg.min_samples:
                     continue
                 med = statistics.median(ds)
@@ -444,16 +601,15 @@ class Runtime:
 
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:
-        nodes = self.graph.nodes()
-        done = [n for n in nodes if n.state == TaskState.DONE]
+        c = self.graph.counters()   # O(1): incrementally maintained
         return {
-            "tasks_submitted": len([n for n in nodes if n.speculative_of is None]),
-            "tasks_done": len(done),
-            "tasks_failed": len([n for n in nodes if n.state == TaskState.FAILED]),
-            "tasks_cancelled": len([n for n in nodes if n.state == TaskState.CANCELLED]),
-            "retries": sum(max(0, n.attempts - 1) for n in nodes),
-            "speculative": len([n for n in nodes if n.speculative_of is not None]),
-            "total_work_s": self.graph.total_work_seconds(),
+            "tasks_submitted": c["submitted"],
+            "tasks_done": c["done"],
+            "tasks_failed": c["failed"],
+            "tasks_cancelled": c["cancelled"],
+            "retries": c["retries"],
+            "speculative": c["speculative"],
+            "total_work_s": c["total_work_s"],
             "critical_path_s": self.graph.critical_path_seconds(),
             "wallclock_s": self.tracer.wallclock(),
             "utilization": self.tracer.utilization(self.n_workers),

@@ -20,12 +20,20 @@ differ only in *which* ready task a worker receives:
                   to nodes with both the data and the headroom.
 * ``worksteal`` — per-worker deques; owner pops LIFO, thieves steal FIFO.
                   Beyond-paper addition used for straggler mitigation.
+
+Hot-path accounting (DESIGN.md §14): ``queue_len`` reads an incrementally
+maintained counter (no per-poll deque sweep), ``push_many`` wakes exactly
+as many waiters as it enqueued tasks, and the ``locality`` policy keeps a
+per-node cache of placement scores that is invalidated by the store's
+residency epoch (``note_location``/spill/evict) instead of rescoring the
+whole window on every pop — O(1) amortized per take while residency is
+stable.
 """
 from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from .dag import TaskGraph
 from .futures import ObjectStore
@@ -35,6 +43,13 @@ from .futures import ObjectStore
 # headroom scores below a fully-remote task on a node with room: paying
 # the transfer beats spilling the node's working set.
 MEMORY_PENALTY = 1.5
+
+# locality scan window over the head of the ready queue
+LOCALITY_WINDOW = 64
+
+# a per-node score cache larger than this is reset wholesale (entries for
+# tasks popped by *other* nodes linger until the next residency epoch)
+_SCORE_CACHE_MAX = 4096
 
 
 class Scheduler:
@@ -62,6 +77,9 @@ class Scheduler:
         self._local_queues: Dict[int, collections.deque] = collections.defaultdict(
             collections.deque
         )
+        self._qsize = 0          # incrementally-maintained total (all queues)
+        # per-node locality caches: node -> (store epoch, {tid: score entry})
+        self._loc_cache: Dict[int, Tuple[int, Dict[int, tuple]]] = {}
         self._closed = False
 
     # ------------------------------------------------------------------ admin
@@ -74,10 +92,9 @@ class Scheduler:
             self._cond.notify_all()
 
     def queue_len(self) -> int:
-        with self._lock:
-            n = len(self._queue)
-            n += sum(len(q) for q in self._local_queues.values())
-            return n
+        # incrementally maintained; a bare int read is atomic under the GIL,
+        # so the speculation poll never touches the scheduler lock
+        return self._qsize
 
     # ---------------------------------------------------------------- enqueue
     def push(self, task_id: int, preferred_worker: Optional[int] = None) -> None:
@@ -86,6 +103,7 @@ class Scheduler:
                 self._local_queues[preferred_worker].append(task_id)
             else:
                 self._queue.append(task_id)
+            self._qsize += 1
             self._cond.notify()
 
     def push_many(self, task_ids: List[int]) -> None:
@@ -93,7 +111,11 @@ class Scheduler:
             return
         with self._cond:
             self._queue.extend(task_ids)
-            self._cond.notify_all()
+            self._qsize += len(task_ids)
+            # wake exactly as many waiters as there are new tasks: a
+            # notify_all here stampedes every idle dispatcher through the
+            # lock only for most to go back to sleep
+            self._cond.notify(len(task_ids))
 
     # ------------------------------------------------------------------- take
     def take(self, worker: int, timeout: Optional[float] = None) -> Optional[int]:
@@ -103,6 +125,7 @@ class Scheduler:
             while True:
                 tid = self._select(worker)
                 if tid is not None:
+                    self._qsize -= 1
                     return tid
                 if self._closed:
                     return None
@@ -133,16 +156,31 @@ class Scheduler:
             if victim:
                 return victim.popleft()
             return None
-        # locality: scan the (bounded) window of the ready queue, pick the
-        # task with the highest fraction of input bytes on this worker's node
+        return self._select_locality(worker)
+
+    def _select_locality(self, worker: int) -> Optional[int]:
+        """Pick the best-placed task in the window using the per-node score
+        cache: a (task, node) pair is scored at most once per residency
+        epoch, so steady-state pops only rescore what actually changed."""
         if not self._queue:
             return None
         node = self.node_of(worker)
-        window = min(len(self._queue), 64)
+        epoch = self.store.residency_epoch
+        cached = self._loc_cache.get(node)
+        if cached is None or cached[0] != epoch:
+            cached = (epoch, {})
+            self._loc_cache[node] = cached
+        scores = cached[1]
+        if len(scores) > _SCORE_CACHE_MAX:
+            scores.clear()
+        window = min(len(self._queue), LOCALITY_WINDOW)
         best_i, best_score = 0, float("-inf")
         for i in range(window):
             tid = self._queue[i]
-            score = self._placement_score(tid, node)
+            score = scores.get(tid)
+            if score is None:
+                score = self._placement_score(tid, node)
+                scores[tid] = score
             if score > best_score:
                 best_i, best_score = i, score
                 if best_score >= 1.0:
@@ -150,6 +188,7 @@ class Scheduler:
         self._queue.rotate(-best_i)
         tid = self._queue.popleft()
         self._queue.rotate(best_i)
+        scores.pop(tid, None)
         return tid
 
     # ------------------------------------------------- placement scoring

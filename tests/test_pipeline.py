@@ -1,0 +1,377 @@
+"""Pipelined dispatch plane (DESIGN.md §14).
+
+Crash semantics with depth > 1 in flight, depth-1 equivalence with the
+old stop-and-wait dispatch, batched submission (submit_many/map_tasks),
+and the O(1) bookkeeping satellites (graph counters, queue_len, graph
+retention).
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.dag import TaskGraph, TaskNode, TaskState
+from repro.core.futures import ObjectStore
+from repro.core.scheduler import Scheduler
+
+BIG = 4096  # float64 elements — comfortably above the shm/wire floors
+
+
+def _slow_crash_once(flag_path, value):
+    """First run: linger so siblings pile up in the pipeline, then die
+    taking the whole worker with us.  Retry: return normally."""
+    if not os.path.exists(flag_path):
+        with open(flag_path, "w") as f:
+            f.write("x")
+        time.sleep(0.4)
+        os._exit(17)
+    return np.arange(BIG, dtype=np.float64) * value
+
+
+def _slow_kill_agent_once(flag_path, value):
+    if not os.path.exists(flag_path):
+        with open(flag_path, "w") as f:
+            f.write("x")
+        time.sleep(0.4)
+        os.kill(os.getppid(), signal.SIGKILL)   # the node agent
+    return np.arange(BIG, dtype=np.float64) * value
+
+
+def _mul(value):
+    return np.arange(BIG, dtype=np.float64) * value
+
+
+def _thread_reference(values):
+    api.runtime_start(n_workers=2, backend="thread")
+    try:
+        outs = api.map_tasks(api.task(_mul, name="mul"), [(v,) for v in values])
+        return api.wait_on(outs)
+    finally:
+        api.runtime_stop()
+
+
+# --------------------------------------------------- crash semantics, depth>1
+def test_process_worker_crash_with_depth_inflight_retries_all(tmp_path):
+    """SIGKILL-style worker death with depth tasks in flight: every one of
+    them retries exactly once and the final results match the thread
+    backend bitwise."""
+    flag = str(tmp_path / "crash")
+    values = [2, 3, 5, 7]
+    rt = api.runtime_start(n_workers=1, backend="process", pipeline_depth=4,
+                           max_retries=1)
+    try:
+        crash_t = api.task(_slow_crash_once, name="crash")
+        mul_t = api.task(_mul, name="mul")
+        f0 = crash_t(flag, values[0])
+        rest = api.map_tasks(mul_t, [(v,) for v in values[1:]])
+        outs = api.wait_on([f0, *rest], timeout=60)
+        assert rt.executor.worker_restarts >= 1
+        # every task that was in flight when the worker died ran exactly
+        # twice (one crash-failed attempt + one successful retry)
+        attempts = sorted(n.attempts for n in rt.graph.nodes())
+        assert attempts == [2, 2, 2, 2], attempts
+        assert rt.stats()["retries"] == 4
+    finally:
+        api.runtime_stop(wait=False)
+    for got, want in zip(outs, _thread_reference(values)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_cluster_agent_crash_with_depth_inflight_retries_all(tmp_path):
+    """SIGKILL a node agent with depth tasks streamed to its slot: all of
+    them come back as retryable crashes, the agent respawns, and results
+    match the thread backend bitwise."""
+    flag = str(tmp_path / "agentcrash")
+    values = [2, 3, 5, 7]
+    rt = api.runtime_start(backend="cluster", n_agents=1, workers_per_node=1,
+                           pipeline_depth=4, max_retries=1)
+    try:
+        crash_t = api.task(_slow_kill_agent_once, name="crash")
+        mul_t = api.task(_mul, name="mul")
+        f0 = crash_t(flag, values[0])
+        rest = api.map_tasks(mul_t, [(v,) for v in values[1:]])
+        outs = api.wait_on([f0, *rest], timeout=90)
+        assert rt.executor.agent_restarts >= 1
+        attempts = sorted(n.attempts for n in rt.graph.nodes())
+        assert attempts == [2, 2, 2, 2], attempts
+    finally:
+        api.runtime_stop(wait=False)
+    for got, want in zip(outs, _thread_reference(values)):
+        np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------- depth-1 equivalence
+def test_depth1_process_matches_thread_bitwise():
+    """A depth-1 pipeline is stop-and-wait: same results, same retry
+    counts, same task accounting as the thread backend."""
+    from repro.algorithms import kmeans
+
+    results = {}
+    for backend, depth in (("thread", 1), ("process", 1), ("process", 4)):
+        api.runtime_start(n_workers=2, backend=backend, pipeline_depth=depth)
+        try:
+            res = kmeans.run_kmeans(n_points=4000, d=6, k=3, fragments=4,
+                                    max_iters=3, seed=0)
+            stats = api.current_runtime().stats()
+            results[(backend, depth)] = (res, stats)
+        finally:
+            api.runtime_stop()
+    ref, ref_stats = results[("thread", 1)]
+    for key in (("process", 1), ("process", 4)):
+        got, got_stats = results[key]
+        np.testing.assert_array_equal(got.centroids, ref.centroids)
+        assert got.sse == ref.sse
+        assert got_stats["tasks_submitted"] == ref_stats["tasks_submitted"]
+        assert got_stats["tasks_done"] == ref_stats["tasks_done"]
+        assert got_stats["retries"] == ref_stats["retries"] == 0
+
+
+def test_depth1_cluster_preserves_residency_ledger():
+    """Depth 1 on the cluster backend keeps the send-once/reuse-many wire
+    property exactly as before the pipeline existed."""
+    rt = api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           pipeline_depth=1)
+    try:
+        ex = rt.executor
+        assert ex.pipeline_depth == 1
+        gen = api.task(lambda n: np.ones(n), name="gen")
+        tot = api.task(lambda a: float(np.sum(a)), name="tot")
+        part = gen(BIG)
+        api.wait_on(part)
+        puts0, refs0 = ex.puts, ex.refs
+        outs = [tot(part) for _ in range(10)]
+        assert api.wait_on(outs) == [float(BIG)] * 10
+        new_puts = ex.puts - puts0
+        assert new_puts <= 1
+        assert ex.refs - refs0 >= 10 - new_puts
+        assert rt.stats()["retries"] == 0
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_descriptor_fast_path_used_for_keyed_ndarray_args():
+    """The compact binary descriptor replaces the pickle frame once the
+    function is cached and every argument is a planed keyed ndarray."""
+    rt = api.runtime_start(n_workers=2, backend="process")
+    try:
+        gen = api.task(lambda n: np.ones(n), name="gen")
+        dot = api.task(lambda a, b: float(a @ b), name="dot")
+        x, y = gen(BIG), gen(BIG)
+        api.wait_on([x, y])
+        outs = [dot(x, y) for _ in range(6)]
+        assert api.wait_on(outs) == [float(BIG)] * 6
+        # each worker's first `dot` ships the fn body (pickle path); every
+        # later all-keyed call rides the descriptor
+        assert rt.executor.stats()["descriptor_sends"] >= 4
+    finally:
+        api.runtime_stop()
+
+
+# -------------------------------------------------------- batched submission
+def test_map_tasks_matches_loop_submission():
+    api.runtime_start(n_workers=2)
+    try:
+        add = api.task(lambda x, y: x + y, name="add")
+        batched = api.map_tasks(add, [(i, 2 * i) for i in range(20)])
+        looped = [add(i, 2 * i) for i in range(20)]
+        assert api.wait_on(batched) == api.wait_on(looped)
+        # dependencies across a batch are discovered exactly like submit's
+        chained = api.map_tasks(add, [(f, 1) for f in batched])
+        assert api.wait_on(chained) == [3 * i + 1 for i in range(20)]
+        # and TaskFunction.map is the same thing
+        assert api.wait_on(add.map([(1, 2), (3, 4)])) == [3, 7]
+    finally:
+        api.runtime_stop()
+
+
+def test_submit_many_multi_returns_and_empty():
+    rt = api.runtime_start(n_workers=2)
+    try:
+        assert rt.submit_many(lambda: 1, []) == []
+        pairs = rt.submit_many(lambda a: (a, -a), [(i,) for i in range(5)],
+                               name="pair", returns=2)
+        vals = api.wait_on(pairs)
+        assert vals == [(i, -i) for i in range(5)]
+    finally:
+        api.runtime_stop()
+
+
+# -------------------------------------------------- O(1) bookkeeping satellites
+def test_stats_counters_match_graph_ground_truth():
+    rt = api.runtime_start(n_workers=2, backend="thread")
+    try:
+        ok = api.task(lambda x: x, name="ok")
+        boom = api.task(lambda: 1 / 0, name="boom", max_retries=0)
+        api.wait_on(api.map_tasks(ok, [(i,) for i in range(9)]))
+        b = boom()
+        with pytest.raises(Exception):
+            api.wait_on(b)
+        api.barrier()
+        s = rt.stats()
+        nodes = rt.graph.nodes()
+        assert s["tasks_submitted"] == len(nodes) == 10
+        assert s["tasks_done"] == sum(n.state == TaskState.DONE for n in nodes)
+        assert s["tasks_failed"] == 1
+        assert s["retries"] == sum(max(0, n.attempts - 1) for n in nodes)
+        assert s["total_work_s"] == pytest.approx(
+            sum(n.duration for n in nodes if n.state == TaskState.DONE))
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_graph_retention_prunes_terminal_nodes_but_not_counters():
+    rt = api.runtime_start(n_workers=2, backend="thread")
+    try:
+        rt.graph.retain = 8
+        ok = api.task(lambda x: x * 2, name="ok")
+        outs = api.map_tasks(ok, [(i,) for i in range(40)])
+        assert api.wait_on(outs) == [2 * i for i in range(40)]
+        api.barrier()
+        assert len(rt.graph.nodes()) <= 8
+        s = rt.stats()
+        assert s["tasks_submitted"] == 40 and s["tasks_done"] == 40
+        # late dependents of pruned producers still run (no ghost edges)
+        late = ok(outs[0])
+        assert api.wait_on(late) == 0
+    finally:
+        api.runtime_stop()
+
+
+def test_graph_retain_env_knob():
+    """RJAX_GRAPH_RETAIN is read at import time — verify in a clean
+    interpreter (reloading the module in-process would re-mint the
+    TaskState enum under live classes)."""
+    import subprocess
+    import sys
+
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.core.dag import GRAPH_RETAIN, TaskGraph; "
+         "print(GRAPH_RETAIN, TaskGraph().retain)"],
+        env={**os.environ, "RJAX_GRAPH_RETAIN": "16",
+             "PYTHONPATH": "src" + os.pathsep + os.environ.get("PYTHONPATH", "")},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=60)
+    assert out.stdout.split() == ["16", "16"], (out.stdout, out.stderr)
+
+
+def test_queue_len_is_incrementally_maintained():
+    graph, store = TaskGraph(), ObjectStore()
+    sched = Scheduler(graph, store, policy="worksteal")
+
+    def add_ready():
+        tid = graph.next_task_id()
+        graph.add_task(TaskNode(task_id=tid, name=f"t{tid}", fn=lambda: None,
+                                args=(), kwargs={}))
+        return tid
+
+    assert sched.queue_len() == 0
+    a, b, c = add_ready(), add_ready(), add_ready()
+    sched.push(a, preferred_worker=0)
+    sched.push(b, preferred_worker=1)
+    sched.push_many([c])
+    assert sched.queue_len() == 3
+    assert sched.take(2, timeout=0.1) == c     # global first
+    assert sched.queue_len() == 2
+    assert sched.take(0, timeout=0.1) == a     # own queue
+    assert sched.take(2, timeout=0.1) == b     # steal
+    assert sched.queue_len() == 0
+    assert sched.take(2, timeout=0.05) is None
+    assert sched.queue_len() == 0
+
+
+def test_locality_cache_invalidated_by_residency_change():
+    """The per-node placement cache must not serve stale scores after a
+    datum's residency changes (note_location bumps the store epoch)."""
+    graph, store = TaskGraph(), ObjectStore()
+    sched = Scheduler(graph, store, policy="locality", workers_per_node=1)
+    key_a, key_b = (store.new_data_id(), 1), (store.new_data_id(), 1)
+    store.put(key_a, np.zeros(1 << 20, dtype=np.uint8), node=1)
+    store.put(key_b, np.zeros(1 << 20, dtype=np.uint8), node=1)
+    tids = []
+    for key in (key_a, key_b):
+        tid = graph.next_task_id()
+        graph.add_task(TaskNode(task_id=tid, name=f"t{tid}", fn=lambda: None,
+                                args=(), kwargs={}, dep_keys={key}))
+        tids.append(tid)
+    sched.push_many(tids)
+    # warm node 0's cache: neither task is local there
+    assert sched._select_locality(0) is not None
+    sched._queue.appendleft(tids[0])  # put it back
+    sched._qsize = 2
+    # key_b's bytes move to node 0 → epoch bump → cache rebuilt → task b wins
+    store.note_location(key_b, 0)
+    assert sched.take(0, timeout=0.1) == tids[1]
+
+
+def test_speculation_still_fires_with_indexed_scans():
+    """The speculation monitor now reads the running index + duration
+    history instead of scanning the graph; it must still clone a
+    straggler."""
+    import threading
+
+    from repro.core.fault import SpeculationConfig
+    from repro.core.runtime import Runtime
+
+    gate = threading.Event()
+
+    def maybe_slow(i):
+        if i == 7:           # one straggler; its clone won't block
+            gate.wait(timeout=20.0)
+        return i
+
+    rt = Runtime(n_workers=2, backend="thread",
+                 speculation=SpeculationConfig(enabled=True, factor=2.0,
+                                               min_seconds=0.05,
+                                               poll_interval=0.05))
+    api._runtime = rt   # route the api helpers at this runtime
+    try:
+        t = api.task(maybe_slow, name="maybe_slow")
+        fast = api.map_tasks(t, [(i,) for i in range(7)])
+        api.wait_on(fast)
+        slow = t(7)
+        deadline = time.time() + 10.0
+        while time.time() < deadline and rt.stats()["speculative"] == 0:
+            time.sleep(0.05)
+        gate.set()
+        assert api.wait_on(slow, timeout=20.0) == 7
+        assert rt.stats()["speculative"] >= 1
+    finally:
+        gate.set()
+        api.runtime_stop(wait=False)
+        api._runtime = None
+
+
+def _raise_on_unpickle():
+    raise ValueError("boom on unpickle")
+
+
+class _BadUnpickle:
+    """Pickles fine, explodes when the worker deserializes it."""
+
+    def __reduce__(self):
+        return (_raise_on_unpickle, ())
+
+
+def test_worker_side_unpickle_failure_costs_one_task_not_the_worker():
+    """An argument that raises during worker-side deserialization must
+    produce a per-task error reply — not kill the worker and drag its
+    pipelined siblings into a crash/retry loop."""
+    rt = api.runtime_start(n_workers=1, backend="process", pipeline_depth=4)
+    try:
+        ok = api.task(lambda x: x + 1, name="ok")
+        bad = api.task(lambda o: o, name="bad", max_retries=0)
+        good_before = ok(1)
+        poisoned = bad(_BadUnpickle())
+        good_after = ok(2)
+        from repro.core.futures import TaskFailedError
+        with pytest.raises(TaskFailedError) as exc_info:
+            api.wait_on(poisoned, timeout=30)
+        assert isinstance(exc_info.value.cause, ValueError)
+        assert api.wait_on([good_before, good_after], timeout=30) == [2, 3]
+        assert rt.executor.worker_restarts == 0
+    finally:
+        api.runtime_stop(wait=False)

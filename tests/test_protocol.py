@@ -224,3 +224,69 @@ def test_channel_refuses_after_close():
     server.close()
     with pytest.raises(ConnectionClosed):
         ch.request({"op": "stats"}, timeout=5.0)
+
+
+# ------------------------------------------------ wire coalescing (§14)
+class CountingSocket(TrickleSocket):
+    """Records each sendall call so tests can assert syscall batching."""
+
+    def __init__(self, chunk: int = 1 << 20):
+        super().__init__(chunk=chunk)
+        self.sends = []
+
+    def sendall(self, data) -> None:
+        self.sends.append(len(bytes(data)))
+        super().sendall(data)
+
+
+def test_small_message_coalesces_into_one_send():
+    """A task message whose frames are all small rides ONE sendall — one
+    packet under TCP_NODELAY instead of one per header/meta/frame part."""
+    s = CountingSocket()
+    small = [np.arange(16, dtype=np.float64) for _ in range(4)]
+    keys = {id(a): (i + 1, 1) for i, a in enumerate(small)}
+    structure, frames, info = pack_payload(tuple(small), keys, set())
+    send_msg(s, {"op": "task", "structure": structure}, frames)
+    assert len(s.sends) == 1
+    meta, rframes = recv_msg(s)
+    got = unpack_payload(meta["structure"], rframes,
+                         lookup={}.get, store=lambda k, v: None)
+    for want, g in zip(small, got):
+        np.testing.assert_array_equal(g, want)
+
+
+def test_large_frames_bypass_coalescing_but_roundtrip():
+    from repro.cluster.protocol import WIRE_COALESCE_MAX
+
+    s = CountingSocket()
+    big = np.arange(WIRE_COALESCE_MAX // 8 + 128, dtype=np.float64)
+    send_msg(s, {"op": "task"}, [array_frame(big)])
+    assert len(s.sends) > 1           # zero-copy path: big buffer separate
+    meta, frames = recv_msg(s)
+    np.testing.assert_array_equal(frame_to_array(frames[0]), big)
+
+
+def test_coalesced_stream_preserves_put_before_ref_fifo():
+    """The §12 pre-store guarantee under §14 batching: a pipelined stream
+    of task messages where later messages Ref keys Put by earlier ones
+    must resolve when processed in wire-FIFO order — byte-identical
+    semantics whether or not the messages were coalesced."""
+    s = CountingSocket()
+    arr = np.arange(64, dtype=np.float64)
+    key = (7, 1)
+    resident = set()
+    st1, f1, info1 = pack_payload((arr,), {id(arr): key}, resident)
+    resident.update(info1["put_keys"])            # marked at send time
+    st2, f2, info2 = pack_payload((arr,), {id(arr): key}, resident)
+    send_msg(s, {"mid": 1, "structure": st1}, f1)
+    send_msg(s, {"mid": 2, "structure": st2}, f2)
+    assert info1["put_keys"] == [key] and info2["refs"] == 1
+    plane = {}
+    for want_mid in (1, 2):
+        meta, frames = recv_msg(s)
+        assert meta["mid"] == want_mid
+        (got,) = unpack_payload(meta["structure"], frames,
+                                lookup=lambda k: plane[k],
+                                store=plane.__setitem__)
+        np.testing.assert_array_equal(got, arr)
+    assert list(plane) == [key]
