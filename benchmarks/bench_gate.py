@@ -15,6 +15,12 @@ if the PR regresses against the committed ``benchmarks/BENCH_baseline.json``:
 * **out-of-core correctness** — every ``out_of_core`` block must report
   ``match: true`` and a non-zero spill AND fault count, keeping the
   bounded-memory path honest (a silently-unbounded run would show 0/0).
+* **scheduler relay bytes** (DESIGN.md §15) — the KNN tile pipeline's
+  intermediate traffic over the scheduler's own link may not regress
+  above baseline × 1.5 + 128 KiB.  Bytes are near-deterministic (task
+  placement wiggles a fragment or two); a real regression — results
+  relaying through the scheduler again instead of staying node-resident
+  — is an order of magnitude, not a fragment.
 
 Efficiency numbers are recorded in the artifact for trend tracking but
 not gated (CI runner variance swamps them).
@@ -32,6 +38,8 @@ import sys
 
 REL_TOLERANCE = 1.25     # >25% regression fails...
 ABS_SLACK_US = 150.0     # ...but only past the cross-hardware noise floor
+RELAY_TOLERANCE = 1.5            # scheduler-link bytes: placement wiggle...
+RELAY_SLACK_BYTES = 128 * 1024   # ...a real regression is 10x, not 1.5x
 
 
 def deep_merge(dst: dict, src: dict) -> dict:
@@ -73,6 +81,24 @@ def check(pr: dict, baseline: dict) -> list:
                 f"dispatch_overhead_us.{backend}: {got:.1f} us > "
                 f"{limit:.1f} us (baseline {base:.1f} × {REL_TOLERANCE} "
                 f"+ {ABS_SLACK_US})")
+    base_relay = baseline.get("multi_node", {}).get(
+        "data_plane", {}).get("scheduler_relay_bytes")
+    if base_relay is not None:
+        got = pr.get("multi_node", {}).get(
+            "data_plane", {}).get("scheduler_relay_bytes")
+        if got is None:
+            failures.append(
+                "data_plane.scheduler_relay_bytes: missing from PR run")
+        else:
+            limit = base_relay * RELAY_TOLERANCE + RELAY_SLACK_BYTES
+            status = "FAIL" if got > limit else "ok"
+            print(f"  [{status}] scheduler relay bytes: {got} "
+                  f"(baseline {base_relay}, limit {int(limit)})")
+            if got > limit:
+                failures.append(
+                    f"data_plane.scheduler_relay_bytes: {got} > "
+                    f"{int(limit)} (baseline {base_relay} × "
+                    f"{RELAY_TOLERANCE} + {RELAY_SLACK_BYTES})")
     for where, ooc in iter_out_of_core(pr):
         spills = ooc.get("spills", 0) + ooc.get("node_spills", 0) \
             + ooc.get("plane_spills", 0)

@@ -23,6 +23,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
 import time
 from typing import List, Tuple
 
@@ -190,6 +191,7 @@ def run_live(agent_counts=(1, 2), wpn: int = 2,
           "simulator's\n transport/dispatch assumptions at small scale)")
     if json_path:
         ooc = run_live_out_of_core(wpn=wpn)
+        dp = run_data_plane(wpn=wpn)
         top = max(agent_counts)
         base = min(agent_counts)
         payload = {"multi_node": {
@@ -200,11 +202,62 @@ def run_live(agent_counts=(1, 2), wpn: int = 2,
             "measured_s": {str(n): round(measured[n], 3) for n in agent_counts},
             "agents": top,
             "out_of_core": ooc,
+            "data_plane": dp,
         }}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
     return rows
+
+
+def run_data_plane(wpn: int = 1) -> dict:
+    """Scheduler-link vs peer-to-peer bytes for the KNN tile pipeline on
+    a 2-agent cluster (DESIGN.md §15), with a p2p-off control run
+    (RJAX_P2P=0 + RJAX_INLINE_MAX=0 = the PR-4 star topology) so the
+    relay reduction is measured, not assumed.  ``scheduler_relay_bytes``
+    is gated by bench_gate.py against the committed baseline."""
+    from repro.core import api
+
+    kw = dict(n_train=800, n_test=1600, d=20, k=5, n_classes=4,
+              train_fragments=4, test_blocks=4)
+
+    def one(p2p: bool) -> dict:
+        env = {"RJAX_P2P": "1" if p2p else "0"}
+        if not p2p:
+            env["RJAX_INLINE_MAX"] = "0"
+        saved = {k: os.environ.get(k) for k in env}
+        os.environ.update(env)
+        try:
+            rt = api.runtime_start(backend="cluster", n_agents=2,
+                                   workers_per_node=wpn, tracing=False)
+            try:
+                knn.run_knn(**kw)
+                s = rt.stats()
+                return {"relay": int(s["scheduler_relay_bytes"]),
+                        "p2p": int(s["p2p_bytes"]),
+                        "remote_results": s["executor"]["remote_results"]}
+            finally:
+                api.runtime_stop(wait=False)
+        finally:
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+
+    on = one(True)
+    off = one(False)
+    out = {
+        "scheduler_relay_bytes": on["relay"],
+        "p2p_bytes": on["p2p"],
+        "remote_results": on["remote_results"],
+        "relay_bytes_no_p2p": off["relay"],
+        "relay_reduction_x": round(off["relay"] / max(1, on["relay"]), 1),
+    }
+    print(f"data plane [knn tiles, 2 agents]: relay {on['relay']} B + "
+          f"p2p {on['p2p']} B (vs {off['relay']} B all-relay without p2p "
+          f"= {out['relay_reduction_x']}x less scheduler-link traffic)")
+    return out
 
 
 def run_live_out_of_core(wpn: int = 1, budget: str = "400K") -> dict:

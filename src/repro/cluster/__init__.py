@@ -1,6 +1,6 @@
 """repro.cluster — real multi-node execution over TCP (DESIGN.md §12).
 
-The package has four pieces:
+The package has five pieces:
 
 * :mod:`repro.cluster.protocol` — the length-prefixed wire format: message
   metadata rides pickle, ndarrays ride separate raw-codec frames (the
@@ -13,6 +13,10 @@ The package has four pieces:
   (``python -m repro.cluster.agent --connect HOST:PORT --workers N``): runs
   task bodies on a PR-1 process-executor pool and caches received data in a
   node-local object plane keyed by ``(data_id, version)``.
+* :mod:`repro.cluster.peer`     — the peer-to-peer data plane (DESIGN.md
+  §15): every agent serves its node plane over an ephemeral data port,
+  and consumers (other agents, or the scheduler on gather) pull
+  node-resident results through pooled per-peer connections.
 * :mod:`repro.cluster.cluster`  — ``LocalCluster``, a harness that spawns N
   agents on localhost so tests/CI/benchmarks exercise the real multi-node
   path on one machine.
@@ -21,4 +25,5 @@ The scheduler-side executor backend lives in
 :class:`repro.core.executors.ClusterExecutor` (``backend="cluster"``).
 """
 from .cluster import LocalCluster  # noqa: F401
+from .peer import PeerFetchError, PeerPool  # noqa: F401
 from .protocol import ConnectionClosed  # noqa: F401

@@ -52,15 +52,20 @@ from ..core.memory import (
     spillable,
 )
 from ..core.serialization import as_c_contiguous
+from .peer import PEER_FETCH_TIMEOUT, DataServer, PeerFetchError, PeerPool
 from .protocol import (
     ConnectionClosed,
+    Fetch,
     Frame,
     Put,
+    RemoteRef,
     array_frame,
+    datum_frame_bytes,
     frame_eligible,
-    frame_to_array,
+    inline_max_from_env,
     recv_msg,
     send_msg,
+    struct_nbytes,
     unpack_payload,
 )
 
@@ -85,6 +90,17 @@ class NodePlane:
         self._lock = threading.RLock()
         self._data: Dict[Tuple[int, int], Any] = {}
         self._tmp: Dict[int, Any] = {}
+        # keys with a peer fetch in flight (DESIGN.md §15): registered on
+        # the reader thread in wire order, resolved by the peer pool;
+        # lookups block on the event so a Ref can never observe a gap
+        # between the scheduler's residency mark and the bytes landing
+        self._pending: Dict[Tuple[int, int], "_PendingFetch"] = {}
+        # tombstones for failed pulls: a lookup that starts AFTER the
+        # failure must still surface a retryable PeerFetchError (carrying
+        # lost_input), not a bare KeyError that burns the task's own
+        # retry budget.  Cleared when a fresh Fetch re-registers or the
+        # value arrives another way (re-Put after a residency strike)
+        self._fetch_failed: Dict[Tuple[int, int], BaseException] = {}
         self.governor: Optional[MemoryGovernor] = None
         self.configure_memory(memory_budget)
 
@@ -108,26 +124,94 @@ class NodePlane:
         return value.nbytes
 
     def contains(self, key: Tuple[int, int]) -> bool:
-        """Residency probe that never faults (reader-thread pre-store)."""
+        """Residency probe that never faults (reader-thread pre-store).
+        Pending peer fetches count as resident — the bytes are on their
+        way, and ``lookup`` blocks until they land."""
         with self._lock:
-            return key in self._data
+            return key in self._data or key in self._pending
 
     def lookup(self, key: Tuple[int, int]) -> Any:
+        while True:
+            with self._lock:
+                if key in self._data:
+                    value = self._data[key]
+                    if isinstance(value, SpilledValue):
+                        view = value.load()   # file-backed: not re-charged
+                        self._data[key] = view
+                        if self.governor is not None:
+                            self.governor.fault(key, value.nbytes)
+                        return view
+                    if self.governor is not None:
+                        self.governor.touch(key)
+                    return value
+                pending = self._pending.get(key)
+                if pending is None:
+                    failed = self._fetch_failed.get(key)
+            if pending is None:
+                if failed is not None:
+                    err = PeerFetchError(
+                        f"peer fetch of d{key[0]}v{key[1]} failed earlier "
+                        f"on this node: {failed}")
+                    err.__cause__ = failed
+                    raise err
+                raise KeyError(key)
+            # wait OUTSIDE the lock for the peer pull to land
+            if not pending.event.wait(timeout=PEER_FETCH_TIMEOUT):
+                raise PeerFetchError(
+                    f"peer fetch of d{key[0]}v{key[1]} timed out after "
+                    f"{PEER_FETCH_TIMEOUT}s")
+            if pending.error is not None:
+                raise pending.error
+
+    # -- peer-fetch lifecycle (DESIGN.md §15) --------------------------------
+    def begin_fetch(self, key: Tuple[int, int]) -> bool:
+        """Register a pending peer pull; False if the key is already
+        resident or in flight (nothing to do)."""
         with self._lock:
-            value = self._data[key]
-            if isinstance(value, SpilledValue):
-                view = value.load()   # file-backed: not re-charged
-                self._data[key] = view
-                if self.governor is not None:
-                    self.governor.fault(key, value.nbytes)
-                return view
-            if self.governor is not None:
-                self.governor.touch(key)
-            return value
+            if key in self._data or key in self._pending:
+                return False
+            self._fetch_failed.pop(key, None)   # fresh directive: retry
+            self._pending[key] = _PendingFetch()
+            return True
+
+    def resolve_fetch(self, key: Tuple[int, int], value: Any) -> None:
+        with self._lock:
+            self.store(key, value)
+            pending = self._pending.pop(key, None)
+        if pending is not None:
+            pending.event.set()
+
+    def fail_fetch(self, key: Tuple[int, int], err: BaseException) -> None:
+        """The pull failed (producer gone).  Current waiters observe the
+        error, LATE lookups hit the tombstone (still a retryable
+        lost-input error), and a retry's fresh ``Fetch`` directive (after
+        the scheduler's residency reset) re-registers cleanly."""
+        with self._lock:
+            self._fetch_failed[key] = err
+            pending = self._pending.pop(key, None)
+        if pending is not None:
+            pending.error = err
+            pending.event.set()
+
+    def lookup_serve(self, key: Optional[Tuple[int, int]],
+                     token: Optional[int]) -> Any:
+        """Data-server resolution: by datum key first, then by result
+        token — a consumer's fetch may legitimately arrive before this
+        node processed the ``alias`` that binds token to key."""
+        if key is not None:
+            try:
+                return self.lookup(key)
+            except KeyError:
+                pass
+        with self._lock:
+            if token is not None and token in self._tmp:
+                return self._tmp[token]
+        raise KeyError(key if key is not None else token)
 
     def store(self, key: Tuple[int, int], value: Any) -> None:
         with self._lock:
             self._data[key] = value
+            self._fetch_failed.pop(key, None)   # value arrived after all
             if self.governor is not None and spillable(value):
                 self.governor.admit(key, value.nbytes)
 
@@ -160,12 +244,23 @@ class NodePlane:
             s = {
                 "plane_entries": len(vals),
                 "plane_tmp": len(self._tmp),
-                "plane_bytes": sum(int(getattr(v, "nbytes", 0) or 0) for v in vals),
+                "plane_pending_fetches": len(self._pending),
+                "plane_bytes": sum(struct_nbytes(v) if not hasattr(v, "nbytes")
+                                   else int(getattr(v, "nbytes", 0) or 0)
+                                   for v in vals),
             }
             if self.governor is not None:
                 s.update({f"plane_{k}": v
                           for k, v in self.governor.stats().items()})
             return s
+
+
+class _PendingFetch:
+    __slots__ = ("event", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.error: Optional[BaseException] = None
 
 
 class NodeAgent:
@@ -184,6 +279,17 @@ class NodeAgent:
         self.plane = NodePlane()
         self.pool: Optional[ProcessExecutor] = None
         self.sock: Optional[socket.socket] = None
+        # peer data plane (DESIGN.md §15): serve our node plane to peers,
+        # pull Fetch directives from theirs.  The p2p flag and (unless
+        # this host sets RJAX_INLINE_MAX itself) the inline threshold are
+        # settled by the welcome handshake, so every agent applies the
+        # scheduler's encoding policy
+        self.data_server: Optional[DataServer] = None
+        self.peers = PeerPool(label=f"agent{node_id}",
+                              fd_hooks=(self._track_fd, self._untrack_fd))
+        self.p2p = True
+        self._inline_env = os.environ.get("RJAX_INLINE_MAX")
+        self.inline_max = inline_max_from_env()
         self._send_lock = threading.Lock()
         self._slot_queues: List[queue.Queue] = []
         self._fns: Dict[int, Any] = {}
@@ -194,6 +300,20 @@ class NodeAgent:
         self._done = threading.Event()
 
     # ------------------------------------------------------------- lifecycle
+    def _track_fd(self, fd: int) -> None:
+        """Data-plane sockets (accepted serve connections, outgoing peer
+        pulls) must be closed at birth by respawned pool workers, exactly
+        like the scheduler socket — a worker inheriting one keeps the
+        connection half-open after this agent dies, masking the crash
+        from the peer (GIL-atomic list ops; read at fork time)."""
+        self.pool.inherit_blockers.append(fd)
+
+    def _untrack_fd(self, fd: int) -> None:
+        try:
+            self.pool.inherit_blockers.remove(fd)
+        except ValueError:
+            pass
+
     def run(self) -> None:
         # fork the pool BEFORE connecting and before the slot threads exist
         # (never fork a multithreaded process, and never let a worker
@@ -206,15 +326,39 @@ class NodeAgent:
         self.sock = socket.create_connection(self.addr, timeout=30.0)
         self.sock.settimeout(None)
         self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # the data listener binds the interface that faces the cluster —
+        # the local address of the scheduler connection (127.0.0.1 under
+        # LocalCluster: never exposed off-host) — NOT all interfaces:
+        # recv_msg unpickles request metadata, so an open port would be a
+        # code-execution surface.  Multi-homed deployments where peers
+        # live on a different network override with RJAX_DATA_HOST.
+        # Binding happens before the hello so the port can ride it.
+        data_host = os.environ.get("RJAX_DATA_HOST")
+        self.data_server = DataServer(
+            self.plane.lookup_serve,
+            host=data_host or self.sock.getsockname()[0],
+            fd_hooks=(self._track_fd, self._untrack_fd))
         # workers respawned after a crash fork with the socket open: make
-        # them close it at birth
+        # them close it at birth (the data listener too — a worker holding
+        # it would keep serving a dead node's port)
         self.pool.inherit_blockers.append(self.sock.fileno())
-        send_msg(self.sock, {"op": "hello", "node_id": self.node_id,
-                             "workers": self.workers, "pid": os.getpid(),
-                             "host": socket.gethostname()})
+        self.pool.inherit_blockers.append(self.data_server._listener.fileno())
+        hello = {"op": "hello", "node_id": self.node_id,
+                 "workers": self.workers, "pid": os.getpid(),
+                 "host": socket.gethostname(),
+                 "data_port": self.data_server.port}
+        if data_host:
+            # explicitly-routed data network: advertise the host too —
+            # the default peers derive (this connection's source host)
+            # would point at the wrong interface
+            hello["data_host"] = data_host
+        send_msg(self.sock, hello)
         welcome, _ = recv_msg(self.sock)
         assert welcome.get("op") == "welcome", welcome
         self.node_id = welcome["node_id"]
+        self.p2p = bool(welcome.get("p2p", True))
+        if self._inline_env is None and welcome.get("inline_max") is not None:
+            self.inline_max = max(0, int(welcome["inline_max"]))
         budget = self.memory_budget
         if budget is None:
             budget = budget_from_env(welcome.get("memory_budget"))
@@ -241,6 +385,14 @@ class NodeAgent:
                 t.join(timeout=2.0)
             try:
                 self.pool.shutdown(wait=False)
+            except Exception:
+                pass
+            try:
+                self.peers.close()
+            except Exception:
+                pass
+            try:
+                self.data_server.close()
             except Exception:
                 pass
             try:
@@ -288,6 +440,12 @@ class NodeAgent:
                     s[f"pool_{k}" if (k in s or k.startswith("plane_"))
                       else k] = v
                 s["node_id"] = self.node_id
+                # the pool is the single fetch ledger (counted where both
+                # sync and async pulls converge, under the pool lock)
+                s["p2p_fetches"] = self.peers.fetches
+                s["p2p_fetch_bytes"] = self.peers.fetch_bytes
+                if self.data_server is not None:
+                    s.update(self.data_server.stats())
                 self._reply({"op": "stats", "mid": meta["mid"], "stats": s})
             elif op == "exit":
                 return
@@ -301,11 +459,14 @@ class NodeAgent:
 
     # ------------------------------------------------------------- task path
     def _pre_store(self, meta: dict, frames) -> None:
-        """Reader-thread half of a task message: pin the fn blob and cache
+        """Reader-thread half of a task message: pin the fn blob, cache
         every ``Put`` payload into the plane (frame decode is a zero-copy
-        ``np.frombuffer``, so this stays cheap).  Runs for every task in
-        stream order, whether or not the body later fails — keeping the
-        scheduler's residency/fn ledgers truthful."""
+        ``np.frombuffer``, so this stays cheap), and kick off the peer
+        pull for every ``Fetch`` directive (registered here, in stream
+        order, so a later ``Ref`` to the same key blocks on the pending
+        entry instead of missing).  Runs for every task whether or not
+        the body later fails — keeping the scheduler's residency/fn
+        ledgers truthful."""
         blob = meta.get("fn")
         if blob:
             with self._fn_lock:
@@ -314,10 +475,13 @@ class NodeAgent:
         def walk(o):
             if isinstance(o, Put):
                 if not self.plane.contains(o.key):   # probe, don't fault
-                    v = o.value
-                    if isinstance(v, Frame):
-                        v = frame_to_array(frames[v.i])
-                    self.plane.store(o.key, v)
+                    # a Put payload is the datum's structure with Frame
+                    # markers only (enc_value never nests other datums),
+                    # so the protocol's own walker decodes it
+                    self.plane.store(o.key, unpack_payload(o.value, frames))
+            elif isinstance(o, Fetch):
+                if self.plane.begin_fetch(o.key):
+                    self._start_fetch(o)
             elif isinstance(o, (list, tuple)):
                 for x in o:
                     walk(x)
@@ -326,6 +490,27 @@ class NodeAgent:
                     walk(x)
 
         walk(meta["structure"])
+
+    def _start_fetch(self, directive: Fetch) -> None:
+        """Queue the peer pull on the pooled per-peer connection; the
+        callback lands the value in the plane (or fails current waiters)."""
+        key = tuple(directive.key)
+        if not directive.addr:
+            # a channel without a derivable peer address (e.g. a
+            # socketpair harness) can book RemoteValues with addr=None;
+            # fail the pull cleanly instead of wedging the reader thread
+            self.plane.fail_fetch(key, PeerFetchError(
+                f"no data-plane address for node {directive.node} "
+                f"(d{key[0]}v{key[1]})"))
+            return
+
+        def on_done(value, err):
+            if err is not None:
+                self.plane.fail_fetch(key, err)
+                return
+            self.plane.resolve_fetch(key, value)
+
+        self.peers.fetch_async(directive.addr, key, directive.token, on_done)
 
     def _fn_for(self, token: int):
         with self._fn_lock:
@@ -357,7 +542,8 @@ class NodeAgent:
                     keyed[id(v)] = marker_key
                 result = self.pool.invoke(slot, fn, args, kwargs,
                                           input_keys=keyed)
-                structure, out_frames, tokens = self._encode_result(result)
+                structure, out_frames, tokens = self._encode_result(
+                    result, meta.get("n_out", -1))
                 self._reply({"op": "done", "mid": mid, "structure": structure,
                              "tokens": tokens}, out_frames)
             except BaseException as err:  # noqa: BLE001 — ships to scheduler
@@ -374,18 +560,32 @@ class NodeAgent:
             finally:
                 self.pool.task_done()   # reclaim unpublished result segments
 
-    def _encode_result(self, result: Any):
-        """Result ndarrays ride frames; each framed array is parked in the
-        token side-table so a later ``alias`` can pin it into the plane
-        without a round-trip."""
+    def _new_token(self) -> int:
+        with self._token_lock:
+            token = self._next_token
+            self._next_token += 1
+            return token
+
+    def _encode_result(self, result: Any, n_out: int = -1):
+        """Encode a ``done`` reply (DESIGN.md §15).
+
+        ``n_out`` is the task's declared output count, which tells us
+        which positions of the result are whole *datums*: the root when
+        ``n_out <= 1``, the top-level elements when the result is an
+        ``n_out``-tuple.  A datum whose frame-eligible bytes reach the
+        inline threshold stays HERE, in the token side-table, and the
+        reply carries only a ``RemoteRef`` descriptor — the scheduler
+        books a ``RemoteValue`` and consumers pull peer-to-peer.  Datums
+        below the threshold (``RJAX_INLINE_MAX``) ride the reply inline:
+        no frame, no token, no alias round-trip.  Arrays that are not at
+        a datum position (or when p2p is off) keep the frame+token path
+        so a later ``alias`` can still pin them."""
         frames: List = []
         tokens: List[int] = []
 
         def enc(o: Any) -> Any:
-            if isinstance(o, np.ndarray) and frame_eligible(o):
-                with self._token_lock:
-                    token = self._next_token
-                    self._next_token += 1
+            if isinstance(o, np.ndarray) and frame_eligible(o, self.inline_max):
+                token = self._new_token()
                 o = as_c_contiguous(o)
                 self.plane.hold(token, o)
                 frames.append(array_frame(o))
@@ -400,19 +600,39 @@ class NodeAgent:
                 return {k: enc(v) for k, v in o.items()}
             return o
 
-        return enc(result), frames, tokens
+        def enc_datum(o: Any) -> Any:
+            if self.p2p:
+                nbytes = datum_frame_bytes(o)
+                if nbytes >= max(1, self.inline_max):
+                    if isinstance(o, np.ndarray):
+                        o = as_c_contiguous(o)
+                    token = self._new_token()
+                    self.plane.hold(token, o)
+                    return RemoteRef(token, nbytes)
+            return enc(o)
+
+        if n_out > 1 and isinstance(result, (tuple, list)) \
+                and len(result) == n_out:
+            mapped = [enc_datum(el) for el in result]
+            structure: Any = tuple(mapped) if isinstance(result, tuple) \
+                else mapped
+        else:
+            structure = enc_datum(result)
+        return structure, frames, tokens
 
 
 def _keyed_arrays(structure, plane):
     """Yield ``(key, value)`` for every keyed ndarray the decoded payload
-    contains (both fresh ``Put``s and plane-resident ``Ref``s), so the
-    inner pool's shm plane can dedup them by datum key."""
-    from .protocol import Put, Ref
+    contains (fresh ``Put``s, plane-resident ``Ref``s and peer-pulled
+    ``Fetch``es), so the inner pool's shm plane can dedup them by datum
+    key.  Structured (tuple/dict) datums are skipped — they cross the
+    worker pipe by value."""
+    from .protocol import Fetch, Put, Ref
 
     out = []
 
     def walk(o):
-        if isinstance(o, (Ref, Put)):
+        if isinstance(o, (Ref, Put, Fetch)):
             v = plane.lookup(o.key)
             if isinstance(v, np.ndarray):
                 out.append((o.key, v))

@@ -51,8 +51,14 @@ class AgentChannel:
             pass   # not TCP (e.g. a socketpair in tests)
         self.sock = sock
         self.node_id = node_id
-        self.hello = hello            # {"workers": N, "pid": ..., "host": ...}
+        self.hello = hello            # {"workers": N, "pid": ..., "host": ...,
+        #                                "data_port": ...}
         self.closed = False
+        # fired exactly once when the connection dies (crash OR close);
+        # the executor uses it to start recovery even when no request was
+        # in flight — a producer can die holding node-resident results
+        # that nobody has asked for yet (DESIGN.md §15)
+        self.on_close: Optional[Callable[[], None]] = None
         self._send_lock = threading.Lock()
         self._pending: Dict[int, _Pending] = {}
         self._pending_lock = threading.Lock()
@@ -60,6 +66,25 @@ class AgentChannel:
         self._reader = threading.Thread(target=self._read_loop, daemon=True,
                                         name=f"agent{node_id}-reader")
         self._reader.start()
+
+    def data_addr(self) -> Optional[str]:
+        """The agent's peer data-plane address (``host:port``): the host
+        this connection actually came from (or the ``data_host`` the
+        agent explicitly advertised — RJAX_DATA_HOST on multi-homed
+        nodes) plus the ``data_port`` from its hello."""
+        port = self.hello.get("data_port")
+        if not port:
+            return None
+        host = self.hello.get("data_host")
+        if not host:
+            try:
+                peer = self.sock.getpeername()
+                host = peer[0] if isinstance(peer, tuple) else None
+            except OSError:
+                return None
+        if not host:
+            return None
+        return f"{host}:{port}"
 
     # ---------------------------------------------------------------- sending
     def request_async(self, meta: dict, frames: Sequence[Sequence] = ()):
@@ -169,6 +194,13 @@ class AgentChannel:
             self.closed = True
             pending = list(self._pending.values())
             self._pending.clear()
+            on_close, self.on_close = self.on_close, None
+        if on_close is not None:
+            # on its own thread: recovery (agent respawn, lineage
+            # re-execution) takes executor/store/graph locks that the
+            # thread noticing the failure may already hold
+            threading.Thread(target=on_close, daemon=True,
+                             name=f"agent{self.node_id}-onclose").start()
         if not pending:
             return
         err = err if err is not None else ConnectionClosed(

@@ -60,6 +60,13 @@ class LocalCluster:
         # the runtime sets this from its memory_budget knob before the
         # executor accepts agents (an agent's own --memory-budget wins)
         self.memory_budget: Optional[int] = None
+        # peer-to-peer data plane (DESIGN.md §15): the executor sets these
+        # from RJAX_P2P / RJAX_INLINE_MAX before accepting agents;
+        # forwarded in the welcome so agents on OTHER hosts (which never
+        # saw the scheduler's environment) apply the same result-encoding
+        # policy.  An agent's own RJAX_INLINE_MAX wins, like --memory-budget
+        self.p2p: bool = True
+        self.inline_max: Optional[int] = None
         self._lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -141,7 +148,8 @@ class LocalCluster:
             if nid is None:
                 nid = next(free)
             send_msg(conn, {"op": "welcome", "node_id": nid,
-                            "memory_budget": self.memory_budget})
+                            "memory_budget": self.memory_budget,
+                            "p2p": self.p2p, "inline_max": self.inline_max})
             channels[nid] = AgentChannel(conn, nid, hello)
         return channels
 
@@ -158,7 +166,8 @@ class LocalCluster:
             self._spawn(i)
             conn, hello = self._accept_one(timeout)
             send_msg(conn, {"op": "welcome", "node_id": i,
-                            "memory_budget": self.memory_budget})
+                            "memory_budget": self.memory_budget,
+                            "p2p": self.p2p, "inline_max": self.inline_max})
             return AgentChannel(conn, i, hello)
 
     # ------------------------------------------------------------ teardown

@@ -18,15 +18,29 @@ beyond 4 GiB are representable (dask's comm core made the same choice
 after real workloads hit the u32 ceiling).
 
 Structure packing (``pack_payload`` / ``unpack_payload``) turns a nested
-args/kwargs structure into (picklable metadata, frame list) using three
+args/kwargs structure into (picklable metadata, frame list) using four
 markers:
 
 * ``Frame(i)``     — the value is ndarray frame *i* of the message;
 * ``Ref(key)``     — the value is already cached in the receiving node's
                      object plane under ``(data_id, version)``;
-* ``Put(key, v)``  — cache ``v`` (itself possibly a ``Frame``) under
-                     ``key``, then use it — the send-once half of the
-                     send-once/reuse-many property.
+* ``Put(key, v)``  — cache ``v`` (a structure possibly containing
+                     ``Frame`` markers) under ``key``, then use it — the
+                     send-once half of the send-once/reuse-many property.
+                     Keying happens at the *datum* level: a tuple-valued
+                     datum is one ``Put`` whose inner arrays ride frames,
+                     so structured results get the same caching as plain
+                     ndarrays;
+* ``Fetch(key,…)`` — the value is node-resident on a *peer* (DESIGN.md
+                     §15): the receiver pulls it straight from the
+                     producing agent's data plane instead of the
+                     scheduler shipping bytes it does not hold.
+
+``RemoteRef`` is the result-side descriptor: a ``done`` reply whose datum
+stays resident on the producing node carries ``RemoteRef(token, nbytes)``
+instead of frames — the scheduler records a
+:class:`~repro.core.futures.RemoteValue` placeholder and only metadata
+crossed its link.
 """
 from __future__ import annotations
 
@@ -47,6 +61,20 @@ _U64 = struct.Struct("<Q")
 # is cheaper pickled inline in the metadata frame (keyed data is framed
 # regardless — it gets cached and reused on the far side)
 WIRE_MIN_FRAME_BYTES = 1024
+
+# result datums whose frame-eligible bytes stay below this ride the `done`
+# reply inline (one pickle, no token, no alias round-trip, no potential
+# peer fetch); at or above it they stay node-resident and the reply
+# carries only a RemoteRef descriptor (DESIGN.md §15)
+DEFAULT_INLINE_MAX = 8192
+
+
+def inline_max_from_env(explicit=None) -> int:
+    """Resolve the ``RJAX_INLINE_MAX`` knob (0 = inline nothing, always
+    defer/frame — the pre-§15 result encoding)."""
+    if explicit is not None:
+        return max(0, int(explicit))
+    return max(0, int(os.environ.get("RJAX_INLINE_MAX", DEFAULT_INLINE_MAX)))
 
 # messages whose total size (header + metadata + all frames) is at or
 # below this are copied into ONE contiguous buffer and written with a
@@ -155,14 +183,38 @@ def frame_to_array(frame) -> np.ndarray:
     return arr
 
 
-def frame_eligible(arr: np.ndarray) -> bool:
-    if arr.dtype.hasobject:
+def frame_eligible(arr: np.ndarray, min_bytes: int = 0) -> bool:
+    if arr.dtype.hasobject or arr.nbytes < min_bytes:
         return False
     try:
         _pack_header(arr)
         return True
     except TypeError:  # dtype outside the raw-codec table
         return False
+
+
+def _sum_array_bytes(value: Any, pred: Callable[[np.ndarray], bool]) -> int:
+    """Sum ``nbytes`` of the ndarrays inside a datum value that satisfy
+    ``pred`` — the one structure walker behind both byte ledgers below
+    (a container type added here is counted consistently everywhere)."""
+    total = 0
+    stack = [value]
+    while stack:
+        o = stack.pop()
+        if isinstance(o, np.ndarray):
+            if pred(o):
+                total += int(o.nbytes)
+        elif isinstance(o, (list, tuple)):
+            stack.extend(o)
+        elif isinstance(o, dict):
+            stack.extend(o.values())
+    return total
+
+
+def datum_frame_bytes(value: Any) -> int:
+    """Total frame-eligible ndarray bytes inside one datum value — the
+    size that decides inline-vs-node-resident result encoding."""
+    return _sum_array_bytes(value, frame_eligible)
 
 
 # -------------------------------------------------------- structure markers
@@ -214,7 +266,53 @@ class Put:
         self.key, self.value = state
 
 
-_MARKERS = (Frame, Ref, Put)
+class Fetch:
+    """Placeholder: the value lives on peer ``node`` (reachable at
+    ``addr``, a ``host:port`` data-plane address) under ``key`` — or still
+    under result ``token`` if the producer has not yet processed its
+    ``alias``.  The receiver pulls it peer-to-peer (DESIGN.md §15)."""
+
+    __slots__ = ("key", "token", "node", "addr", "nbytes")
+
+    def __init__(self, key: Tuple[int, int], token: Optional[int],
+                 node: int, addr: str, nbytes: int):
+        self.key = key
+        self.token = token
+        self.node = node
+        self.addr = addr
+        self.nbytes = nbytes
+
+    def __getstate__(self):
+        return (self.key, self.token, self.node, self.addr, self.nbytes)
+
+    def __setstate__(self, state):
+        self.key, self.token, self.node, self.addr, self.nbytes = state
+
+
+class RemoteRef:
+    """Result-side descriptor: the datum stays resident on the producing
+    node under result ``token``; only (token, nbytes) cross the
+    scheduler's link."""
+
+    __slots__ = ("token", "nbytes")
+
+    def __init__(self, token: int, nbytes: int):
+        self.token = token
+        self.nbytes = nbytes
+
+    def __getstate__(self):
+        return (self.token, self.nbytes)
+
+    def __setstate__(self, state):
+        self.token, self.nbytes = state
+
+
+_MARKERS = (Frame, Ref, Put, Fetch, RemoteRef)
+
+
+def struct_nbytes(value: Any) -> int:
+    """Sum of ndarray bytes inside a datum value (ledger accounting)."""
+    return _sum_array_bytes(value, lambda _arr: True)
 
 
 def pack_payload(
@@ -224,26 +322,63 @@ def pack_payload(
 ) -> Tuple[Any, List, Dict[str, Any]]:
     """Encode a nested structure for the wire.
 
-    Keyed ndarrays (``id(value)`` in ``input_keys``) become ``Ref`` when
-    ``key`` is in ``resident`` (the receiver already holds them) and
-    ``Put`` otherwise; raw-eligible ndarrays ride out-of-band frames,
-    everything else stays inline for frame 0's pickle.  Returns
-    ``(structure, frames, info)`` where ``info`` reports the ``Put`` keys
-    and bytes (the executor's data-plane ledger) and the ``Ref`` count
-    (dedup wins).
+    Keying is at the *datum* level (``id(value)`` in ``input_keys`` —
+    ndarray, tuple, list or dict values straight from the object store):
+    a keyed datum becomes ``Ref`` when ``key`` is in ``resident`` (the
+    receiver already holds it), ``Fetch`` when the datum is a
+    :class:`~repro.core.futures.RemoteValue` resident on a peer node
+    (the receiver pulls it peer-to-peer, DESIGN.md §15), and ``Put``
+    otherwise — the ``Put`` payload is the datum's structure with its
+    raw-eligible ndarrays as out-of-band frames.  Unkeyed large arrays
+    ride anonymous frames; everything else stays inline for frame 0's
+    pickle.  Returns ``(structure, frames, info)`` where ``info`` reports
+    the ``Put`` keys/bytes, the ``Fetch`` keys/bytes (the peer data-plane
+    ledger) and the ``Ref`` count (dedup wins).
     """
+    from ..core.futures import RemoteValue
     input_keys = input_keys or {}
     resident = resident if resident is not None else set()
     frames: List = []
-    info = {"put_keys": [], "put_bytes": 0, "refs": 0}
+    info = {"put_keys": [], "put_bytes": 0, "refs": 0,
+            "fetch_keys": [], "fetch_bytes": 0}
     put_in_msg: set = set()   # intra-message dedup: same datum twice = one Put
 
     def frame_of(arr: np.ndarray) -> Frame:
         frames.append(array_frame(arr))
         return Frame(len(frames) - 1)
 
-    def walk(o: Any) -> Any:
+    def enc_value(o: Any) -> Any:
+        """A keyed datum's payload: inner arrays ride frames, no keying
+        (store values never nest other datums)."""
         if isinstance(o, np.ndarray):
+            if frame_eligible(o) and o.nbytes >= WIRE_MIN_FRAME_BYTES:
+                return frame_of(o)
+            return o
+        if isinstance(o, (list, tuple)):
+            mapped = [enc_value(x) for x in o]
+            if isinstance(o, tuple):
+                return type(o)(*mapped) if hasattr(o, "_fields") else tuple(mapped)
+            return mapped
+        if isinstance(o, dict):
+            return {k: enc_value(v) for k, v in o.items()}
+        return o
+
+    def walk(o: Any) -> Any:
+        if isinstance(o, RemoteValue):
+            key = input_keys.get(id(o))
+            if key is None:
+                key = o.key
+            if key is None:
+                raise TypeError(
+                    f"{o!r} outside the object store cannot cross the wire")
+            if key in resident or key in put_in_msg:
+                info["refs"] += 1
+                return Ref(key)
+            put_in_msg.add(key)
+            info["fetch_keys"].append(key)
+            info["fetch_bytes"] += int(o.nbytes)
+            return Fetch(key, o.token, o.node, o.addr, int(o.nbytes))
+        if isinstance(o, (np.ndarray, list, tuple, dict)):
             key = input_keys.get(id(o))
             if key is not None:
                 if key in resident or key in put_in_msg:
@@ -251,17 +386,18 @@ def pack_payload(
                     return Ref(key)
                 put_in_msg.add(key)
                 info["put_keys"].append(key)
-                info["put_bytes"] += int(o.nbytes)
-                return Put(key, frame_of(o) if frame_eligible(o) else o)
-            if frame_eligible(o) and o.nbytes >= WIRE_MIN_FRAME_BYTES:
-                return frame_of(o)
-            return o
-        if isinstance(o, (list, tuple)):
-            mapped = [walk(x) for x in o]
-            if isinstance(o, tuple):
-                return type(o)(*mapped) if hasattr(o, "_fields") else tuple(mapped)
-            return mapped
-        if isinstance(o, dict):
+                info["put_bytes"] += struct_nbytes(o)
+                return Put(key, enc_value(o))
+            if isinstance(o, np.ndarray):
+                if frame_eligible(o) and o.nbytes >= WIRE_MIN_FRAME_BYTES:
+                    return frame_of(o)
+                return o
+            if isinstance(o, (list, tuple)):
+                mapped = [walk(x) for x in o]
+                if isinstance(o, tuple):
+                    return type(o)(*mapped) if hasattr(o, "_fields") \
+                        else tuple(mapped)
+                return mapped
             return {k: walk(v) for k, v in o.items()}
         return o
 
@@ -281,9 +417,13 @@ def unpack_payload(
     def walk(o: Any) -> Any:
         if isinstance(o, Frame):
             return frame_to_array(frames[o.i])
-        if isinstance(o, Ref):
+        if isinstance(o, (Ref, Fetch)):
+            # a Fetch was resolved (or registered as pending) when the
+            # reader pre-stored this message; by now the plane either has
+            # the value or blocks the lookup until the peer pull lands
             if lookup is None:
-                raise ValueError("Ref marker but no plane lookup provided")
+                raise ValueError(f"{type(o).__name__} marker but no plane "
+                                 "lookup provided")
             return lookup(o.key)
         if isinstance(o, Put):
             if lookup is not None:

@@ -109,6 +109,16 @@ def current_runtime() -> Runtime:
     return _runtime
 
 
+def runtime_stats() -> dict:
+    """Live statistics of the running runtime: task counters, wallclock/
+    utilization, the memory ledger, and the data-plane split —
+    ``scheduler_relay_bytes`` (bytes that crossed the scheduler's own
+    link) vs ``p2p_bytes`` (bytes moved directly between node agents,
+    attributed per source node under ``data_plane.p2p_by_source``;
+    DESIGN.md §15)."""
+    return current_runtime().stats()
+
+
 def runtime_stop(wait: bool = True) -> dict:
     """Drain and shut down (``compss_stop``); returns run statistics."""
     global _runtime

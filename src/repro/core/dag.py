@@ -215,10 +215,14 @@ class TaskGraph:
         newly_ready: List[int] = []
         for cid in n.children:
             c = self._nodes.get(cid)
-            if c is None:
+            # only PENDING children hold unresolved edges; a resurrected
+            # producer (lineage re-execution, DESIGN.md §15) completes a
+            # second time with its children long released — decrementing
+            # them again would corrupt the in-degree bookkeeping
+            if c is None or c.state != TaskState.PENDING:
                 continue
             c.unresolved -= 1
-            if c.unresolved == 0 and c.state == TaskState.PENDING:
+            if c.unresolved == 0:
                 self._counts[TaskState.PENDING] -= 1
                 self._counts[TaskState.READY] += 1
                 c.state = TaskState.READY
@@ -257,6 +261,39 @@ class TaskGraph:
         with self._lock:
             n = self._nodes[task_id]
             self._set_state_locked(n, TaskState.READY)
+
+    def producer_of(self, key: Tuple[int, int]) -> Optional[int]:
+        """The task id that produces datum ``key`` (None once pruned)."""
+        with self._lock:
+            return self._producers.get(key)
+
+    def resurrect(self, task_id: int) -> bool:
+        """Lineage re-execution (DESIGN.md §15): a DONE task whose
+        node-resident output was lost with its node goes back to READY so
+        it can run again from its recorded inputs.  Returns False when
+        the node is unknown, pruned, or not DONE (already resurrected /
+        failed — nothing to do)."""
+        with self._lock:
+            n = self._nodes.get(task_id)
+            if n is None or n.state != TaskState.DONE:
+                return False
+            try:
+                self._terminal.remove(task_id)
+            except ValueError:
+                pass
+            self._counts[TaskState.DONE] -= 1
+            self._counts[TaskState.READY] += 1
+            n.state = TaskState.READY
+            n.error = None
+            # re-arm edges to children still PENDING: their edge to this
+            # task was released by the first completion, so without the
+            # +1 the SECOND completion would double-decrement and release
+            # them while other parents are still running
+            for cid in n.children:
+                c = self._nodes.get(cid)
+                if c is not None and c.state == TaskState.PENDING:
+                    c.unresolved += 1
+            return True
 
     def mark_cancelled(self, task_id: int) -> None:
         with self._lock:

@@ -1377,6 +1377,10 @@ class ClusterExecutor(ExecutorBackend):
 
     name = "cluster"
     pipelined = True
+    # dispatch resolves inputs WITHOUT materializing node-resident
+    # results: RemoteValue placeholders flow through pack_payload as
+    # Ref/Fetch directives instead (DESIGN.md §15)
+    remote_values_ok = True
 
     def __init__(self, n_workers: int, label: str = "rjax", cluster=None,
                  pipeline_depth: int = 1):
@@ -1392,32 +1396,84 @@ class ClusterExecutor(ExecutorBackend):
             raise ValueError(
                 f"n_workers={self.n_workers} != n_agents({self.n_agents}) x "
                 f"workers_per_node({self.wpn})")
+        # peer data plane kill-switch: RJAX_P2P=0 restores the PR-4
+        # star topology (every result framed back to the scheduler)
+        self.p2p = os.environ.get("RJAX_P2P", "1").lower() not in (
+            "0", "false", "off", "no")
         self._channels: List[Any] = [None] * self.n_agents
+        self._data_addrs: List[Optional[str]] = [None] * self.n_agents
         self._order_locks = [threading.Lock() for _ in range(self.n_agents)]
         self._restart_lock = threading.Lock()
         self._resident: List[Set[Tuple[int, int]]] = [set() for _ in range(self.n_agents)]
         self._shipped_fns: List[Set[int]] = [set() for _ in range(self.n_agents)]
         self._fns = _FnRegistry()
+        self._peers = None         # scheduler-side PeerPool (gather path)
         self._tl = threading.local()
         self._closing = False
+        # data-plane counters are bumped from per-agent channel reader
+        # threads AND dispatcher threads — bare += across threads loses
+        # updates, and relay_bytes is the CI-gated §15 acceptance metric
+        self._stats_lock = threading.Lock()
         self.agent_restarts = 0
-        self.puts = 0              # keyed ndarrays shipped to some node
-        self.refs = 0              # keyed ndarrays referenced, not re-shipped
-        self.bytes_shipped = 0
+        self.puts = 0              # keyed datums shipped to some node
+        self.refs = 0              # keyed datums referenced, not re-shipped
+        self.fetches = 0           # peer-fetch directives issued
+        self.fetch_bytes = 0       # bytes those directives moved node↔node
+        self.bytes_shipped = 0     # scheduler→agent Put bytes
+        self.relay_result_bytes = 0   # agent→scheduler result frame bytes
+        self.remote_results = 0       # datums left node-resident
+        self.deferred_result_bytes = 0  # bytes that never crossed our link
 
     # -- lifecycle -----------------------------------------------------------
     def start(self, runtime) -> None:
+        from ..cluster.peer import PeerPool
+        from ..cluster.protocol import inline_max_from_env
+        self.cluster.p2p = self.p2p
+        # ship the scheduler-side inline threshold in the welcome, so
+        # external agents on other hosts apply the same encoding policy
+        if getattr(self.cluster, "inline_max", None) is None:
+            self.cluster.inline_max = inline_max_from_env()
         try:
             self._channels = self.cluster.accept_agents()
         except Exception:
             self.cluster.shutdown()
             raise
+        self._peers = PeerPool(label=f"{self.label}-sched")
+        for a, ch in enumerate(self._channels):
+            self._install_channel(a, ch)
+        runtime.store.set_fetcher(self._fetch_remote)
         super().start(runtime)
+
+    def _install_channel(self, a: int, ch) -> None:
+        self._data_addrs[a] = ch.data_addr()
+        ch.on_close = lambda _a=a, _ch=ch: self._on_channel_down(_a, _ch)
+
+    def _on_channel_down(self, a: int, ch) -> None:
+        """Connection-death hook: recover even when nothing was in
+        flight — the dead node may hold the only copy of published
+        results (DESIGN.md §15)."""
+        if not self._closing:
+            self._restart_agent(a, ch)
+
+    def _fetch_remote(self, key, rv, timeout=None):
+        """The store's gather-path materializer: pull a node-resident
+        datum straight from its producer's data plane, within the
+        caller's remaining deadline when one was given."""
+        from ..cluster.peer import PEER_FETCH_TIMEOUT, PeerFetchError
+        if rv.addr is None or self._peers is None:
+            raise PeerFetchError(
+                f"no data-plane address for node {rv.node} "
+                f"(d{key[0]}v{key[1]})")
+        t = PEER_FETCH_TIMEOUT if timeout is None \
+            else max(0.1, min(timeout, PEER_FETCH_TIMEOUT))
+        return self._peers.fetch(rv.addr, key, rv.token, timeout=t)
 
     def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
         from ..cluster.protocol import ConnectionClosed
         self._closing = True
         self._halt_dispatch()
+        if self.runtime is not None:
+            self.runtime.store.set_fetcher(None)
         for ch in self._channels:
             if ch is not None and not ch.closed:
                 try:
@@ -1425,6 +1481,8 @@ class ClusterExecutor(ExecutorBackend):
                 except ConnectionClosed:
                     pass
         super().shutdown(wait=wait, timeout=timeout)
+        if self._peers is not None:
+            self._peers.close()
         for ch in self._channels:
             if ch is not None:
                 ch.close()
@@ -1449,11 +1507,20 @@ class ClusterExecutor(ExecutorBackend):
         t = ex.t
         try:
             token, blob = self._fns.entry(t.fn)
+            # the agent needs the declared output arity to know which
+            # result positions are whole datums (RemoteRef-eligible); a
+            # speculative clone reports its primary's arity
+            n_out = len(t.out_keys)
+            if t.speculative_of is not None and self.runtime is not None:
+                try:
+                    n_out = len(self.runtime.graph.get(t.speculative_of).out_keys)
+                except KeyError:
+                    pass
             with self._order_locks[a]:
                 structure, frames, info = pack_payload(
                     (ex.args, ex.kwargs), ex.input_keys, self._resident[a])
                 meta = {"op": "task", "slot": slot, "token": token,
-                        "structure": structure}
+                        "structure": structure, "n_out": n_out}
                 if token not in self._shipped_fns[a]:
                     meta["fn"] = blob
                 ch.request_cb(
@@ -1462,10 +1529,17 @@ class ClusterExecutor(ExecutorBackend):
                     _ex=ex: self._on_reply(_w, _a, _ch, _ex, rmeta,
                                            rframes, err))
                 self._shipped_fns[a].add(token)
+                # a Fetch directive makes the key node-resident exactly
+                # like a Put — the consumer agent registers the pull on
+                # its reader in stream order, so later Refs are safe
                 self._resident[a].update(info["put_keys"])
-                self.puts += len(info["put_keys"])
-                self.refs += info["refs"]
-                self.bytes_shipped += info["put_bytes"]
+                self._resident[a].update(info["fetch_keys"])
+                with self._stats_lock:
+                    self.puts += len(info["put_keys"])
+                    self.refs += info["refs"]
+                    self.fetches += len(info["fetch_keys"])
+                    self.fetch_bytes += info["fetch_bytes"]
+                    self.bytes_shipped += info["put_bytes"]
         except (ConnectionClosed, OSError) as err:
             if not self._closing:
                 self._restart_agent(a, ch)
@@ -1498,7 +1572,20 @@ class ClusterExecutor(ExecutorBackend):
             else:
                 self._finish_cluster(worker, ex, result=result)
         else:
-            self._finish_cluster(worker, ex, error=self._remote_error(rmeta))
+            remote = self._remote_error(rmeta)
+            from ..cluster.peer import PeerFetchError
+            if isinstance(remote, PeerFetchError):
+                # the agent failed to pull a datum we marked resident at
+                # dispatch time (transient peer failure with the producer
+                # channel still up — channel death has its own reset).
+                # Strike this task's input keys from the agent's ledger
+                # so the retry re-ships Put/Fetch instead of a Ref the
+                # plane cannot resolve; over-striking a genuinely
+                # resident Put key only costs a redundant re-Put (the
+                # agent's pre-store skips keys it already holds)
+                with self._order_locks[a]:
+                    self._resident[a] -= set(ex.input_keys.values())
+            self._finish_cluster(worker, ex, error=remote)
 
     def _finish_cluster(self, worker: int, ex, *, result: Any = None,
                         error: Optional[BaseException] = None) -> None:
@@ -1517,19 +1604,39 @@ class ClusterExecutor(ExecutorBackend):
         return _rebuild_remote_error(rmeta.get("exc"), rmeta.get("tb"))
 
     def _decode_result(self, a: int, ch, rmeta: dict, rframes) -> Any:
-        from ..cluster.protocol import Frame, frame_to_array
+        from ..core.futures import RemoteValue
+        from ..cluster.protocol import (Frame, RemoteRef, frame_to_array,
+                                        struct_nbytes)
         tokens = rmeta.get("tokens") or []
         views: Dict[int, Tuple[int, int, Any]] = {}
+        # inline (below-RJAX_INLINE_MAX) result arrays ride the reply
+        # pickle — they crossed our link too, so the relay ledger counts
+        # them (Frame/RemoteRef markers contribute 0 here; frames add
+        # their own bytes below)
+        with self._stats_lock:
+            self.relay_result_bytes += struct_nbytes(rmeta["structure"])
 
-        def dec(marker: Frame):
+        def dec(marker):
+            if isinstance(marker, RemoteRef):
+                # the datum stayed on the producing node: book a
+                # placeholder; only this descriptor crossed our link
+                rv = RemoteValue(marker.token, a, self._data_addrs[a],
+                                 marker.nbytes)
+                views[id(rv)] = (a, marker.token, ch)
+                with self._stats_lock:
+                    self.remote_results += 1
+                    self.deferred_result_bytes += marker.nbytes
+                return rv
             arr = frame_to_array(rframes[marker.i])
+            with self._stats_lock:
+                self.relay_result_bytes += int(arr.nbytes)
             # the token is only meaningful on the exact connection that
             # minted it — a respawned agent restarts its counter, so
             # publish/drop must verify channel identity, not just index
             views[id(arr)] = (a, tokens[marker.i], ch)
             return arr
 
-        result = _walk(rmeta["structure"], dec, (Frame,))
+        result = _walk(rmeta["structure"], dec, (Frame, RemoteRef))
         self._tl.views = views   # consumed by publish() in the same thread
         return result
 
@@ -1537,17 +1644,35 @@ class ClusterExecutor(ExecutorBackend):
     def publish(self, key, value):
         """The runtime bound a just-returned result to ``(data_id,
         version)``: pin it into the producing node's plane via ``alias``
-        so later tasks there reference it without a wire crossing."""
+        so later tasks there reference it without a wire crossing.  For a
+        :class:`~repro.core.futures.RemoteValue` the alias is load-bearing
+        — the node's token side-table holds the ONLY copy until it is
+        bound to the datum key."""
+        from ..core.futures import RemoteValue
         from ..cluster.protocol import ConnectionClosed
         views = getattr(self._tl, "views", None)
-        if not views or not isinstance(value, np.ndarray):
+        if not views or not isinstance(value, (np.ndarray, RemoteValue)):
             return
         entry = views.pop(id(value), None)
         if entry is None:
             return
         a, token, ch = entry
+        if isinstance(value, RemoteValue):
+            value.key = tuple(key)
         if ch.closed or self._channels[a] is not ch:
-            return   # agent died/respawned since: the token is meaningless
+            # agent died/respawned since.  A plain array is already safe
+            # in the store; a RemoteValue just entered the store pointing
+            # at a dead node AFTER the crash sweep.  Recovery cannot run
+            # HERE: publish() is called mid-completion, before mark_done,
+            # so graph.resurrect would refuse the still-RUNNING producer
+            # — park the key and let task_done() (which runs after the
+            # completion) invalidate + re-execute from lineage
+            if isinstance(value, RemoteValue) and not self._closing:
+                orphans = getattr(self._tl, "orphaned", None)
+                if orphans is None:
+                    orphans = self._tl.orphaned = []
+                orphans.append(tuple(key))
+            return
         try:
             with self._order_locks[a]:
                 if self._channels[a] is not ch:   # re-check under the lock
@@ -1559,7 +1684,10 @@ class ClusterExecutor(ExecutorBackend):
 
     def task_done(self):
         """Drop result tokens that were never published (discarded
-        outputs, lost speculation races) so agent side-tables don't grow."""
+        outputs, lost speculation races) so agent side-tables don't grow
+        — and recover keys orphaned by a publish that raced the
+        producer's death (the task is DONE by now, so lineage
+        re-execution can actually resurrect it)."""
         from ..cluster.protocol import ConnectionClosed
         views = getattr(self._tl, "views", None)
         if views:
@@ -1570,30 +1698,73 @@ class ClusterExecutor(ExecutorBackend):
                     except ConnectionClosed:
                         pass
         self._tl.views = None
+        orphans = getattr(self._tl, "orphaned", None)
+        self._tl.orphaned = None
+        if orphans and self.runtime is not None and not self._closing:
+            self.runtime.store.invalidate_keys(orphans)
+            self._drop_residency(orphans)
+            # relaunch every orphan key that is not (re-)published by now
+            # — NOT just the ones invalidate_keys caught: the restart
+            # sweep may have deleted the placeholder already, back when
+            # the producer was still RUNNING and resurrect had to refuse
+            # (it is DONE now, completions run before task_done).
+            # relaunch_lost is idempotent for producers the sweep did
+            # resurrect (resurrect no-ops unless DONE)
+            need = [k for k in orphans
+                    if not self.runtime.store.is_ready(k)]
+            self.runtime.relaunch_lost(need)
 
     # -- failure handling ----------------------------------------------------
+    def _drop_residency(self, keys) -> None:
+        """Strike lost datum keys from EVERY agent's residency ledger: a
+        retried consumer must get a fresh Put/Fetch for the recomputed
+        value, never a Ref into a plane that predates the loss."""
+        if not keys:
+            return
+        keyset = set(tuple(k) for k in keys)
+        for a in range(self.n_agents):
+            with self._order_locks[a]:
+                self._resident[a] -= keyset
+
     def _restart_agent(self, a: int, failed_ch) -> None:
         with self._restart_lock:
             if self._channels[a] is not failed_ch:
                 return   # another dispatcher already replaced it
+            old_addr = self._data_addrs[a]
             if failed_ch is not None:
                 failed_ch.close()
-            if not getattr(self.cluster, "can_respawn", False):
-                return
-            try:
-                new_ch = self.cluster.respawn(a)
-            except Exception:
-                return
+            new_ch = None
+            if getattr(self.cluster, "can_respawn", False) \
+                    and not self._closing:
+                try:
+                    new_ch = self.cluster.respawn(a)
+                except Exception:
+                    new_ch = None
             with self._order_locks[a]:
                 self._resident[a] = set()
                 self._shipped_fns[a] = set()
+                self._data_addrs[a] = None
+                if new_ch is not None:
+                    # data addr + on_close BEFORE the channel is exposed:
+                    # a dispatcher blocked on this order lock ships the
+                    # moment we release it, and its reply must not mint
+                    # RemoteValues with addr=None
+                    self._install_channel(a, new_ch)
                 self._channels[a] = new_ch
+            if self._peers is not None:
+                self._peers.drop(old_addr)   # the pooled conn died with it
             # the store's residency metadata must die with the agent too,
             # or locality keeps steering reads at data the replacement
-            # doesn't hold and the transfer ledger undercounts re-ships
+            # doesn't hold and the transfer ledger undercounts re-ships —
+            # and every node-resident result homed there is GONE: the
+            # runtime invalidates the placeholders and re-executes their
+            # producers from graph lineage (DESIGN.md §15)
             if self.runtime is not None:
                 self.runtime.store.forget_node(a)
-            self.agent_restarts += 1
+                lost = self.runtime.recover_lost_node(a)
+                self._drop_residency(lost)
+            if new_ch is not None:
+                self.agent_restarts += 1
 
     # -- metrics -------------------------------------------------------------
     def agent_stats(self) -> List[Optional[dict]]:
@@ -1618,9 +1789,20 @@ class ClusterExecutor(ExecutorBackend):
             "workers_per_node": self.wpn,
             "pipeline_depth": self.pipeline_depth,
             "agent_restarts": self.agent_restarts,
+            "p2p": self.p2p,
             "puts": self.puts,
             "refs": self.refs,
+            "fetches": self.fetches,
+            "fetch_bytes": self.fetch_bytes,
             "bytes_shipped": self.bytes_shipped,
+            "relay_result_bytes": self.relay_result_bytes,
+            "remote_results": self.remote_results,
+            "deferred_result_bytes": self.deferred_result_bytes,
+            # everything that crossed the scheduler's own link for task
+            # data: Put payloads out + result frames back.  The §15
+            # acceptance metric — peer traffic lives in fetch_bytes and
+            # the store's transfer_detail() instead
+            "relay_bytes": self.bytes_shipped + self.relay_result_bytes,
         }
 
 

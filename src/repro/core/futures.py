@@ -11,7 +11,8 @@ still see ``d3v1``).
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, Optional, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from .memory import (
     MemoryBudget,
@@ -57,6 +58,36 @@ class Future:
         return f"<Future d{self.data_id}v{self.version} by task#{self.producer_task}>"
 
 
+class RemoteValue:
+    """Placeholder for a datum whose bytes are resident on a cluster
+    node, not on the scheduler (DESIGN.md §15).
+
+    The producing agent kept the result in its node plane and the
+    ``done`` reply carried only this descriptor: result ``token``, home
+    ``node``, the node's data-plane ``addr`` (``host:port``) and the
+    datum's ndarray byte count.  ``key`` is bound when the runtime
+    publishes the output.  The scheduler only materializes the bytes on
+    ``wait_on``/gather (through the store's installed fetcher); tasks
+    consuming the datum on another node pull it peer-to-peer via a
+    ``Fetch`` directive instead.
+    """
+
+    __slots__ = ("key", "token", "node", "addr", "nbytes")
+
+    def __init__(self, token: int, node: int, addr: Optional[str],
+                 nbytes: int, key: Optional[Tuple[int, int]] = None):
+        self.key = key
+        self.token = token
+        self.node = node
+        self.addr = addr
+        self.nbytes = int(nbytes)
+
+    def __repr__(self) -> str:
+        k = f"d{self.key[0]}v{self.key[1]}" if self.key else "unbound"
+        return (f"<RemoteValue {k} {self.nbytes}B on node {self.node} "
+                f"({self.addr})>")
+
+
 class ObjectStore:
     """Thread-safe versioned value store.
 
@@ -78,6 +109,17 @@ class ObjectStore:
         self._node_bytes: Dict[int, int] = {}   # resident bytes per domain
         self._transfers = 0          # cross-domain reads observed
         self._transfer_bytes = 0
+        # source-attributed movement (DESIGN.md §15): bytes relayed
+        # through the scheduler's own link vs moved peer-to-peer between
+        # node data planes (booked against the actual source node)
+        self._relay_bytes = 0
+        self._p2p_bytes = 0
+        self._p2p_by_source: Dict[int, int] = {}
+        self._gathers = 0            # RemoteValues materialized scheduler-side
+        self._gather_bytes = 0
+        # installed by the cluster executor: fetcher(key, rv) -> value
+        self._fetcher: Optional[Callable[[Tuple[int, int], RemoteValue], Any]] = None
+        self._fetching: set = set()   # keys with a gather pull in flight
         self._next_data_id = 1
         self.governor: Optional[MemoryGovernor] = None
         self._spill_dir: Optional[str] = None
@@ -180,21 +222,112 @@ class ObjectStore:
         with self._lock:
             return key in self._values or key in self._errors
 
-    def get(self, key: Tuple[int, int], timeout: Optional[float] = None) -> Any:
-        with self._cond:
-            if not self._cond.wait_for(
-                lambda: key in self._values or key in self._errors, timeout=timeout
-            ):
-                raise TimeoutError(f"timed out waiting for d{key[0]}v{key[1]}")
-            if key in self._errors:
-                raise self._errors[key]
-            return self._maybe_fault(key, self._values[key])
+    def set_fetcher(self, fetcher: Optional[Callable]) -> None:
+        """Install the scheduler-side materializer for
+        :class:`RemoteValue` placeholders:
+        ``fetcher(key, rv, timeout) -> value`` pulls the bytes from the
+        producing node's data plane (``timeout`` of None = the fetcher's
+        own default)."""
+        self._fetcher = fetcher
 
-    def get_nowait(self, key: Tuple[int, int]) -> Any:
+    def _materialize(self, key: Tuple[int, int], rv: RemoteValue,
+                     timeout: Optional[float] = None) -> Any:
+        """Pull a node-resident datum to the scheduler (gather path).
+        Runs OUTSIDE the store lock — a peer fetch must never stall
+        completions publishing other keys.  Always clears the key's
+        single-flight mark and wakes waiters on the way out."""
+        try:
+            if self._fetcher is None:
+                raise RuntimeError(
+                    f"cannot materialize {rv!r}: no remote fetcher installed")
+            value = self._fetcher(key, rv, timeout)
+            with self._cond:
+                if self._values.get(key) is rv:
+                    self._values[key] = value
+                    self._gathers += 1
+                    self._gather_bytes += rv.nbytes
+                    if self.governor is not None \
+                            and spillable(value, self._spill_min):
+                        self.governor.admit(key, getattr(value, "nbytes", 0))
+            return value
+        finally:
+            with self._cond:
+                self._fetching.discard(key)
+                self._cond.notify_all()
+
+    def get(self, key: Tuple[int, int], timeout: Optional[float] = None,
+            materialize: bool = True) -> Any:
+        """Blocking read.  ``materialize=False`` returns node-resident
+        datums as their :class:`RemoteValue` placeholder (the cluster
+        dispatch path, which moves metadata only); the default pulls the
+        bytes to the scheduler.  A placeholder whose home node died is
+        invalidated by the recovery path — waiters simply keep waiting
+        until the resurrected producer re-publishes."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        attempts = 0
+        while True:
+            with self._cond:
+                remaining = None if deadline is None else \
+                    max(0.0, deadline - time.monotonic())
+                if not self._cond.wait_for(
+                    lambda: key in self._values or key in self._errors,
+                    timeout=remaining,
+                ):
+                    raise TimeoutError(
+                        f"timed out waiting for d{key[0]}v{key[1]}")
+                if key in self._errors:
+                    raise self._errors[key]
+                value = self._values[key]
+                if not (materialize and isinstance(value, RemoteValue)):
+                    return self._maybe_fault(key, value)
+                if key in self._fetching:
+                    # single-flight: another thread is already pulling
+                    # this datum — wait for its swap instead of paying a
+                    # duplicate network transfer (still honoring OUR
+                    # deadline: the in-flight fetch may be slower)
+                    if deadline is not None:
+                        left = deadline - time.monotonic()
+                        if left <= 0:
+                            raise TimeoutError(
+                                f"timed out waiting for d{key[0]}v{key[1]}")
+                        self._cond.wait(timeout=min(0.5, left))
+                    else:
+                        self._cond.wait(timeout=0.5)
+                    continue
+                self._fetching.add(key)
+                rv = value
+            remaining = None if deadline is None else \
+                max(0.1, deadline - time.monotonic())
+            try:
+                return self._materialize(key, rv, remaining)
+            except Exception:
+                # the home node may have died mid-fetch: if recovery
+                # already invalidated the placeholder, loop back into the
+                # wait for the re-executed producer; otherwise retry a
+                # couple of times before surfacing — but never past the
+                # caller's deadline
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise
+                with self._lock:
+                    still_same = self._values.get(key) is rv
+                if still_same:
+                    attempts += 1
+                    if attempts >= 3:
+                        raise
+                    time.sleep(0.05 * attempts)
+
+    def get_nowait(self, key: Tuple[int, int], materialize: bool = True) -> Any:
+        """Non-blocking read — except that a present-but-node-resident
+        datum with ``materialize=True`` inherently needs a network pull;
+        that pull routes through :meth:`get` so concurrent callers share
+        one single-flight transfer."""
         with self._lock:
             if key in self._errors:
                 raise self._errors[key]
-            return self._maybe_fault(key, self._values[key])
+            value = self._values[key]   # KeyError when absent: the contract
+            if not (materialize and isinstance(value, RemoteValue)):
+                return self._maybe_fault(key, value)
+        return self.get(key, materialize=True)
 
     # -- locality / transfer metadata ------------------------------------------
     # Every datum records which address-space *domains* hold a copy (node ids
@@ -205,12 +338,24 @@ class ObjectStore:
         with self._lock:
             held = self._locations.setdefault(key, set())
             if node not in held:
+                nb = self._nbytes.get(key, 0)
                 if held:  # a new domain pulled a copy: that's a transfer
                     self._transfers += 1
-                    self._transfer_bytes += self._nbytes.get(key, 0)
+                    self._transfer_bytes += nb
+                    # attribute the movement to its actual source: a
+                    # node-resident datum moves peer-to-peer from its home
+                    # node; anything else is relayed over the scheduler's
+                    # own link (DESIGN.md §15)
+                    v = self._values.get(key)
+                    if isinstance(v, RemoteValue) and v.node != node:
+                        self._p2p_bytes += nb
+                        self._p2p_by_source[v.node] = (
+                            self._p2p_by_source.get(v.node, 0) + nb)
+                    else:
+                        self._relay_bytes += nb
                 held.add(node)
                 self._node_bytes[node] = (
-                    self._node_bytes.get(node, 0) + self._nbytes.get(key, 0))
+                    self._node_bytes.get(node, 0) + nb)
                 self.residency_epoch += 1
 
     def forget_node(self, node: int) -> None:
@@ -245,13 +390,65 @@ class ObjectStore:
         with self._lock:
             return self._transfers, self._transfer_bytes
 
+    def transfer_detail(self) -> dict:
+        """Source-attributed movement ledger (DESIGN.md §15):
+        ``scheduler_relay_bytes`` crossed the scheduler's link,
+        ``p2p_bytes`` moved directly between node data planes (broken
+        down per source node), ``gather_bytes`` were materialized
+        scheduler-side for ``wait_on``/gather."""
+        with self._lock:
+            return {
+                "transfers": self._transfers,
+                "transfer_bytes": self._transfer_bytes,
+                "scheduler_relay_bytes": self._relay_bytes,
+                "p2p_bytes": self._p2p_bytes,
+                "p2p_by_source": dict(self._p2p_by_source),
+                "gathers": self._gathers,
+                "gather_bytes": self._gather_bytes,
+            }
+
+    # -- loss recovery (DESIGN.md §15) ----------------------------------------
+    def invalidate_lost(self, node: int) -> List[Tuple[int, int]]:
+        """A node died: every unmaterialized :class:`RemoteValue` homed
+        there is gone.  Drop those entries (readers block until the
+        resurrected producers re-publish) and wipe their residency
+        everywhere — consumers that already pulled a copy keep serving
+        their own tasks from their planes, but placement and the
+        transfer ledger must stop trusting stale locations.  Returns the
+        lost keys for lineage re-execution."""
+        with self._cond:
+            keys = [key for key, v in self._values.items()
+                    if isinstance(v, RemoteValue) and v.node == node]
+            return self._invalidate_keys_locked(keys)
+
+    def invalidate_keys(self, keys) -> List[Tuple[int, int]]:
+        """Targeted form of :meth:`invalidate_lost` for placeholders that
+        slipped into the store after their home node's sweep (a ``done``
+        reply racing the crash)."""
+        with self._cond:
+            return self._invalidate_keys_locked(keys)
+
+    def _invalidate_keys_locked(self, keys) -> List[Tuple[int, int]]:
+        lost: List[Tuple[int, int]] = []
+        for key in keys:
+            if isinstance(self._values.get(key), RemoteValue):
+                del self._values[key]
+                lost.append(key)
+                nb = self._nbytes.get(key, 0)
+                for holder in self._locations.pop(key, ()):
+                    self._node_bytes[holder] = max(
+                        0, self._node_bytes.get(holder, 0) - nb)
+        if lost:
+            self.residency_epoch += 1
+        return lost
+
     def memory_stats(self) -> dict:
         """The spill/fault side of the ledger (zeros when ungoverned)."""
         if self.governor is not None:
             return self.governor.stats()
-        return {"budget_bytes": None, "bytes_used": 0, "spills": 0,
-                "faults": 0, "spill_bytes": 0, "fault_bytes": 0,
-                "governed_entries": 0}
+        return {"budget_bytes": None, "bytes_used": 0, "peak_bytes": 0,
+                "spills": 0, "faults": 0, "spill_bytes": 0,
+                "fault_bytes": 0, "governed_entries": 0}
 
     def dispose_spills(self) -> None:
         """Unlink every still-spilled entry's file (runtime shutdown).

@@ -116,6 +116,7 @@ class MemoryBudget:
         self.low_frac = low_frac
         self._lock = threading.Lock()
         self.used = 0
+        self.peak_used = 0   # high-water mark (peer fetches land here too)
         self.spills = 0
         self.faults = 0
         self.spill_bytes = 0
@@ -136,6 +137,8 @@ class MemoryBudget:
     def charge(self, nbytes: int) -> None:
         with self._lock:
             self.used += int(nbytes)
+            if self.used > self.peak_used:
+                self.peak_used = self.used
 
     def discharge(self, nbytes: int) -> None:
         with self._lock:
@@ -165,6 +168,7 @@ class MemoryBudget:
             return {
                 "budget_bytes": self.capacity,
                 "bytes_used": self.used,
+                "peak_bytes": self.peak_used,
                 "spills": self.spills,
                 "faults": self.faults,
                 "spill_bytes": self.spill_bytes,

@@ -45,6 +45,13 @@ from .tracing import TraceEvent, Tracer
 # 1 reproduces the stop-and-wait dispatch of earlier revisions
 DEFAULT_PIPELINE_DEPTH = 4
 
+# extra attempts granted when a task fails because its INPUT vanished
+# with a dead node (error carries lost_input=True, DESIGN.md §15) — the
+# task's own body never misbehaved, so this allowance is independent of
+# the user-facing max_retries budget, and bounded so a permanently
+# unreachable datum still fails instead of looping
+LOST_INPUT_RETRIES = int(os.environ.get("RJAX_LOST_INPUT_RETRIES", 3))
+
 
 def pipeline_depth_from_env(explicit: Optional[int] = None) -> int:
     if explicit is not None:
@@ -184,6 +191,12 @@ class Runtime:
         self._inflight_cond = threading.Condition(self._inflight_lock)
         self._logical_done: Dict[int, bool] = {}   # speculation once-flags
         self._logical_lock = threading.Lock()
+        # datum keys whose producer is being re-executed after node loss
+        # (DESIGN.md §15): a consumer's resolve timeout on one of these
+        # is an input loss, not the consumer's own fault — it inherits
+        # the lost-input retry allowance.  Cleared on (re-)publication
+        self._recovering: set = set()
+        self._recover_lock = threading.Lock()
         self._idle_workers = self.n_workers
         self._stopped = False
 
@@ -340,14 +353,30 @@ class Runtime:
     def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict, Dict[int, Tuple[int, int]]]:
         nbytes_in = 0
         input_keys: Dict[int, Tuple[int, int]] = {}
+        # a backend that understands RemoteValue placeholders (the cluster
+        # executor) gets them verbatim — the bytes move node↔node, never
+        # through this process (DESIGN.md §15)
+        materialize = not getattr(self.executor, "remote_values_ok", False)
 
         def _fetch(f: Future):
             nonlocal nbytes_in
             try:
-                v = self.store.get_nowait(f.key)
+                v = self.store.get_nowait(f.key, materialize=materialize)
             except KeyError:
-                # value arrived concurrently; block briefly
-                v = self.store.get(f.key, timeout=30.0)
+                # value arrived concurrently (or is being re-executed
+                # after its home node died); block briefly
+                try:
+                    v = self.store.get(f.key, timeout=30.0,
+                                       materialize=materialize)
+                except TimeoutError as terr:
+                    with self._recover_lock:
+                        recovering = f.key in self._recovering
+                    if recovering:
+                        # lineage re-execution is slower than the resolve
+                        # window: this is an input loss, not this task's
+                        # failure — grant the lost-input retry allowance
+                        terr.lost_input = True
+                    raise
             except BaseException as err:
                 raise PoisonedInputError(f.producer_task, err) from err
             nbytes_in += _nbytes(v)
@@ -397,7 +426,10 @@ class Runtime:
 
     def _handle_task_error(self, t: TaskNode, err: BaseException,
                            worker: int, node_id: int, t0: float) -> None:
-        if self.retry.should_retry(t.attempts, t.max_retries, err):
+        allowed = t.max_retries
+        if getattr(err, "lost_input", False):
+            allowed += LOST_INPUT_RETRIES
+        if self.retry.should_retry(t.attempts, allowed, err):
             if self.retry.backoff_seconds:
                 # completions run on shared threads (the pool collector, a
                 # channel reader) — a blocking sleep there would stall
@@ -453,6 +485,9 @@ class Runtime:
 
     def _put_output(self, key: Tuple[int, int], value: Any, node_id: int) -> None:
         self.store.put(key, value, node=node_id)
+        if self._recovering:   # bare read: cheap miss on the hot path
+            with self._recover_lock:
+                self._recovering.discard(key)
         self.executor.publish(key, value)
 
     def _finish_success(self, t: TaskNode, result: Any, node_id: int) -> None:
@@ -502,6 +537,9 @@ class Runtime:
         wrapped = TaskFailedError(primary.name, primary.task_id, err)
         for key in primary.out_keys:
             self.store.put_error(key, wrapped)
+            if self._recovering:
+                with self._recover_lock:
+                    self._recovering.discard(key)
         ready = self.graph.mark_failed(primary.task_id, err)
         self.scheduler.push_many(ready)
 
@@ -526,6 +564,63 @@ class Runtime:
             self._inflight -= 1
             if self._inflight <= 0:
                 self._inflight_cond.notify_all()
+
+    # ------------------------------------------- lineage recovery (§15)
+    def recover_lost_node(self, node_id: int) -> List[Tuple[int, int]]:
+        """A node died holding the only copy of node-resident results:
+        invalidate their placeholders (readers block instead of fetching
+        from a corpse) and re-execute the producers from graph lineage.
+        Returns the lost keys so the executor can strike them from every
+        agent's residency ledger.  Called by the cluster executor's
+        restart path, right after ``store.forget_node``."""
+        lost = self.store.invalidate_lost(node_id)
+        self.relaunch_lost(lost, node_id)
+        return lost
+
+    def relaunch_lost(self, keys: List[Tuple[int, int]],
+                      node_id: Optional[int] = None) -> None:
+        """Resurrect the producer of each lost datum.  Transitive losses
+        on the same node converge naturally: a resurrected producer whose
+        own input was also lost blocks in ``_resolve_inputs`` until that
+        input's producer (resurrected in the same sweep) re-publishes.
+        A producer pruned from the graph (``RJAX_GRAPH_RETAIN``) is
+        unrecoverable — its consumers fail fast with a retryable error
+        instead of hanging."""
+        if not keys:
+            return
+        from .executors import WorkerCrashedError
+        with self._recover_lock:
+            self._recovering.update(tuple(k) for k in keys)
+        producers: Dict[int, None] = {}
+        for key in keys:
+            tid = self.graph.producer_of(key)
+            if tid is None:
+                self.store.put_error(key, WorkerCrashedError(
+                    f"datum d{key[0]}v{key[1]} was lost with node "
+                    f"{node_id} and its producer is no longer in the "
+                    f"graph (pruned by retention)"))
+                with self._recover_lock:
+                    self._recovering.discard(tuple(key))
+            else:
+                producers[tid] = None
+        for tid in producers:
+            self._resurrect(tid)
+
+    def _resurrect(self, tid: int) -> None:
+        """Re-run a completed task: flip it back to READY, clear its
+        completion once-flag, and requeue.  No-op unless the task is DONE
+        — a concurrent sweep may already have resurrected it.  The flag
+        clears AFTER the state flip (the task cannot be dispatched until
+        the push below, so nothing races the fresh flag) and only for
+        genuinely resurrected tasks — clearing it for a FAILED task could
+        let a late speculative clone double-publish."""
+        if not self.graph.resurrect(tid):
+            return
+        with self._logical_lock:
+            self._logical_done.pop(tid, None)
+        with self._inflight_cond:
+            self._inflight += 1
+        self.scheduler.push(tid)
 
     # ------------------------------------------------------------ speculation
     def _speculation_loop(self) -> None:
@@ -602,6 +697,14 @@ class Runtime:
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:
         c = self.graph.counters()   # O(1): incrementally maintained
+        ex_stats = self.executor.stats()
+        data_plane = self.store.transfer_detail()
+        # wire-level truth wins where the executor measures its own link
+        # (the cluster backend counts actual Put payloads out + result
+        # frames back); other backends fall back to the store's
+        # cross-domain ledger
+        relay = ex_stats.get("relay_bytes",
+                             data_plane["scheduler_relay_bytes"])
         return {
             "tasks_submitted": c["submitted"],
             "tasks_done": c["done"],
@@ -613,6 +716,9 @@ class Runtime:
             "critical_path_s": self.graph.critical_path_seconds(),
             "wallclock_s": self.tracer.wallclock(),
             "utilization": self.tracer.utilization(self.n_workers),
-            "executor": self.executor.stats(),
+            "scheduler_relay_bytes": relay,
+            "p2p_bytes": data_plane["p2p_bytes"],
+            "data_plane": data_plane,
+            "executor": ex_stats,
             "memory": self.store.memory_stats(),
         }

@@ -13,6 +13,14 @@ differ only in *which* ready task a worker receives:
                   node under ``thread``, per worker process under
                   ``process``, per TCP node agent under ``cluster`` —
                   where a miss costs a real wire transfer (DESIGN.md §12).
+                  Under the peer data plane (DESIGN.md §15) the store's
+                  location sets reflect TRUE node residency of unfetched
+                  results (``RemoteValue`` placeholders carry their home
+                  node and every peer pull adds the puller's domain), so
+                  the same score now steers consumers at the node that
+                  physically holds the bytes — a hit costs zero wire
+                  crossings, a miss one peer hop instead of a scheduler
+                  relay.
                   With a per-node memory budget configured (DESIGN.md §13)
                   the policy is additionally *memory-aware*: the placement
                   score subtracts the projected input+output bytes that

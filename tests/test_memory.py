@@ -319,9 +319,16 @@ def test_out_of_core_kmeans_matches_unbounded(tmp_path, backend):
         assert ex["plane_spills"] > 0 and ex["plane_faults"] > 0
 
 
-def test_out_of_core_kmeans_cluster_backend(tmp_path):
+def test_out_of_core_kmeans_cluster_backend(tmp_path, monkeypatch):
     """Same bar on the real TCP cluster: scheduler store AND node-agent
-    planes spill/fault, results bitwise-equal to the unbounded run."""
+    planes spill/fault, results bitwise-equal to the unbounded run.
+
+    Runs with the peer data plane OFF (RJAX_P2P=0): this test covers the
+    scheduler store's governance, and under §15 intermediate results
+    never enter the scheduler store at all (the governed-p2p variant
+    lives in test_p2p.py::test_out_of_core_under_p2p)."""
+    monkeypatch.setenv("RJAX_P2P", "0")
+    monkeypatch.setenv("RJAX_INLINE_MAX", "0")
     rt = api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
                            policy="locality", tracing=False)
     try:

@@ -290,3 +290,86 @@ def test_coalesced_stream_preserves_put_before_ref_fifo():
                                 store=plane.__setitem__)
         np.testing.assert_array_equal(got, arr)
     assert list(plane) == [key]
+
+
+# ---------------------------------------------------- §15 peer data plane
+def test_pack_payload_remote_value_becomes_fetch_then_ref():
+    """A RemoteValue input turns into a Fetch directive on first ship to
+    a node and a Ref ever after — the scheduler moves metadata only."""
+    from repro.cluster.protocol import Fetch
+    from repro.core.futures import RemoteValue
+
+    rv = RemoteValue(token=9, node=0, addr="127.0.0.1:4242", nbytes=8192,
+                     key=(3, 1))
+    resident = set()
+    st, frames, info = pack_payload((rv,), {id(rv): (3, 1)}, resident)
+    assert frames == []                       # no bytes on the scheduler link
+    assert isinstance(st[0], Fetch)
+    assert st[0].key == (3, 1) and st[0].token == 9
+    assert st[0].addr == "127.0.0.1:4242" and st[0].nbytes == 8192
+    assert info["fetch_keys"] == [(3, 1)] and info["fetch_bytes"] == 8192
+    resident.update(info["fetch_keys"])       # marked at send time
+    st2, _, info2 = pack_payload((rv,), {id(rv): (3, 1)}, resident)
+    assert isinstance(st2[0], Ref) and info2["refs"] == 1
+
+
+def test_fetch_marker_pickles_through_the_wire():
+    from repro.cluster.protocol import Fetch
+
+    s = CountingSocket()
+    f = Fetch((5, 2), 77, 1, "10.0.0.1:9999", 1 << 20)
+    send_msg(s, {"structure": [f]})
+    meta, _ = recv_msg(s)
+    g = meta["structure"][0]
+    assert (g.key, g.token, g.node, g.addr, g.nbytes) == \
+        ((5, 2), 77, 1, "10.0.0.1:9999", 1 << 20)
+
+
+def test_remote_ref_pickles_and_carries_descriptor_only():
+    from repro.cluster.protocol import RemoteRef
+
+    s = CountingSocket()
+    send_msg(s, {"structure": RemoteRef(12, 65536), "tokens": []})
+    meta, frames = recv_msg(s)
+    assert frames == []
+    rr = meta["structure"]
+    assert rr.token == 12 and rr.nbytes == 65536
+
+
+def test_pack_payload_keys_tuple_datums():
+    """Datum-level keying (§15): a tuple-valued datum is ONE Put whose
+    inner arrays ride frames, and a Ref on re-ship."""
+    big = np.arange(2048, dtype=np.float64)
+    datum = (big, np.ones(4), "label")
+    key = (11, 1)
+    resident = set()
+    st, frames, info = pack_payload((datum,), {id(datum): key}, resident)
+    assert isinstance(st[0], Put) and st[0].key == key
+    assert len(frames) == 1                   # only the big array framed
+    assert info["put_keys"] == [key]
+    assert info["put_bytes"] == big.nbytes + 32
+    plane = {}
+    (out,) = unpack_payload(st, frames, lookup=lambda k: plane[k],
+                            store=plane.__setitem__)
+    np.testing.assert_array_equal(out[0], big)
+    np.testing.assert_array_equal(out[1], np.ones(4))
+    assert out[2] == "label"
+    st2, f2, info2 = pack_payload((datum,), {id(datum): key}, {key})
+    assert isinstance(st2[0], Ref) and not f2 and info2["refs"] == 1
+
+
+def test_frame_eligible_min_bytes_threshold():
+    from repro.cluster.protocol import frame_eligible
+
+    small = np.ones(4)
+    assert frame_eligible(small)
+    assert not frame_eligible(small, min_bytes=1024)
+    assert frame_eligible(np.ones(1024), min_bytes=1024)
+
+
+def test_datum_frame_bytes_sums_eligible_arrays():
+    from repro.cluster.protocol import datum_frame_bytes
+
+    datum = {"x": np.ones(8), "y": (np.zeros(4), "txt", 3)}
+    assert datum_frame_bytes(datum) == 8 * 8 + 4 * 8
+    assert datum_frame_bytes("scalar") == 0
