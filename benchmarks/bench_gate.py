@@ -21,6 +21,14 @@ if the PR regresses against the committed ``benchmarks/BENCH_baseline.json``:
   placement wiggles a fragment or two); a real regression — results
   relaying through the scheduler again instead of staying node-resident
   — is an order of magnitude, not a fragment.
+* **linreg simulated efficiency** (DESIGN.md §16) — the collective
+  k-ary merge tree is what lifted linreg's eff@128; falling below
+  baseline × 0.9 means the reduction degenerated back toward the
+  pairwise chain (the 0.9 floor absorbs per-run calibration noise in
+  the task cost models, which is a few percent).
+* **broadcast byte split** (DESIGN.md §16) — a broadcast's value may
+  cross the scheduler's own link at most ~once (× 1.25 envelope slack);
+  every remaining agent must receive it peer-to-peer.
 
 Efficiency numbers are recorded in the artifact for trend tracking but
 not gated (CI runner variance swamps them).
@@ -40,6 +48,8 @@ REL_TOLERANCE = 1.25     # >25% regression fails...
 ABS_SLACK_US = 150.0     # ...but only past the cross-hardware noise floor
 RELAY_TOLERANCE = 1.5            # scheduler-link bytes: placement wiggle...
 RELAY_SLACK_BYTES = 128 * 1024   # ...a real regression is 10x, not 1.5x
+EFF_TOLERANCE = 0.9              # linreg sim eff: calibration noise floor
+BCAST_TOLERANCE = 1.25           # scheduler-link copies per broadcast
 
 
 def deep_merge(dst: dict, src: dict) -> dict:
@@ -99,6 +109,42 @@ def check(pr: dict, baseline: dict) -> list:
                     f"data_plane.scheduler_relay_bytes: {got} > "
                     f"{int(limit)} (baseline {base_relay} × "
                     f"{RELAY_TOLERANCE} + {RELAY_SLACK_BYTES})")
+    for mode in ("weak_eff@128", "strong_eff@128"):
+        base_eff = baseline.get("single_node", {}).get(mode, {}).get("linreg")
+        if base_eff is None:
+            continue
+        got = pr.get("single_node", {}).get(mode, {}).get("linreg")
+        if got is None:
+            failures.append(f"single_node.{mode}.linreg: missing from PR run")
+            continue
+        floor = base_eff * EFF_TOLERANCE
+        status = "FAIL" if got < floor else "ok"
+        print(f"  [{status}] linreg {mode}: {got:.3f} "
+              f"(baseline {base_eff:.3f}, floor {floor:.3f})")
+        if got < floor:
+            failures.append(
+                f"single_node.{mode}.linreg: {got:.3f} < {floor:.3f} "
+                f"(baseline {base_eff:.3f} × {EFF_TOLERANCE})")
+    bcast = pr.get("multi_node", {}).get("collectives", {}).get("broadcast")
+    if bcast is None:
+        if baseline.get("multi_node", {}).get("collectives"):
+            failures.append("collectives.broadcast: missing from PR run")
+    else:
+        nb, agents = bcast["nbytes"], bcast["agents"]
+        link, p2p = bcast["scheduler_link_bytes"], bcast["p2p_bytes"]
+        link_ok = link <= nb * BCAST_TOLERANCE
+        p2p_ok = p2p >= (agents - 2) * nb
+        status = "ok" if link_ok and p2p_ok else "FAIL"
+        print(f"  [{status}] broadcast ({agents} agents, {nb} B): "
+              f"{link} B over the scheduler link, {p2p} B peer-to-peer")
+        if not link_ok:
+            failures.append(
+                f"collectives.broadcast: {link} scheduler-link bytes > "
+                f"{int(nb * BCAST_TOLERANCE)} (one copy × {BCAST_TOLERANCE})")
+        if not p2p_ok:
+            failures.append(
+                f"collectives.broadcast: {p2p} p2p bytes < "
+                f"{(agents - 2) * nb} — agents not fed peer-to-peer")
     for where, ooc in iter_out_of_core(pr):
         spills = ooc.get("spills", 0) + ooc.get("node_spills", 0) \
             + ooc.get("plane_spills", 0)

@@ -131,6 +131,10 @@ def run() -> List[Tuple[str, float, str]]:
     return rows
 
 
+def _bsum(a):
+    return float(a.sum())
+
+
 # --------------------------------------------------------------- live mode
 def _localhost_machine(n_agents: int, wpn: int) -> MachineModel:
     """A machine model matching the LocalCluster path: loopback TCP
@@ -192,6 +196,7 @@ def run_live(agent_counts=(1, 2), wpn: int = 2,
     if json_path:
         ooc = run_live_out_of_core(wpn=wpn)
         dp = run_data_plane(wpn=wpn)
+        coll = run_collectives(wpn=wpn)
         top = max(agent_counts)
         base = min(agent_counts)
         payload = {"multi_node": {
@@ -203,11 +208,65 @@ def run_live(agent_counts=(1, 2), wpn: int = 2,
             "agents": top,
             "out_of_core": ooc,
             "data_plane": dp,
+            "collectives": coll,
         }}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
     return rows
+
+
+def run_collectives(wpn: int = 1) -> dict:
+    """Collectives ledger (DESIGN.md §16) on a live 3-agent cluster:
+    merge-tree shape of the linreg reduction (k-ary collective vs the
+    old pairwise chain) and the broadcast byte split — the value must
+    cross the scheduler's own link at most ONCE, every other agent
+    receives it peer-to-peer.  Gated by bench_gate.py."""
+    import numpy as np
+
+    from repro.core import api, collectives
+    from repro.core.collectives import reduce_spec, spec_depth
+
+    leaves = WPN * 2   # the 128-fragment reduction the paper's linreg runs
+    out = {
+        "merge_tree": {
+            "leaves": leaves,
+            "arity": linreg.MERGE_ARITY,
+            "depth": spec_depth(reduce_spec(leaves, linreg.MERGE_ARITY),
+                                leaves),
+            "tasks": len(reduce_spec(leaves, linreg.MERGE_ARITY)),
+            "depth_binary": spec_depth(reduce_spec(leaves, 2), leaves),
+            "tasks_binary": len(reduce_spec(leaves, 2)),
+        },
+    }
+    n_agents = 3
+    rt = api.runtime_start(backend="cluster", n_agents=n_agents,
+                           workers_per_node=wpn, tracing=False)
+    try:
+        v = np.arange(65_536, dtype=np.float64)      # 512 KiB
+        shipped0 = rt.executor.bytes_shipped
+        detail0 = rt.store.transfer_detail()
+        fut = collectives.broadcast(v)
+        api.wait_on([api.task(_bsum, name="bsum")(fut)
+                     for _ in range(n_agents * 3)])
+        detail = rt.store.transfer_detail()
+        out["broadcast"] = {
+            "agents": n_agents,
+            "nbytes": int(v.nbytes),
+            "scheduler_link_bytes":
+                int(rt.executor.bytes_shipped - shipped0),
+            "p2p_bytes": int(detail["p2p_bytes"] - detail0["p2p_bytes"]),
+            "broadcasts": rt.executor.broadcasts,
+        }
+    finally:
+        api.runtime_stop(wait=False)
+    mt, bc = out["merge_tree"], out["broadcast"]
+    print(f"collectives [{n_agents} agents]: {mt['leaves']}-leaf merge tree "
+          f"arity {mt['arity']}: {mt['tasks']} tasks / depth {mt['depth']} "
+          f"(binary: {mt['tasks_binary']}/{mt['depth_binary']}); "
+          f"broadcast {bc['nbytes']} B: {bc['scheduler_link_bytes']} B over "
+          f"the scheduler link, {bc['p2p_bytes']} B agent→agent")
+    return out
 
 
 def run_data_plane(wpn: int = 1) -> dict:

@@ -12,26 +12,35 @@ from ..core.simulator import CostModel
 def tree_reduce(items: Sequence, merge_task: Callable, arity: int = 2):
     """Hierarchical reduction through ``merge_task`` calls — the paper's
     ``*_merge`` task trees (Figs. 3-5).  Works on Futures (submits merge
-    tasks) or on plain values (if ``merge_task`` is a plain function)."""
+    tasks) or on plain values (if ``merge_task`` is a plain function).
+
+    The reduction executes exactly the schedule :func:`tree_reduce_spec`
+    emits, so the live DAG and the simulator's shape are isomorphic by
+    construction: every arity group merges as a balanced sub-tree and the
+    whole reduction has depth ⌈log_arity(n)⌉ groups deep."""
     items = list(items)
     if not items:
         raise ValueError("tree_reduce of empty sequence")
-    while len(items) > 1:
-        nxt = []
-        for i in range(0, len(items), arity):
-            group = items[i : i + arity]
-            acc = group[0]
-            for other in group[1:]:
-                acc = merge_task(acc, other)
-            nxt.append(acc)
-        items = nxt
-    return items[0]
+    if arity < 2:
+        raise ValueError(f"tree_reduce arity must be >= 2, got {arity}")
+    vals = list(items)
+    for _, (a, b) in tree_reduce_spec(len(items), arity):
+        vals.append(merge_task(vals[a], vals[b]))
+    return vals[-1]
 
 
 def tree_reduce_spec(n_leaves: int, arity: int = 2) -> List[Tuple[int, Tuple[int, ...]]]:
     """Shape-only version for DAG generation: returns merge nodes as
     (merge_index, (child_a, child_b)) where children < n_leaves are leaves and
-    children >= n_leaves refer to merge node ``child - n_leaves``."""
+    children >= n_leaves refer to merge node ``child - n_leaves``.
+
+    Merges are emitted in dependency order: a merge only references leaves
+    or merges that appear earlier in the list.  Each arity group reduces by
+    repeated pairwise halving (a balanced binary sub-tree), never by a
+    serial left fold, so the critical path through a group of g leaves is
+    ⌈log2(g)⌉ merges rather than g-1."""
+    if arity < 2:
+        raise ValueError(f"tree_reduce arity must be >= 2, got {arity}")
     ids = list(range(n_leaves))
     merges: List[Tuple[int, Tuple[int, ...]]] = []
     next_id = n_leaves
@@ -39,12 +48,16 @@ def tree_reduce_spec(n_leaves: int, arity: int = 2) -> List[Tuple[int, Tuple[int
         nxt = []
         for i in range(0, len(ids), arity):
             group = ids[i : i + arity]
-            acc = group[0]
-            for other in group[1:]:
-                merges.append((next_id - n_leaves, (acc, other)))
-                acc = next_id
-                next_id += 1
-            nxt.append(acc)
+            while len(group) > 1:
+                paired = []
+                for j in range(0, len(group) - 1, 2):
+                    merges.append((next_id - n_leaves, (group[j], group[j + 1])))
+                    paired.append(next_id)
+                    next_id += 1
+                if len(group) % 2:
+                    paired.append(group[-1])
+                group = paired
+            nxt.append(group[0])
         ids = nxt
     return merges
 

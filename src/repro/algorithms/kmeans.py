@@ -13,9 +13,9 @@ from typing import List
 
 import numpy as np
 
-from ..core import api
+from ..core import api, collectives
 from ..core.simulator import CostModel, SimTask
-from .common import calibrate_cost, tree_reduce, tree_reduce_spec
+from .common import calibrate_cost, tree_reduce_spec
 
 # --------------------------------------------------------------------- tasks
 def fill_fragment(seed: int, n: int, d: int, n_centers: int = 8, spread: float = 5.0):
@@ -94,7 +94,7 @@ def run_kmeans(
     it = 0
     for it in range(1, max_iters + 1):
         partials = api.map_tasks(psum_t, [(f, centroids) for f in frags])
-        acc = tree_reduce(partials, merge_t, arity=merge_arity)
+        acc = collectives.tree_reduce(partials, merge_t, arity=merge_arity)
         res = upd_t(acc, centroids)
         centroids, shift, sse = api.wait_on(res)  # per-iteration sync (Fig. 4)
         shifts.append(shift)

@@ -13,9 +13,9 @@ from typing import List
 
 import numpy as np
 
-from ..core import api
+from ..core import api, collectives
 from ..core.simulator import CostModel, SimTask
-from .common import calibrate_cost, make_blobs, tree_reduce, tree_reduce_spec
+from .common import calibrate_cost, make_blobs, tree_reduce_spec
 
 # --------------------------------------------------------------------- tasks
 def knn_fill_fragment(seed: int, n: int, d: int, n_classes: int):
@@ -111,9 +111,10 @@ def run_knn(
     for b in range(test_blocks):
         test_b = gen_test_t(10_000 + seed + b, blk_n[b], d, n_classes)
         locals_ = api.map_tasks(frag_t, [(f, test_b, k) for f in frags])
-        merged = tree_reduce(locals_, merge_t, arity=merge_arity)
+        merged = collectives.tree_reduce(locals_, merge_t, arity=merge_arity)
         preds.append(classify_t(merged, n_classes))
-        n_tasks += 1 + train_fragments + (train_fragments - 1) + 1
+        n_merges = len(collectives.reduce_spec(train_fragments, arity=merge_arity))
+        n_tasks += 1 + train_fragments + n_merges + 1
     out = api.wait_on(preds)
     return KNNResult(np.concatenate(out), n_tasks)
 

@@ -16,9 +16,15 @@ from typing import List
 
 import numpy as np
 
-from ..core import api
+from ..core import api, collectives
 from ..core.simulator import CostModel, SimTask
-from .common import calibrate_cost, tree_reduce, tree_reduce_spec
+from .common import calibrate_cost
+
+# default k-ary width of the collective merge trees (DESIGN.md §16): one
+# k-ary tree node is ONE task folding k partials, so the reduction costs
+# (n-1)/(k-1) dispatches over ceil(log_k n) levels instead of n-1 over
+# ceil(log2 n) — the dispatch overhead is what erodes linreg's scaling
+MERGE_ARITY = 8
 
 # --------------------------------------------------------------------- tasks
 def lr_fill_fragment(seed: int, n: int, p: int, beta_seed: int = 1234,
@@ -84,7 +90,7 @@ def run_linreg(
     fragments: int = 4,
     pred_blocks: int = 2,
     ridge: float = 0.0,
-    merge_arity: int = 2,
+    merge_arity: int = MERGE_ARITY,
     seed: int = 0,
 ) -> LinRegResult:
     """Sequential-style RCOMPSs program (requires a started runtime)."""
@@ -104,8 +110,10 @@ def run_linreg(
 
     ztzs = api.map_tasks(ztz_t, [(f,) for f in frags])
     ztys = api.map_tasks(zty_t, [(f,) for f in frags])
-    ztz = tree_reduce(ztzs, merge_t, arity=merge_arity)
-    zty = tree_reduce(ztys, merge_t, arity=merge_arity)
+    # runtime collective: balanced k-ary merge trees with locality-pinned
+    # placement (DESIGN.md §16) instead of client-side pairwise folds
+    ztz = collectives.tree_reduce(ztzs, merge_t, arity=merge_arity)
+    zty = collectives.tree_reduce(ztys, merge_t, arity=merge_arity)
     beta = fit_t(ztz, zty, ridge)
 
     blk_m = [n_pred // pred_blocks] * pred_blocks
@@ -115,7 +123,8 @@ def run_linreg(
     preds = api.map_tasks(pred_t, [(Xp, beta) for Xp in Xps])
     beta_v = api.wait_on(beta)
     preds_v = api.wait_on(preds)
-    n_tasks = fragments * 3 + 2 * (fragments - 1) + 1 + 2 * pred_blocks
+    n_merges = len(collectives.reduce_spec(fragments, arity=merge_arity))
+    n_tasks = fragments * 3 + 2 * n_merges + 1 + 2 * pred_blocks
     return LinRegResult(beta_v, np.concatenate(preds_v), n_tasks)
 
 
@@ -197,7 +206,7 @@ def dag_spec(
     n_pred: int,
     fragments: int,
     pred_blocks: int,
-    merge_arity: int = 2,
+    merge_arity: int = MERGE_ARITY,
 ) -> List[SimTask]:
     tasks: List[SimTask] = []
     tid = 0
@@ -219,13 +228,17 @@ def dag_spec(
             tasks.append(SimTask(tid, leaf_name, leaf_cost, (pid,), out_bytes=leaf_bytes))
             leaf_ids.append(tid)
             tid += 1
-        merges = tree_reduce_spec(len(leaf_ids), arity=merge_arity)
+        # same k-ary collective shape the live runtime builds (§16): one
+        # SimTask per tree node folding k children, cost (k-1) pair-merges
+        merges = collectives.reduce_spec(len(leaf_ids), arity=merge_arity)
         merge_ids: List[int] = []
-        for _, (a, b) in merges:
-            da = leaf_ids[a] if a < len(leaf_ids) else merge_ids[a - len(leaf_ids)]
-            db = leaf_ids[b] if b < len(leaf_ids) else merge_ids[b - len(leaf_ids)]
-            tasks.append(SimTask(tid, "merge", costs.merge(1), (da, db),
-                                 out_bytes=leaf_bytes))
+        for _, children in merges:
+            deps = tuple(
+                leaf_ids[c] if c < len(leaf_ids) else merge_ids[c - len(leaf_ids)]
+                for c in children)
+            name = "merge" if len(deps) == 2 else f"mergex{len(deps)}"
+            tasks.append(SimTask(tid, name, costs.merge(1) * (len(deps) - 1),
+                                 deps, out_bytes=leaf_bytes))
             merge_ids.append(tid)
             tid += 1
         return merge_ids[-1] if merge_ids else leaf_ids[-1]

@@ -429,6 +429,8 @@ class NodeAgent:
                 self._slot_queues[meta["slot"]].put((meta, frames))
             elif op == "alias":
                 self.plane.alias(meta["token"], tuple(meta["key"]))
+            elif op == "bcast":
+                self._handle_bcast(meta, frames)
             elif op == "drop":
                 self.plane.drop(meta["token"])
             elif op == "stats":
@@ -456,6 +458,77 @@ class NodeAgent:
     def _reply(self, meta: dict, frames=()) -> None:
         with self._send_lock:
             send_msg(self.sock, meta, frames)
+
+    # ------------------------------------------------------------- broadcast
+    def _handle_bcast(self, meta: dict, frames) -> None:
+        """One leg of a collective broadcast (DESIGN.md §16).  The *root*
+        form (``root=True``) carries the datum's encoded structure +
+        frames over the scheduler link: store into the plane and ack.
+        The *peer* form carries a parent agent's data-plane address
+        instead: pull the bytes agent→agent through the peer pool and
+        ack once they land — the ack is what promotes this node to a
+        source for the next frontier wave.  Acks are asynchronous; the
+        reader thread never blocks on a pull."""
+        key = tuple(meta["key"])
+        mid = meta["mid"]
+
+        def ack():
+            try:
+                self._reply({"op": "bcast_ok", "mid": mid,
+                             "node": self.node_id})
+            except ConnectionClosed:
+                pass
+
+        def nak(err):
+            try:
+                enc = pickle.dumps(err, protocol=5)
+            except Exception:
+                enc = None
+            try:
+                self._reply({"op": "err", "mid": mid, "exc": enc,
+                             "tb": f"{type(err).__name__}|{err}"})
+            except ConnectionClosed:
+                pass
+
+        if meta.get("root"):
+            if not self.plane.contains(key):
+                self.plane.store(key, unpack_payload(meta["structure"],
+                                                     frames))
+            ack()
+            return
+
+        if not self.plane.begin_fetch(key):
+            # already resident or a pull is in flight: confirm from a
+            # side thread (lookup may block on the pending entry)
+            def confirm():
+                try:
+                    self.plane.lookup(key)
+                    ack()
+                except BaseException as err:  # noqa: BLE001 — ships back
+                    nak(err)
+
+            threading.Thread(target=confirm, daemon=True,
+                             name=f"agent{self.node_id}-bcast").start()
+            return
+
+        addr = meta.get("addr")
+        if not addr:
+            err = PeerFetchError(
+                f"no data-plane address for broadcast parent of "
+                f"d{key[0]}v{key[1]}")
+            self.plane.fail_fetch(key, err)
+            nak(err)
+            return
+
+        def on_done(value, err):
+            if err is not None:
+                self.plane.fail_fetch(key, err)
+                nak(err)
+            else:
+                self.plane.resolve_fetch(key, value)
+                ack()
+
+        self.peers.fetch_async(addr, key, meta.get("token"), on_done)
 
     # ------------------------------------------------------------- task path
     def _pre_store(self, meta: dict, frames) -> None:

@@ -319,6 +319,7 @@ def pack_payload(
     obj: Any,
     input_keys: Optional[Dict[int, Tuple[int, int]]] = None,
     resident: Optional[set] = None,
+    peer_sources: Optional[Dict[Tuple[int, int], Tuple[int, str, int]]] = None,
 ) -> Tuple[Any, List, Dict[str, Any]]:
     """Encode a nested structure for the wire.
 
@@ -334,12 +335,20 @@ def pack_payload(
     pickle.  Returns ``(structure, frames, info)`` where ``info`` reports
     the ``Put`` keys/bytes, the ``Fetch`` keys/bytes (the peer data-plane
     ledger) and the ``Ref`` count (dedup wins).
+
+    ``peer_sources`` maps keys of *scheduler-resident* datums that some
+    agent already holds to ``(node, addr, nbytes)``: instead of shipping
+    a second ``Put`` of the same bytes over the scheduler link, the
+    receiver is directed to pull them from that agent by key
+    (a ``Fetch`` with no token — the broadcast-residue fix, DESIGN.md
+    §16).
     """
     from ..core.futures import RemoteValue
     input_keys = input_keys or {}
     resident = resident if resident is not None else set()
+    peer_sources = peer_sources or {}
     frames: List = []
-    info = {"put_keys": [], "put_bytes": 0, "refs": 0,
+    info = {"put_keys": [], "put_bytes": 0, "put_sizes": {}, "refs": 0,
             "fetch_keys": [], "fetch_bytes": 0}
     put_in_msg: set = set()   # intra-message dedup: same datum twice = one Put
 
@@ -384,9 +393,18 @@ def pack_payload(
                 if key in resident or key in put_in_msg:
                     info["refs"] += 1
                     return Ref(key)
+                src = peer_sources.get(key)
+                if src is not None:
+                    node, addr, nbytes = src
+                    put_in_msg.add(key)
+                    info["fetch_keys"].append(key)
+                    info["fetch_bytes"] += int(nbytes)
+                    return Fetch(key, None, node, addr, int(nbytes))
                 put_in_msg.add(key)
+                nb = struct_nbytes(o)
                 info["put_keys"].append(key)
-                info["put_bytes"] += struct_nbytes(o)
+                info["put_bytes"] += nb
+                info["put_sizes"][key] = nb
                 return Put(key, enc_value(o))
             if isinstance(o, np.ndarray):
                 if frame_eligible(o) and o.nbytes >= WIRE_MIN_FRAME_BYTES:

@@ -211,3 +211,7 @@ compss_start = runtime_start
 compss_stop = runtime_stop
 compss_barrier = barrier
 compss_wait_on = wait_on
+
+# -- collectives (DESIGN.md §16) ----------------------------------------------
+# imported last: collectives resolves this module lazily at call time
+from .collectives import broadcast, shuffle, tree_reduce  # noqa: E402,F401

@@ -1414,7 +1414,13 @@ class ClusterExecutor(ExecutorBackend):
         # threads AND dispatcher threads — bare += across threads loses
         # updates, and relay_bytes is the CI-gated §15 acceptance metric
         self._stats_lock = threading.Lock()
+        # first agent each scheduler-resident key was Put to (key ->
+        # (agent, nbytes), under _stats_lock): later agents needing the
+        # same key pull it agent→agent instead of costing a second copy
+        # over our own link (the broadcast-residue fix, DESIGN.md §16)
+        self._put_home: Dict[Tuple[int, int], Tuple[int, int]] = {}
         self.agent_restarts = 0
+        self.broadcasts = 0        # collective broadcast waves completed
         self.puts = 0              # keyed datums shipped to some node
         self.refs = 0              # keyed datums referenced, not re-shipped
         self.fetches = 0           # peer-fetch directives issued
@@ -1517,8 +1523,10 @@ class ClusterExecutor(ExecutorBackend):
                 except KeyError:
                     pass
             with self._order_locks[a]:
+                srcs = self._peer_sources(a, ex.input_keys)
                 structure, frames, info = pack_payload(
-                    (ex.args, ex.kwargs), ex.input_keys, self._resident[a])
+                    (ex.args, ex.kwargs), ex.input_keys, self._resident[a],
+                    peer_sources=srcs)
                 meta = {"op": "task", "slot": slot, "token": token,
                         "structure": structure, "n_out": n_out}
                 if token not in self._shipped_fns[a]:
@@ -1540,6 +1548,18 @@ class ClusterExecutor(ExecutorBackend):
                     self.fetches += len(info["fetch_keys"])
                     self.fetch_bytes += info["fetch_bytes"]
                     self.bytes_shipped += info["put_bytes"]
+                    for k, nb in info["put_sizes"].items():
+                        self._put_home.setdefault(k, (a, nb))
+                if srcs:
+                    # input resolution booked these copies as relayed
+                    # before the transport was known — they move peer-to-
+                    # peer after all
+                    st = getattr(self.runtime, "store", None)
+                    if st is not None:
+                        for k in info["fetch_keys"]:
+                            src = srcs.get(k)
+                            if src is not None:
+                                st.reattribute_to_p2p(k, src[0])
         except (ConnectionClosed, OSError) as err:
             if not self._closing:
                 self._restart_agent(a, ch)
@@ -1550,6 +1570,35 @@ class ClusterExecutor(ExecutorBackend):
             self._finish_cluster(worker, ex, error=crash)
         except BaseException as err:   # pack/pickle failure: plain failure
             self._finish_cluster(worker, ex, error=err)
+
+    def _peer_sources(self, a: int,
+                      input_keys) -> Optional[Dict[Tuple[int, int],
+                                                   Tuple[int, str, int]]]:
+        """Scheduler-resident input keys some OTHER live agent already
+        caches: ``pack_payload`` turns them into by-key ``Fetch``
+        directives so the bytes move agent→agent instead of crossing the
+        scheduler link once per consumer agent (DESIGN.md §16).  Must be
+        called under ``_order_locks[a]``."""
+        if not self.p2p or not input_keys:
+            return None
+        keys = set(input_keys.values()) - self._resident[a]
+        if not keys:
+            return None
+        with self._stats_lock:
+            homes = [(k, self._put_home[k]) for k in keys
+                     if k in self._put_home]
+        srcs: Optional[Dict[Tuple[int, int], Tuple[int, str, int]]] = None
+        for key, (home, nb) in homes:
+            if home == a:
+                continue   # ledger says resident elsewhere; re-Put is fine
+            addr = self._data_addrs[home]
+            ch = self._channels[home]
+            if addr is None or ch is None or ch.closed:
+                continue
+            if srcs is None:
+                srcs = {}
+            srcs[key] = (home, addr, nb)
+        return srcs
 
     def _on_reply(self, worker: int, a: int, ch, ex, rmeta, rframes,
                   err) -> None:
@@ -1585,6 +1634,11 @@ class ClusterExecutor(ExecutorBackend):
                 # agent's pre-store skips keys it already holds)
                 with self._order_locks[a]:
                     self._resident[a] -= set(ex.input_keys.values())
+                # the failed pull may have chased a stale peer-source
+                # home: forget it so the retry ships a fresh Put
+                with self._stats_lock:
+                    for k in ex.input_keys.values():
+                        self._put_home.pop(k, None)
             self._finish_cluster(worker, ex, error=remote)
 
     def _finish_cluster(self, worker: int, ex, *, result: Any = None,
@@ -1679,6 +1733,14 @@ class ClusterExecutor(ExecutorBackend):
                     return
                 ch.post({"op": "alias", "token": token, "key": tuple(key)})
                 self._resident[a].add(tuple(key))
+                if not isinstance(value, RemoteValue):
+                    # a framed result relayed through us now lives BOTH
+                    # here and on its producer: other agents can pull it
+                    # from that plane instead of costing a second Put
+                    with self._stats_lock:
+                        self._put_home.setdefault(
+                            tuple(key),
+                            (a, int(getattr(value, "nbytes", 0) or 0)))
         except ConnectionClosed:
             pass   # the restart path resets this node's residency ledger
 
@@ -1714,6 +1776,141 @@ class ClusterExecutor(ExecutorBackend):
                     if not self.runtime.store.is_ready(k)]
             self.runtime.relaunch_lost(need)
 
+    # -- collectives (DESIGN.md §16) -----------------------------------------
+    def broadcast(self, key, value, store=None) -> int:
+        """Fan a scheduler-resident datum out to every live agent: ONE
+        encoded copy crosses the scheduler link (to a root agent), then
+        the bytes move agent→agent in a doubling frontier — every ack
+        promotes the receiver to a source for the next wave, so the wave
+        count is ⌈log2(agents)⌉ (a binomial tree).  With p2p disabled the
+        copies go out over each agent link concurrently instead (star
+        topology, but never serialized behind one ordering lock).
+
+        Blocks until the wave settles; returns the number of agents that
+        hold the key.  Dead agents are skipped — a respawned agent picks
+        the key up as a normal Put/peer-Fetch when a task needs it."""
+        from ..cluster.peer import PEER_FETCH_TIMEOUT
+        from ..cluster.protocol import (ConnectionClosed, pack_payload,
+                                        struct_nbytes)
+        key = tuple(key)
+        nbytes = struct_nbytes(value)
+        cv = threading.Condition()
+        pending = [0]
+        failed = [0]
+        holders: List[int] = []
+        free: List[int] = []
+        waiting: List[int] = []
+        enc: List[Any] = []   # lazily packed [structure, frames]
+
+        for a in range(self.n_agents):
+            ch = self._channels[a]
+            if ch is None or ch.closed:
+                continue
+            with self._order_locks[a]:
+                resident = key in self._resident[a]
+            (holders if resident else waiting).append(a)
+        free.extend(holders)
+
+        def send_root(a: int) -> bool:
+            ch = self._channels[a]
+            if ch is None or ch.closed:
+                return False
+            if not enc:
+                structure, frames, _ = pack_payload(value)
+                enc.extend((structure, frames))
+            try:
+                with self._order_locks[a]:
+                    if self._channels[a] is not ch:
+                        return False
+                    ch.request_cb(
+                        {"op": "bcast", "key": key, "root": True,
+                         "structure": enc[0]},
+                        enc[1],
+                        lambda rm, rf, err, _a=a: on_leg(_a, None, rm, err))
+                    with self._stats_lock:
+                        self.puts += 1
+                        self.bytes_shipped += nbytes
+                return True
+            except (ConnectionClosed, OSError):
+                return False
+
+        def send_pull(child: int, parent: int) -> bool:
+            ch = self._channels[child]
+            addr = self._data_addrs[parent]
+            if ch is None or ch.closed or addr is None:
+                return False
+            try:
+                with self._order_locks[child]:
+                    if self._channels[child] is not ch:
+                        return False
+                    ch.request_cb(
+                        {"op": "bcast", "key": key, "addr": addr,
+                         "node": parent, "nbytes": nbytes},
+                        (),
+                        lambda rm, rf, err, _c=child, _p=parent:
+                            on_leg(_c, _p, rm, err))
+                    with self._stats_lock:
+                        self.fetches += 1
+                        self.fetch_bytes += nbytes
+                return True
+            except (ConnectionClosed, OSError):
+                return False
+
+        def pump() -> None:
+            """Launch every leg the current sources can serve.  Runs with
+            ``cv`` held (re-entrant from on_leg: Condition uses an RLock)."""
+            while waiting:
+                if not self.p2p or (not holders and pending[0] == 0):
+                    a = waiting.pop(0)
+                    if send_root(a):
+                        pending[0] += 1
+                    else:
+                        failed[0] += 1
+                    continue
+                if not free:
+                    return
+                parent = free.pop(0)
+                child = waiting.pop(0)
+                if send_pull(child, parent):
+                    pending[0] += 1
+                else:
+                    failed[0] += 1
+                    free.append(parent)
+
+        def on_leg(a: int, parent: Optional[int], rmeta, err) -> None:
+            ok = err is None and rmeta is not None \
+                and rmeta.get("op") == "bcast_ok"
+            with cv:
+                pending[0] -= 1
+                if parent is not None:
+                    free.append(parent)
+                if ok:
+                    with self._order_locks[a]:
+                        if self._channels[a] is not None:
+                            self._resident[a].add(key)
+                    with self._stats_lock:
+                        self._put_home.setdefault(key, (a, nbytes))
+                    holders.append(a)
+                    free.append(a)
+                    if store is not None:
+                        store.note_location(key, a, source=parent)
+                else:
+                    failed[0] += 1
+                pump()
+                cv.notify_all()
+
+        deadline = time.monotonic() + PEER_FETCH_TIMEOUT + 30.0
+        with cv:
+            pump()
+            while pending[0] > 0:
+                left = deadline - time.monotonic()
+                if left <= 0:
+                    break
+                cv.wait(timeout=left)
+            with self._stats_lock:
+                self.broadcasts += 1
+            return len(holders)
+
     # -- failure handling ----------------------------------------------------
     def _drop_residency(self, keys) -> None:
         """Strike lost datum keys from EVERY agent's residency ledger: a
@@ -1725,6 +1922,9 @@ class ClusterExecutor(ExecutorBackend):
         for a in range(self.n_agents):
             with self._order_locks[a]:
                 self._resident[a] -= keyset
+        with self._stats_lock:
+            for k in keyset:
+                self._put_home.pop(k, None)
 
     def _restart_agent(self, a: int, failed_ch) -> None:
         with self._restart_lock:
@@ -1753,6 +1953,10 @@ class ClusterExecutor(ExecutorBackend):
                 self._channels[a] = new_ch
             if self._peers is not None:
                 self._peers.drop(old_addr)   # the pooled conn died with it
+            # every peer-source home pointing at the dead plane is stale
+            with self._stats_lock:
+                self._put_home = {k: v for k, v in self._put_home.items()
+                                  if v[0] != a}
             # the store's residency metadata must die with the agent too,
             # or locality keeps steering reads at data the replacement
             # doesn't hold and the transfer ledger undercounts re-ships —
@@ -1790,6 +1994,7 @@ class ClusterExecutor(ExecutorBackend):
             "pipeline_depth": self.pipeline_depth,
             "agent_restarts": self.agent_restarts,
             "p2p": self.p2p,
+            "broadcasts": self.broadcasts,
             "puts": self.puts,
             "refs": self.refs,
             "fetches": self.fetches,

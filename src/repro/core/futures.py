@@ -334,7 +334,12 @@ class ObjectStore:
     # for the thread backend, worker-process ids for the process backend) and
     # its byte size, so scheduling policies can score ready tasks by resident
     # input *bytes* — across threads and across processes alike.
-    def note_location(self, key: Tuple[int, int], node: int) -> None:
+    def note_location(self, key: Tuple[int, int], node: int,
+                      source: Optional[int] = None) -> None:
+        """Record that ``node`` now holds a copy of ``key``.  ``source``
+        names the node the copy actually came from when the caller knows
+        the transport (a broadcast/peer leg, DESIGN.md §16) — otherwise
+        attribution falls back to inspecting the stored value."""
         with self._lock:
             held = self._locations.setdefault(key, set())
             if node not in held:
@@ -345,9 +350,14 @@ class ObjectStore:
                     # attribute the movement to its actual source: a
                     # node-resident datum moves peer-to-peer from its home
                     # node; anything else is relayed over the scheduler's
-                    # own link (DESIGN.md §15)
+                    # own link (DESIGN.md §15) — unless the caller told us
+                    # which peer served the bytes
                     v = self._values.get(key)
-                    if isinstance(v, RemoteValue) and v.node != node:
+                    if source is not None and source != node:
+                        self._p2p_bytes += nb
+                        self._p2p_by_source[source] = (
+                            self._p2p_by_source.get(source, 0) + nb)
+                    elif isinstance(v, RemoteValue) and v.node != node:
                         self._p2p_bytes += nb
                         self._p2p_by_source[v.node] = (
                             self._p2p_by_source.get(v.node, 0) + nb)
@@ -357,6 +367,20 @@ class ObjectStore:
                 self._node_bytes[node] = (
                     self._node_bytes.get(node, 0) + nb)
                 self.residency_epoch += 1
+
+    def reattribute_to_p2p(self, key: Tuple[int, int], source: int) -> None:
+        """Move one copy of ``key`` from the relay ledger to the p2p
+        ledger.  Input residency is booked during task resolution, before
+        the dispatcher knows the transport; when packing later turns the
+        input into a by-key peer ``Fetch`` (DESIGN.md §16) the bytes never
+        cross the scheduler link after all."""
+        with self._lock:
+            nb = self._nbytes.get(key, 0)
+            moved = min(nb, self._relay_bytes)
+            self._relay_bytes -= moved
+            self._p2p_bytes += nb
+            self._p2p_by_source[source] = (
+                self._p2p_by_source.get(source, 0) + nb)
 
     def forget_node(self, node: int) -> None:
         """Drop a domain from every datum's residency set — the address

@@ -236,6 +236,7 @@ class Runtime:
         priority: int = 0,
         speculatable: bool = True,
         inout: Sequence[Future] = (),
+        placement_hint: Optional[int] = None,
     ):
         """Submit one asynchronous task; returns ``returns`` Future(s).
 
@@ -244,6 +245,10 @@ class Runtime:
         depend on this task's output — the Future objects are re-pointed at
         the new version and the task's extra return values (beyond
         ``returns``) provide the new contents, in ``inout`` order.
+
+        ``placement_hint`` names the node the task would prefer to run on
+        (collectives pin merges where the larger child lives, DESIGN.md
+        §16); only the ``locality`` policy acts on it.
         """
         if self._stopped:
             raise RuntimeError("runtime is stopped")
@@ -288,6 +293,10 @@ class Runtime:
         )
         with self._inflight_cond:
             self._inflight += 1
+        # hint before add_task: the task may be immediately ready and taken
+        # by a dispatcher the instant push_many releases it
+        if placement_hint is not None:
+            self.scheduler.set_hint(tid, placement_hint)
         ready = self.graph.add_task(node)
         self.scheduler.push_many(ready)
         if returns == 1 and not inout:

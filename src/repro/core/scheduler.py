@@ -55,6 +55,13 @@ MEMORY_PENALTY = 1.5
 # locality scan window over the head of the ready queue
 LOCALITY_WINDOW = 64
 
+# score bonus for a task's hinted node (collectives pin merges where the
+# larger child is resident, DESIGN.md §16).  The hint augments the
+# locality fraction rather than overriding it: a hinted node that also
+# holds the inputs is unbeatable, a hinted node with nothing resident
+# still loses to a fully-local unhinted one only when the bonus is < 1.
+HINT_BONUS = 0.75
+
 # a per-node score cache larger than this is reset wholesale (entries for
 # tasks popped by *other* nodes linger until the next residency epoch)
 _SCORE_CACHE_MAX = 4096
@@ -88,6 +95,9 @@ class Scheduler:
         self._qsize = 0          # incrementally-maintained total (all queues)
         # per-node locality caches: node -> (store epoch, {tid: score entry})
         self._loc_cache: Dict[int, Tuple[int, Dict[int, tuple]]] = {}
+        # placement hints: task id -> preferred node (DESIGN.md §16); set
+        # before the task is pushed, consumed when it is taken
+        self._hints: Dict[int, int] = {}
         self._closed = False
 
     # ------------------------------------------------------------------ admin
@@ -103,6 +113,13 @@ class Scheduler:
         # incrementally maintained; a bare int read is atomic under the GIL,
         # so the speculation poll never touches the scheduler lock
         return self._qsize
+
+    def set_hint(self, task_id: int, node: int) -> None:
+        """Pin a placement preference for ``task_id`` (collectives tree
+        placement).  Must be called before the task is pushed; only the
+        ``locality`` policy honors it — elsewhere it is inert."""
+        with self._lock:
+            self._hints[task_id] = node
 
     # ---------------------------------------------------------------- enqueue
     def push(self, task_id: int, preferred_worker: Optional[int] = None) -> None:
@@ -134,6 +151,7 @@ class Scheduler:
                 tid = self._select(worker)
                 if tid is not None:
                     self._qsize -= 1
+                    self._hints.pop(tid, None)
                     return tid
                 if self._closed:
                     return None
@@ -191,8 +209,9 @@ class Scheduler:
                 scores[tid] = score
             if score > best_score:
                 best_i, best_score = i, score
-                if best_score >= 1.0:
+                if best_score >= 1.0 and not self._hints:
                     break   # fully local, no overflow — can't be beaten
+                    # (an outstanding hint could still outscore this)
         self._queue.rotate(-best_i)
         tid = self._queue.popleft()
         self._queue.rotate(best_i)
@@ -221,6 +240,8 @@ class Scheduler:
         budget is a gradient, not an admission check)."""
         t = self.graph.get(task_id)
         score, nonlocal_b = self._locality_score(t, node)
+        if self._hints.get(task_id) == node:
+            score += HINT_BONUS
         if self.node_budget:
             projected = nonlocal_b + self._out_bytes.get(t.name, 0)
             if projected > 0:

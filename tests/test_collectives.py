@@ -1,0 +1,417 @@
+"""Runtime collectives (DESIGN.md §16).
+
+Covers the tree_reduce serial-chain bugfix (balanced sub-trees at every
+arity, live schedule isomorphic to the simulator spec), the collective
+k-ary reduction being bitwise-equal to the client-side fold on every
+backend, broadcast moving bytes over the scheduler link exactly once on
+a live 3-agent cluster (the rest agent→agent), the broadcast-residue
+regression (an N-agent keyed fan-out costs ONE scheduler-link copy),
+shuffle round-tripping skewed fragments, placement hints, and SIGKILL
+recovery mid-broadcast / mid-tree_reduce.
+"""
+import math
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.algorithms.common import tree_reduce as client_tree_reduce
+from repro.algorithms.common import tree_reduce_spec
+from repro.core import api, collectives
+from repro.core.collectives import reduce_spec, spec_depth
+
+BIG = 4096       # float64 elements = 32 KiB, above RJAX_INLINE_MAX
+SMALL = 64       # 512 B, below it
+
+
+def _cluster(n_agents=2, wpn=1, **kw):
+    return api.runtime_start(backend="cluster", n_agents=n_agents,
+                             workers_per_node=wpn, **kw)
+
+
+def gen_arr(seed, n=BIG):
+    return np.random.default_rng(seed).standard_normal(n)
+
+
+def gen_small(n):
+    return np.ones(n, dtype=np.float64)
+
+
+def add(a, b):
+    return a + b
+
+
+def consume(a):
+    return float(np.asarray(a).sum())
+
+
+# ------------------------------------------------------- shapes / validation
+def test_arity_validation():
+    for bad in (1, 0, -3):
+        with pytest.raises(ValueError):
+            tree_reduce_spec(8, arity=bad)
+        with pytest.raises(ValueError):
+            client_tree_reduce([1, 2, 3], add, arity=bad)
+        with pytest.raises(ValueError):
+            reduce_spec(8, arity=bad)
+        with pytest.raises(ValueError):
+            collectives.tree_reduce([1, 2, 3], add, arity=bad)
+    with pytest.raises(ValueError):
+        client_tree_reduce([], add)
+    with pytest.raises(ValueError):
+        collectives.tree_reduce([], add)
+
+
+def test_spec_is_balanced_not_a_chain():
+    """The old fold reduced each arity group serially: at arity 4 the
+    critical path was ~n-1 merges.  Fixed: the pairwise spec stays n-1
+    merges total but log-depth at EVERY arity, and the k-ary collective
+    spec has exactly ceil(log_arity n) levels."""
+    for n in range(2, 40):
+        for arity in (2, 3, 4, 8):
+            spec = tree_reduce_spec(n, arity=arity)
+            assert len(spec) == n - 1        # pairwise merge count invariant
+            d = spec_depth(spec, n)
+            assert d >= math.ceil(math.log2(n))
+            # log-depth: far below the serial chain for any wide tree
+            assert d <= math.ceil(math.log2(n)) + math.ceil(
+                math.log(n) / math.log(arity))
+            kspec = reduce_spec(n, arity=arity)
+            assert spec_depth(kspec, n) == math.ceil(
+                math.log(n) / math.log(arity))
+    assert spec_depth(tree_reduce_spec(16, arity=2), 16) == 4
+    assert spec_depth(tree_reduce_spec(16, arity=4), 16) == 4  # was 15
+
+
+def test_reduce_spec_consumes_each_id_exactly_once():
+    for n in range(1, 18):
+        for arity in (2, 3, 4):
+            spec = reduce_spec(n, arity=arity)
+            used = [c for _, children in spec for c in children]
+            assert len(used) == len(set(used))
+            ids = set(range(n)) | {n + mi for mi, _ in spec}
+            assert set(used) <= ids
+            if n > 1:
+                # every id except the root is consumed exactly once
+                assert len(used) == len(ids) - 1
+                assert n + spec[-1][0] not in used
+            for _, children in spec:
+                assert 2 <= len(children) <= arity
+
+
+def test_live_reduction_isomorphic_to_spec():
+    """Satellite check: the client-side tree_reduce must execute exactly
+    the schedule tree_reduce_spec predicts — same merges, same order —
+    for n in 1..17 x arity in {2, 3, 4}."""
+    for n in range(1, 18):
+        for arity in (2, 3, 4):
+            log = []
+
+            def rec(a, b):
+                log.append((a, b))
+                return len(log) + n - 1     # id of the merge node
+
+            out = client_tree_reduce(list(range(n)), rec, arity=arity)
+            assert log == [pair for _, pair in tree_reduce_spec(n, arity)]
+            assert out == (n - 1 + len(log) if n > 1 else 0)
+
+
+def test_collective_matches_client_fold_bitwise_thread():
+    """The k-ary collective performs the same pairwise merges in the same
+    order as the fixed client-side fold: float64 results are bitwise
+    identical, not merely close."""
+    api.runtime_start(backend="thread", n_workers=4)
+    try:
+        merge_t = api.task(add, name="merge")
+        for n in (1, 2, 5, 8, 13, 16):
+            leaves = [gen_arr(i, 257) for i in range(n)]
+            for arity in (2, 3, 4, 8):
+                expect = client_tree_reduce(leaves, add, arity=arity)
+                got = api.wait_on(collectives.tree_reduce(
+                    list(leaves), merge_t, arity=arity))
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(expect))
+    finally:
+        api.runtime_stop(wait=False)
+
+
+@pytest.mark.parametrize("backend,kw", [
+    ("process", {"n_workers": 2}),
+    ("cluster", {"n_agents": 2, "workers_per_node": 1}),
+])
+def test_collective_matches_client_fold_bitwise_remote(backend, kw):
+    leaves = [gen_arr(i, 512) for i in range(9)]
+    expect = {a: client_tree_reduce(leaves, add, arity=a) for a in (2, 3)}
+    api.runtime_start(backend=backend, **kw)
+    try:
+        merge_t = api.task(add, name="merge")
+        for arity, exp in expect.items():
+            got = api.wait_on(collectives.tree_reduce(
+                list(leaves), merge_t, arity=arity))
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_collective_accepts_future_leaves():
+    api.runtime_start(backend="thread", n_workers=4)
+    try:
+        gen_t = api.task(gen_arr, name="gen")
+        merge_t = api.task(add, name="merge")
+        leaves = api.map_tasks(gen_t, [(i, 128) for i in range(7)])
+        got = api.wait_on(collectives.tree_reduce(leaves, merge_t, arity=3))
+        expect = client_tree_reduce([gen_arr(i, 128) for i in range(7)],
+                                    add, arity=3)
+        np.testing.assert_array_equal(got, expect)
+    finally:
+        api.runtime_stop(wait=False)
+
+
+# ------------------------------------------------------------ placement hint
+def test_scheduler_placement_hint_biases_locality_take():
+    from repro.core.dag import TaskGraph, TaskNode
+    from repro.core.futures import ObjectStore
+    from repro.core.scheduler import Scheduler
+
+    g = TaskGraph()
+    store = ObjectStore()
+    s = Scheduler(g, store, policy="locality", workers_per_node=1)
+
+    def node():
+        return TaskNode(task_id=g.next_task_id(), name="t", fn=None,
+                        args=(), kwargs={}, dep_keys=set(), out_keys=[])
+
+    a, b = node(), node()
+    g.add_task(a)
+    g.add_task(b)
+    s.set_hint(b.task_id, 1)
+    s.push(a.task_id)
+    s.push(b.task_id)
+    # worker on node 1 prefers the hinted task over FIFO order
+    assert s.take(1, timeout=1) == b.task_id
+    assert s.take(1, timeout=1) == a.task_id
+    # hints are consumed at take
+    assert not s._hints
+
+
+# -------------------------------------------------------------- broadcast
+def test_broadcast_thread_backend_plain_store():
+    api.runtime_start(backend="thread", n_workers=2)
+    try:
+        v = np.arange(SMALL, dtype=np.float64)
+        fut = api.broadcast(v)
+        np.testing.assert_array_equal(api.wait_on(fut), v)
+        outs = [api.task(consume, name="consume")(fut) for _ in range(4)]
+        assert api.wait_on(outs) == [float(v.sum())] * 4
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_broadcast_single_scheduler_copy_three_agents():
+    """Acceptance: broadcast moves the value over the scheduler's own
+    link AT MOST once; every other agent receives it agent→agent —
+    verified by the transfer ledger on a live 3-agent cluster."""
+    rt = _cluster(n_agents=3, wpn=1)
+    try:
+        v = np.arange(BIG, dtype=np.float64)
+        shipped0 = rt.executor.bytes_shipped
+        fetch0 = rt.executor.fetch_bytes
+        p2p0 = rt.store.transfer_detail()["p2p_bytes"]
+        fut = api.broadcast(v)
+        shipped = rt.executor.bytes_shipped - shipped0
+        # ONE encoded copy crossed the scheduler link ...
+        assert shipped >= v.nbytes
+        assert shipped < 2 * v.nbytes
+        # ... and the other two agents pulled peer-to-peer
+        assert rt.executor.fetch_bytes - fetch0 >= 2 * v.nbytes
+        assert rt.store.transfer_detail()["p2p_bytes"] - p2p0 == 2 * v.nbytes
+        assert rt.executor.broadcasts == 1
+        # every agent now holds the key: consumers anywhere cost refs only
+        puts0 = rt.executor.puts
+        outs = [api.task(consume, name="consume")(fut) for _ in range(9)]
+        assert api.wait_on(outs, timeout=90) == [float(v.sum())] * 9
+        assert rt.executor.puts == puts0
+        np.testing.assert_array_equal(api.wait_on(fut), v)
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_broadcast_residue_regression_one_put_then_peer_fetches():
+    """Satellite 3: a keyed scheduler-resident datum fanned out to N
+    agents used to cost one Put PER AGENT, serially, on the scheduler
+    thread.  Now the first consumer agent gets the only Put and every
+    other agent pulls the key from that agent's plane."""
+    rt = _cluster(n_agents=3, wpn=1)
+    try:
+        part = api.task(gen_small, name="gen_small")(SMALL)
+        # inline result: the value lives in the scheduler store only
+        api.wait_on(part)
+        puts0, fetches0 = rt.executor.puts, rt.executor.fetches
+        # pin the key onto agent via one consumer, then fan out
+        api.wait_on(api.task(consume, name="consume")(part))
+        assert rt.executor.puts - puts0 == 1
+        outs = [api.task(consume, name="consume")(part) for _ in range(8)]
+        assert api.wait_on(outs, timeout=90) == [float(SMALL)] * 8
+        # the fan-out cost ZERO further scheduler-link copies: the other
+        # two agents each pulled the key agent→agent exactly once
+        assert rt.executor.puts - puts0 == 1
+        fetched = rt.executor.fetches - fetches0
+        assert 1 <= fetched <= 2
+        assert rt.store.transfer_detail()["p2p_bytes"] > 0
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_broadcast_survives_sigkill_mid_fanout():
+    """SIGKILL one agent while the broadcast frontier is running: the
+    wave settles on the surviving agents, consumers everywhere converge
+    (the respawned agent picks the key up as a plain Put)."""
+    rt = _cluster(n_agents=3, wpn=1, max_retries=4)
+    try:
+        v = np.arange(BIG, dtype=np.float64)
+        restarts0 = rt.executor.agent_restarts
+        os.kill(rt.cluster._procs[2].pid, signal.SIGKILL)
+        fut = api.broadcast(v)    # frontier runs against a dying agent
+        outs = [api.task(consume, name="consume", max_retries=4)(fut)
+                for _ in range(9)]
+        assert api.wait_on(outs, timeout=120) == [float(v.sum())] * 9
+        deadline = time.time() + 30
+        while time.time() < deadline \
+                and rt.executor.agent_restarts == restarts0:
+            time.sleep(0.05)
+        assert rt.executor.agent_restarts >= 1
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_tree_reduce_survives_sigkill_of_leaf_home():
+    """SIGKILL the agent holding a leaf mid-reduction: lineage recovery
+    re-executes the lost producers and the collective converges to the
+    same value the thread backend computes."""
+    from repro.core.futures import RemoteValue
+
+    leaves_n = 6
+    api.runtime_start(backend="thread", n_workers=2)
+    try:
+        expect = client_tree_reduce(
+            [gen_arr(i) for i in range(leaves_n)], add, arity=3)
+    finally:
+        api.runtime_stop(wait=False)
+
+    rt = _cluster(n_agents=2, wpn=1, max_retries=4)
+    try:
+        gen_t = api.task(gen_arr, name="gen", max_retries=4)
+        merge_t = api.task(add, name="merge", max_retries=4)
+        leaves = api.map_tasks(gen_t, [(i,) for i in range(leaves_n)])
+        api.barrier()
+        rv = rt.store.get_nowait(leaves[0].key, materialize=False)
+        assert isinstance(rv, RemoteValue)
+        os.kill(rt.cluster._procs[rv.node].pid, signal.SIGKILL)
+        out = collectives.tree_reduce(leaves, merge_t, arity=3)
+        got = api.wait_on(out, timeout=120)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(expect))
+        assert rt.executor.agent_restarts >= 1
+    finally:
+        api.runtime_stop(wait=False)
+
+
+# ---------------------------------------------------------------- shuffle
+def _mod_partition(frag, n_out):
+    frag = np.asarray(frag)
+    return [frag[frag % n_out == p] for p in range(n_out)]
+
+
+def test_shuffle_round_trips_skewed_fragments():
+    """All-to-all over wildly skewed fragment sizes: every input element
+    lands in exactly one output partition, partitions agree with the
+    partition function, nothing is lost or duplicated."""
+    api.runtime_start(backend="thread", n_workers=4)
+    try:
+        rng = np.random.default_rng(7)
+        sizes = [1, 900, 3, 250, 40]            # heavy skew
+        frags = [rng.integers(0, 10_000, size=s).astype(np.int64)
+                 for s in sizes]
+        n_out = 3
+        outs = api.wait_on(collectives.shuffle(frags, _mod_partition, n_out))
+        assert len(outs) == n_out
+        for p, part in enumerate(outs):
+            assert np.all(np.asarray(part) % n_out == p)
+        got = np.sort(np.concatenate([np.asarray(o) for o in outs]))
+        assert np.array_equal(got, np.sort(np.concatenate(frags)))
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_shuffle_with_combine_task_on_cluster():
+    _cluster(n_agents=2, wpn=1)
+    try:
+        frags = [np.arange(i * 100, i * 100 + 90, dtype=np.int64)
+                 for i in range(4)]
+        sum_t = api.task(add, name="psum")
+        outs = api.wait_on(collectives.shuffle(
+            frags, _mod_partition, 2, combine=sum_t))
+        whole = np.concatenate(frags)
+        for p in range(2):
+            assert np.asarray(outs[p]).item() if False else True
+            assert int(np.asarray(outs[p]).sum()) == \
+                int(whole[whole % 2 == p].sum())
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_collective_fns_ship_by_value_to_agents():
+    # merge/partition callables travel inside task ARGS, not through the
+    # fn registry — a closure (or a script's __main__ function) does not
+    # pickle by reference, and before the _Fn wrapper it crashed the
+    # receiving agent's reader loop mid-unpickle
+    _cluster(n_agents=2, wpn=1)
+    try:
+        scale = 2.0
+
+        def scaled_add(a, b):       # closure: by-reference pickle fails
+            return (a + b) * scale
+
+        merge_t = api.task(scaled_add, name="cmerge")
+        parts = [np.full(64, float(i)) for i in range(5)]
+        got = api.wait_on(collectives.tree_reduce(parts, merge_t, arity=3))
+        want = collectives.tree_reduce(parts, scaled_add, arity=3)
+        np.testing.assert_array_equal(got, want)
+
+        def by_parity(a, n):
+            return [a[a % n == i] for i in range(n)]
+
+        frags = [np.arange(i * 10, i * 10 + 7, dtype=np.int64)
+                 for i in range(3)]
+        outs = api.wait_on(collectives.shuffle(frags, by_parity, 2))
+        whole = np.concatenate(frags)
+        back = np.sort(np.concatenate([np.asarray(o) for o in outs]))
+        np.testing.assert_array_equal(back, np.sort(whole))
+    finally:
+        api.runtime_stop(wait=False)
+
+
+def test_shuffle_validation():
+    api.runtime_start(backend="thread", n_workers=2)
+    try:
+        with pytest.raises(ValueError):
+            collectives.shuffle([], _mod_partition, 2)
+        with pytest.raises(ValueError):
+            collectives.shuffle([np.arange(4)], _mod_partition, 0)
+    finally:
+        api.runtime_stop(wait=False)
+
+
+# -------------------------------------------- algorithms ride the collective
+def test_linreg_task_count_uses_kary_tree():
+    from repro.algorithms import linreg
+
+    api.runtime_start(backend="thread", n_workers=4)
+    try:
+        res = linreg.run_linreg(n_rows=2000, p=10, n_pred=400, fragments=16,
+                                pred_blocks=2, merge_arity=8)
+        # 16 leaves at arity 8: 2 group merges + 1 root per tree, not 15
+        assert res.n_tasks == 16 * 3 + 2 * 3 + 1 + 2 * 2
+    finally:
+        api.runtime_stop(wait=False)
