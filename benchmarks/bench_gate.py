@@ -29,6 +29,11 @@ if the PR regresses against the committed ``benchmarks/BENCH_baseline.json``:
 * **broadcast byte split** (DESIGN.md §16) — a broadcast's value may
   cross the scheduler's own link at most ~once (× 1.25 envelope slack);
   every remaining agent must receive it peer-to-peer.
+* **telemetry overhead** (DESIGN.md §17) — dispatch overhead with the
+  telemetry plane enabled may not exceed the same-run telemetry-off
+  number × 1.05 plus a 25 µs jitter slack.  This gate is PR-internal
+  (both numbers come from the same box in the same run, interleaved),
+  so no baseline entry is needed and no cross-hardware slack applies.
 
 Efficiency numbers are recorded in the artifact for trend tracking but
 not gated (CI runner variance swamps them).
@@ -50,6 +55,8 @@ RELAY_TOLERANCE = 1.5            # scheduler-link bytes: placement wiggle...
 RELAY_SLACK_BYTES = 128 * 1024   # ...a real regression is 10x, not 1.5x
 EFF_TOLERANCE = 0.9              # linreg sim eff: calibration noise floor
 BCAST_TOLERANCE = 1.25           # scheduler-link copies per broadcast
+TELEMETRY_TOLERANCE = 1.05       # telemetry-on vs -off, same box same run...
+TELEMETRY_SLACK_US = 25.0        # ...plus the min-of-repeats jitter floor
 
 
 def deep_merge(dst: dict, src: dict) -> dict:
@@ -145,6 +152,21 @@ def check(pr: dict, baseline: dict) -> list:
             failures.append(
                 f"collectives.broadcast: {p2p} p2p bytes < "
                 f"{(agents - 2) * nb} — agents not fed peer-to-peer")
+    tel = pr.get("single_node", {}).get("telemetry_overhead_us")
+    if tel is not None:
+        on, off = tel.get("on"), tel.get("off")
+        if on is None or off is None:
+            failures.append("telemetry_overhead_us: incomplete (need on+off)")
+        else:
+            limit = off * TELEMETRY_TOLERANCE + TELEMETRY_SLACK_US
+            status = "FAIL" if on > limit else "ok"
+            print(f"  [{status}] telemetry overhead: on {on:.1f} us vs "
+                  f"off {off:.1f} us (limit {limit:.1f})")
+            if on > limit:
+                failures.append(
+                    f"telemetry_overhead_us: {on:.1f} us with telemetry on > "
+                    f"{limit:.1f} us (off {off:.1f} × {TELEMETRY_TOLERANCE} "
+                    f"+ {TELEMETRY_SLACK_US})")
     for where, ooc in iter_out_of_core(pr):
         spills = ooc.get("spills", 0) + ooc.get("node_spills", 0) \
             + ooc.get("plane_spills", 0)

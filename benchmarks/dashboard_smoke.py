@@ -1,0 +1,117 @@
+"""CI smoke test for the live telemetry plane (DESIGN.md §17).
+
+Boots a 3-agent LocalCluster with the dashboard on an ephemeral port,
+runs a small fan-out of real tasks, then polls every HTTP endpoint and
+asserts the cross-endpoint consistency the acceptance criteria name:
+the status view reports all nodes heartbeating, the task ring contains
+the run's lifecycle events, and the transfer matrix sums match the p2p
+/ relay byte ledgers.  Exits non-zero on any violation so the
+cluster-smoke CI job fails loudly.
+
+    PYTHONPATH=src python benchmarks/dashboard_smoke.py
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from urllib.request import urlopen
+
+import numpy as np
+
+from repro.core import api
+from repro.cluster.cluster import LocalCluster
+
+N_AGENTS = 3
+HEARTBEAT_S = 0.2
+
+
+def _get(url: str):
+    with urlopen(url, timeout=10) as resp:
+        if resp.status != 200:
+            raise AssertionError(f"{url}: HTTP {resp.status}")
+        return json.loads(resp.read())
+
+
+def _chunk(i):
+    return np.full(4096, i, dtype=np.float64)
+
+
+def _merge(*parts):
+    return float(sum(p.sum() for p in parts))
+
+
+def main() -> int:
+    failures = []
+
+    def check(label, ok, detail=""):
+        print(f"  [{'ok' if ok else 'FAIL'}] {label}" +
+              (f" ({detail})" if detail else ""))
+        if not ok:
+            failures.append(label)
+
+    with LocalCluster(n_agents=N_AGENTS, workers_per_node=1) as cluster:
+        cluster.heartbeat_s = HEARTBEAT_S
+        rt = api.runtime_start(backend="cluster", cluster=cluster,
+                               dashboard_port=0)
+        try:
+            url = rt.dashboard.url
+            print(f"dashboard at {url}")
+            # fan-out -> merge so results move between nodes (p2p traffic)
+            chunks = [api.task(_chunk, name="chunk")(i) for i in range(9)]
+            total = api.task(_merge, name="merge")(*chunks)
+            got = api.wait_on(total)
+            check("task result", got == float(sum(i * 4096 for i in range(9))),
+                  f"got {got}")
+            time.sleep(HEARTBEAT_S * 3)   # let every agent beat a few times
+
+            st = _get(url + "api/status")
+            check("status backend", st.get("backend") == "cluster")
+            check("status telemetry enabled", st.get("telemetry_enabled"))
+            nodes = st.get("nodes", {})
+            check(f"all {N_AGENTS} nodes heartbeating",
+                  sorted(nodes) == [str(i) for i in range(N_AGENTS)],
+                  f"nodes={sorted(nodes)}")
+            check("heartbeat payloads carry plane stats",
+                  all("plane_entries" in n for n in nodes.values()))
+            check("tasks done counted",
+                  st.get("tasks", {}).get("done", 0) >= 10,
+                  f"done={st.get('tasks', {}).get('done')}")
+
+            tk = _get(url + "api/tasks")
+            kinds = {e["kind"] for e in tk["events"]}
+            check("ring has full lifecycle",
+                  {"submit", "dispatch", "done"} <= kinds, f"kinds={kinds}")
+            check("ring watermark advances", tk["last_seq"] > 0)
+
+            tr = _get(url + "api/transfers")
+            mat = tr.get("matrix", [])
+            mat_p2p = sum(e["bytes"] for e in mat if e["src"] >= 0)
+            mat_relay = sum(e["bytes"] for e in mat if e["src"] < 0)
+            check("matrix p2p sum matches ledger",
+                  mat_p2p == tr["p2p_bytes"],
+                  f"{mat_p2p} vs {tr['p2p_bytes']}")
+            check("matrix relay sum matches ledger",
+                  mat_relay == tr["scheduler_relay_bytes"],
+                  f"{mat_relay} vs {tr['scheduler_relay_bytes']}")
+            check("p2p traffic observed", tr["p2p_bytes"] > 0)
+
+            with urlopen(url + "api/trace", timeout=10) as resp:
+                trace = json.loads(resp.read())
+            check("chrome trace has task events",
+                  any(e.get("ph") == "X" for e in trace["traceEvents"]))
+            with urlopen(url, timeout=10) as resp:
+                page = resp.read().decode()
+            check("dashboard page served", "Task stream" in page)
+        finally:
+            api.runtime_stop(wait=False)
+
+    if failures:
+        print(f"\ndashboard smoke FAILED: {failures}")
+        return 1
+    print("\ndashboard smoke passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

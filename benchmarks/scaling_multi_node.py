@@ -148,9 +148,13 @@ def _localhost_machine(n_agents: int, wpn: int) -> MachineModel:
     )
 
 
-def run_live(agent_counts=(1, 2), wpn: int = 2,
-             json_path: str = None) -> List[Tuple[str, float, str]]:
-    """Measured vs simulated efficiency on real TCP node agents."""
+def run_live(agent_counts=(1, 2), wpn: int = 2, json_path: str = None,
+             trace_path: str = None) -> List[Tuple[str, float, str]]:
+    """Measured vs simulated efficiency on real TCP node agents.
+
+    ``trace_path`` writes the largest run's task timeline as Chrome-trace
+    JSON (DESIGN.md §17) — open in Perfetto / chrome://tracing; CI uploads
+    it as an artifact so every bench run leaves an inspectable timeline."""
     from repro.core import api
 
     print(f"# live multi-node scaling — LocalCluster, {wpn} workers/agent")
@@ -179,6 +183,10 @@ def run_live(agent_counts=(1, 2), wpn: int = 2,
                          if t.tid not in warm_ids]
             simulated[n] = simulate(sim_tasks,
                                     _localhost_machine(n, wpn)).makespan
+            if trace_path and n == max(agent_counts):
+                with open(trace_path, "w") as f:
+                    f.write(rt.tracer.to_chrome_trace())
+                print(f"wrote Chrome trace ({n} agents) to {trace_path}")
         finally:
             api.runtime_stop(wait=False)
     base = min(agent_counts)
@@ -372,10 +380,13 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write --live measurements as JSON (merged into "
                          "BENCH_pr.json by bench_gate.py)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write the largest --live run's task timeline as "
+                         "Chrome-trace JSON (open in Perfetto)")
     opts = ap.parse_args()
     if opts.live:
         wpn = 1 if opts.quick else opts.wpn
         run_live(tuple(int(x) for x in opts.agents.split(",")), wpn=wpn,
-                 json_path=opts.json)
+                 json_path=opts.json, trace_path=opts.trace)
     else:
         run()

@@ -193,6 +193,47 @@ def measure_dispatch_overhead(backend: str, n_workers: int = 2,
         rt.stop(wait=False)
 
 
+def measure_telemetry_overhead(n_workers: int = 2, n_tasks: int = 200,
+                               repeats: int = 5) -> Dict[str, float]:
+    """Process-backend dispatch overhead with the telemetry plane on vs
+    off (DESIGN.md §17) — the gate that keeps instrumentation off the
+    hot path.  Both runtimes live for the whole measurement and the
+    timing rounds interleave on/off, so multi-second CPU-supply bursts
+    on shared boxes hit both configurations instead of biasing one; min
+    per configuration is the reported statistic."""
+    warm = Runtime(n_workers=n_workers, backend="process", tracing=False)
+    try:   # first fork in the interpreter pays one-time COW page faults
+        for _ in range(50):
+            warm.submit(_spin, (0,), name="warm")
+        warm.barrier()
+    finally:
+        warm.stop(wait=False)
+    rts = {
+        "off": Runtime(n_workers=n_workers, backend="process",
+                       tracing=False, telemetry=False),
+        "on": Runtime(n_workers=n_workers, backend="process",
+                      tracing=False, telemetry=True),
+    }
+    best = {"off": float("inf"), "on": float("inf")}
+    try:
+        for rt in rts.values():
+            rt.wait_on(rt.submit(_spin, (0,), name="warmup"))
+        for i in range(repeats):
+            if i:
+                time.sleep(0.3)
+            for label, rt in rts.items():
+                t0 = time.perf_counter()
+                for _ in range(n_tasks):
+                    rt.submit(_spin, (0,), name="noop")
+                rt.barrier()
+                best[label] = min(
+                    best[label], (time.perf_counter() - t0) / n_tasks * 1e6)
+    finally:
+        for rt in rts.values():
+            rt.stop(wait=False)
+    return {k: round(v, 1) for k, v in best.items()}
+
+
 def run_depth_sweep(depths=(1, 2, 4), n_workers: int = 2) -> dict:
     """Dispatch overhead of the process backend per pipeline depth
     (DESIGN.md §14).  Depth 1 is the old stop-and-wait dispatch — its
@@ -282,6 +323,9 @@ def run_quick() -> dict:
             print(f"  {name:7s} {mode:6s} eff@128 = {table[128]:.3f}")
     ooc = run_out_of_core()
     ooc_thread = run_out_of_core(backend="thread")
+    print("# quick bench — telemetry overhead (process backend)")
+    tel = measure_telemetry_overhead()
+    print(f"  telemetry on {tel['on']:.1f} us/task vs off {tel['off']:.1f}")
     return {
         "dispatch_overhead_us": overhead,
         "pipeline_depth_sweep_us": {"process": sweep},
@@ -289,6 +333,7 @@ def run_quick() -> dict:
         "strong_eff@128": eff["strong"],
         "out_of_core": ooc,
         "out_of_core_thread": ooc_thread,
+        "telemetry_overhead_us": tel,
     }
 
 

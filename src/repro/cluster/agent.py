@@ -19,6 +19,11 @@ and then serves the scheduler's task stream:
 * ``stats`` — report pool + plane statistics.
 * ``exit``  — drain nothing, shut the pool down, leave.
 
+The agent also *pushes* without being asked: a periodic ``hb`` heartbeat
+(DESIGN.md §17) rides the same scheduler connection, carrying the node's
+plane/pool/p2p telemetry snapshot.  Cadence comes from
+``RJAX_HEARTBEAT_S``, then the welcome handshake, then 1s; 0 disables.
+
 Failure model: a *pool worker* crash is handled inside the agent (the
 inner executor respawns it and the error travels back as a retryable
 ``WorkerCrashedError``); an *agent* crash surfaces scheduler-side as a
@@ -36,12 +41,14 @@ import queue
 import socket
 import sys
 import threading
+import time
 import traceback
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..core.executors import ProcessExecutor, _loads_fn
+from ..core.telemetry import heartbeat_interval
 from ..core.memory import (
     MemoryBudget,
     MemoryGovernor,
@@ -288,6 +295,7 @@ class NodeAgent:
         self.peers = PeerPool(label=f"agent{node_id}",
                               fd_hooks=(self._track_fd, self._untrack_fd))
         self.p2p = True
+        self.heartbeat_s = 0.0   # settled by the welcome handshake
         self._inline_env = os.environ.get("RJAX_INLINE_MAX")
         self.inline_max = inline_max_from_env()
         self._send_lock = threading.Lock()
@@ -357,6 +365,7 @@ class NodeAgent:
         assert welcome.get("op") == "welcome", welcome
         self.node_id = welcome["node_id"]
         self.p2p = bool(welcome.get("p2p", True))
+        self.heartbeat_s = heartbeat_interval(welcome.get("heartbeat_s"))
         if self._inline_env is None and welcome.get("inline_max") is not None:
             self.inline_max = max(0, int(welcome["inline_max"]))
         budget = self.memory_budget
@@ -375,6 +384,9 @@ class NodeAgent:
                                  daemon=True, name=f"agent{self.node_id}-s{slot}")
             t.start()
             threads.append(t)
+        if self.heartbeat_s > 0:
+            threading.Thread(target=self._heartbeat_loop, daemon=True,
+                             name=f"agent{self.node_id}-hb").start()
         try:
             self._serve()
         finally:
@@ -434,21 +446,8 @@ class NodeAgent:
             elif op == "drop":
                 self.plane.drop(meta["token"])
             elif op == "stats":
-                s = dict(self.plane.stats())
-                # the inner pool's shm plane reports its own governor under
-                # plane_* too: namespace it so the node plane's ledger (the
-                # wire-facing tier) isn't shadowed
-                for k, v in self.pool.stats().items():
-                    s[f"pool_{k}" if (k in s or k.startswith("plane_"))
-                      else k] = v
-                s["node_id"] = self.node_id
-                # the pool is the single fetch ledger (counted where both
-                # sync and async pulls converge, under the pool lock)
-                s["p2p_fetches"] = self.peers.fetches
-                s["p2p_fetch_bytes"] = self.peers.fetch_bytes
-                if self.data_server is not None:
-                    s.update(self.data_server.stats())
-                self._reply({"op": "stats", "mid": meta["mid"], "stats": s})
+                self._reply({"op": "stats", "mid": meta["mid"],
+                             "stats": self._telemetry_stats()})
             elif op == "exit":
                 return
             else:
@@ -458,6 +457,48 @@ class NodeAgent:
     def _reply(self, meta: dict, frames=()) -> None:
         with self._send_lock:
             send_msg(self.sock, meta, frames)
+
+    # ------------------------------------------------------------- telemetry
+    def _telemetry_stats(self) -> dict:
+        """One node telemetry snapshot: plane ledger + pool counters +
+        p2p fetch ledger + data-server stats + queued task depth.  Served
+        on demand (``stats``) and pushed periodically (``hb``)."""
+        s = dict(self.plane.stats())
+        # the inner pool's shm plane reports its own governor under
+        # plane_* too: namespace it so the node plane's ledger (the
+        # wire-facing tier) isn't shadowed
+        for k, v in self.pool.stats().items():
+            s[f"pool_{k}" if (k in s or k.startswith("plane_"))
+              else k] = v
+        s["node_id"] = self.node_id
+        # the pool is the single fetch ledger (counted where both
+        # sync and async pulls converge, under the pool lock)
+        s["p2p_fetches"] = self.peers.fetches
+        s["p2p_fetch_bytes"] = self.peers.fetch_bytes
+        if self.data_server is not None:
+            s.update(self.data_server.stats())
+        # in-flight credit depth: tasks the scheduler streamed ahead that
+        # are still waiting for a pool slot (DESIGN.md §14/§17)
+        s["queued"] = sum(q.qsize() for q in self._slot_queues)
+        return s
+
+    def _heartbeat_loop(self) -> None:
+        """Push the telemetry snapshot every ``heartbeat_s`` seconds on
+        the scheduler connection.  No ``mid``: nothing awaits it — the
+        scheduler's channel reader routes mid-less messages to its
+        ``on_push`` hook (DESIGN.md §17).  Dies silently with the
+        connection; the respawned agent starts a fresh loop.  Beats
+        immediately so the scheduler's node view populates at startup
+        rather than one cadence later."""
+        while True:
+            try:
+                self._reply({"op": "hb", "node": self.node_id,
+                             "t": time.time(),
+                             "stats": self._telemetry_stats()})
+            except (ConnectionClosed, OSError):
+                return
+            if self._done.wait(self.heartbeat_s):
+                return
 
     # ------------------------------------------------------------- broadcast
     def _handle_bcast(self, meta: dict, frames) -> None:

@@ -59,6 +59,10 @@ class AgentChannel:
         # in flight — a producer can die holding node-resident results
         # that nobody has asked for yet (DESIGN.md §15)
         self.on_close: Optional[Callable[[], None]] = None
+        # agent-initiated push messages (no ``mid``: nothing awaited
+        # them) — the telemetry heartbeats ride here (DESIGN.md §17).
+        # Runs on the reader thread: handlers must be cheap and non-blocking.
+        self.on_push: Optional[Callable[[dict, List[memoryview]], None]] = None
         self._send_lock = threading.Lock()
         self._pending: Dict[int, _Pending] = {}
         self._pending_lock = threading.Lock()
@@ -168,6 +172,15 @@ class AgentChannel:
             while True:
                 meta, frames = recv_msg(self.sock)
                 mid = meta.get("mid")
+                if mid is None:
+                    # unsolicited agent→scheduler push (heartbeats)
+                    cb = self.on_push
+                    if cb is not None:
+                        try:
+                            cb(meta, frames)
+                        except BaseException:
+                            traceback.print_exc(file=sys.stderr)
+                    continue
                 with self._pending_lock:
                     slot = self._pending.pop(mid, None)
                 if slot is None:

@@ -67,6 +67,10 @@ class LocalCluster:
         # policy.  An agent's own RJAX_INLINE_MAX wins, like --memory-budget
         self.p2p: bool = True
         self.inline_max: Optional[int] = None
+        # telemetry heartbeat cadence (DESIGN.md §17), forwarded in the
+        # welcome like the knobs above; an agent's own RJAX_HEARTBEAT_S
+        # wins.  None = let agents use their default
+        self.heartbeat_s: Optional[float] = None
         self._lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -149,7 +153,8 @@ class LocalCluster:
                 nid = next(free)
             send_msg(conn, {"op": "welcome", "node_id": nid,
                             "memory_budget": self.memory_budget,
-                            "p2p": self.p2p, "inline_max": self.inline_max})
+                            "p2p": self.p2p, "inline_max": self.inline_max,
+                            "heartbeat_s": self.heartbeat_s})
             channels[nid] = AgentChannel(conn, nid, hello)
         return channels
 
@@ -167,7 +172,8 @@ class LocalCluster:
             conn, hello = self._accept_one(timeout)
             send_msg(conn, {"op": "welcome", "node_id": i,
                             "memory_budget": self.memory_budget,
-                            "p2p": self.p2p, "inline_max": self.inline_max})
+                            "p2p": self.p2p, "inline_max": self.inline_max,
+                            "heartbeat_s": self.heartbeat_s})
             return AgentChannel(conn, i, hello)
 
     # ------------------------------------------------------------ teardown

@@ -55,6 +55,8 @@ def runtime_start(
     memory_budget=None,
     spill_dir: Optional[str] = None,
     pipeline_depth: Optional[int] = None,
+    telemetry: Optional[bool] = None,
+    dashboard_port: Optional[int] = None,
 ) -> Runtime:
     """Initialize the global runtime (``compss_start``).
 
@@ -81,7 +83,17 @@ def runtime_start(
     ``pipeline_depth`` bounds the in-flight task descriptors per worker
     on the out-of-process backends (DESIGN.md §14): depth 1 is classic
     stop-and-wait dispatch, higher depths overlap dispatch with remote
-    execution.  Defaults to ``RJAX_PIPELINE_DEPTH`` (4)."""
+    execution.  Defaults to ``RJAX_PIPELINE_DEPTH`` (4).
+
+    ``telemetry`` toggles the live telemetry plane (DESIGN.md §17):
+    agent heartbeats (or the in-process sampler), the bounded
+    task-lifecycle ring, and the transfer matrix behind
+    ``runtime_stats()["data_plane"]["matrix"]``.  Defaults to following
+    ``tracing``.  ``dashboard_port`` serves the zero-dependency live
+    dashboard on ``127.0.0.1:<port>`` (``0`` = pick an ephemeral port,
+    read it back from ``runtime.dashboard.url``; implies
+    ``telemetry=True``); ``RJAX_DASHBOARD=<port>`` does the same from
+    the environment."""
     global _runtime
     with _lock:
         if _runtime is not None and not _runtime._stopped:
@@ -99,6 +111,8 @@ def runtime_start(
             memory_budget=memory_budget,
             spill_dir=spill_dir,
             pipeline_depth=pipeline_depth,
+            telemetry=telemetry,
+            dashboard_port=dashboard_port,
         )
         return _runtime
 

@@ -1434,11 +1434,16 @@ class ClusterExecutor(ExecutorBackend):
     def start(self, runtime) -> None:
         from ..cluster.peer import PeerPool
         from ..cluster.protocol import inline_max_from_env
+        from .telemetry import heartbeat_interval
         self.cluster.p2p = self.p2p
         # ship the scheduler-side inline threshold in the welcome, so
         # external agents on other hosts apply the same encoding policy
         if getattr(self.cluster, "inline_max", None) is None:
             self.cluster.inline_max = inline_max_from_env()
+        # likewise the heartbeat cadence (DESIGN.md §17): resolved here
+        # from the scheduler's environment so off-host agents beat in step
+        if getattr(self.cluster, "heartbeat_s", None) is None:
+            self.cluster.heartbeat_s = heartbeat_interval()
         try:
             self._channels = self.cluster.accept_agents()
         except Exception:
@@ -1453,6 +1458,18 @@ class ClusterExecutor(ExecutorBackend):
     def _install_channel(self, a: int, ch) -> None:
         self._data_addrs[a] = ch.data_addr()
         ch.on_close = lambda _a=a, _ch=ch: self._on_channel_down(_a, _ch)
+        ch.on_push = lambda meta, frames, _a=a: self._on_push(_a, meta)
+
+    def _on_push(self, a: int, meta: dict) -> None:
+        """Agent-initiated push (channel reader thread): route heartbeats
+        into the runtime's telemetry hub.  Guarded — the first beats can
+        arrive before ``super().start`` binds the runtime."""
+        if meta.get("op") != "hb" or self._closing:
+            return
+        rt = self.runtime
+        if rt is not None:
+            rt.telemetry.note_heartbeat(meta.get("node", a),
+                                        meta.get("stats") or {})
 
     def _on_channel_down(self, a: int, ch) -> None:
         """Connection-death hook: recover even when nothing was in
@@ -1559,7 +1576,7 @@ class ClusterExecutor(ExecutorBackend):
                         for k in info["fetch_keys"]:
                             src = srcs.get(k)
                             if src is not None:
-                                st.reattribute_to_p2p(k, src[0])
+                                st.reattribute_to_p2p(k, src[0], dest=a)
         except (ConnectionClosed, OSError) as err:
             if not self._closing:
                 self._restart_agent(a, ch)

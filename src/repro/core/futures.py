@@ -115,6 +115,11 @@ class ObjectStore:
         self._relay_bytes = 0
         self._p2p_bytes = 0
         self._p2p_by_source: Dict[int, int] = {}
+        # node×node movement for the dashboard's transfer matrix
+        # (DESIGN.md §17): (src, dst) -> bytes, src == -1 meaning the
+        # scheduler's own link (relay).  Invariant: summing src >= 0
+        # entries gives _p2p_bytes; summing src == -1 gives _relay_bytes.
+        self._transfer_matrix: Dict[Tuple[int, int], int] = {}
         self._gathers = 0            # RemoteValues materialized scheduler-side
         self._gather_bytes = 0
         # installed by the cluster executor: fetcher(key, rv) -> value
@@ -357,23 +362,34 @@ class ObjectStore:
                         self._p2p_bytes += nb
                         self._p2p_by_source[source] = (
                             self._p2p_by_source.get(source, 0) + nb)
+                        self._matrix_add(source, node, nb)
                     elif isinstance(v, RemoteValue) and v.node != node:
                         self._p2p_bytes += nb
                         self._p2p_by_source[v.node] = (
                             self._p2p_by_source.get(v.node, 0) + nb)
+                        self._matrix_add(v.node, node, nb)
                     else:
                         self._relay_bytes += nb
+                        self._matrix_add(-1, node, nb)
                 held.add(node)
                 self._node_bytes[node] = (
                     self._node_bytes.get(node, 0) + nb)
                 self.residency_epoch += 1
 
-    def reattribute_to_p2p(self, key: Tuple[int, int], source: int) -> None:
+    def _matrix_add(self, src: int, dst: int, nb: int) -> None:
+        if nb:
+            self._transfer_matrix[(src, dst)] = (
+                self._transfer_matrix.get((src, dst), 0) + nb)
+
+    def reattribute_to_p2p(self, key: Tuple[int, int], source: int,
+                           dest: Optional[int] = None) -> None:
         """Move one copy of ``key`` from the relay ledger to the p2p
         ledger.  Input residency is booked during task resolution, before
         the dispatcher knows the transport; when packing later turns the
         input into a by-key peer ``Fetch`` (DESIGN.md §16) the bytes never
-        cross the scheduler link after all."""
+        cross the scheduler link after all.  ``dest`` (the consuming
+        node, when the caller knows it) keeps the node×node matrix in
+        step with the aggregate split."""
         with self._lock:
             nb = self._nbytes.get(key, 0)
             moved = min(nb, self._relay_bytes)
@@ -381,6 +397,23 @@ class ObjectStore:
             self._p2p_bytes += nb
             self._p2p_by_source[source] = (
                 self._p2p_by_source.get(source, 0) + nb)
+            if dest is not None:
+                cell = self._transfer_matrix.get((-1, dest), 0)
+                take = min(moved, cell)
+                if take:
+                    if cell - take:
+                        self._transfer_matrix[(-1, dest)] = cell - take
+                    else:
+                        self._transfer_matrix.pop((-1, dest), None)
+                self._matrix_add(source, dest, nb)
+
+    def transfer_matrix(self) -> List[dict]:
+        """JSON-friendly node×node movement matrix: one
+        ``{"src", "dst", "bytes"}`` row per nonzero cell, ``src == -1``
+        meaning the scheduler relayed the bytes (DESIGN.md §17)."""
+        with self._lock:
+            return [{"src": s, "dst": d, "bytes": b}
+                    for (s, d), b in sorted(self._transfer_matrix.items())]
 
     def forget_node(self, node: int) -> None:
         """Drop a domain from every datum's residency set — the address
@@ -427,6 +460,9 @@ class ObjectStore:
                 "scheduler_relay_bytes": self._relay_bytes,
                 "p2p_bytes": self._p2p_bytes,
                 "p2p_by_source": dict(self._p2p_by_source),
+                "matrix": [{"src": s, "dst": d, "bytes": b}
+                           for (s, d), b in
+                           sorted(self._transfer_matrix.items())],
                 "gathers": self._gathers,
                 "gather_bytes": self._gather_bytes,
             }

@@ -39,6 +39,7 @@ from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
 from .futures import Future, ObjectStore, TaskFailedError
 from .memory import budget_from_env
 from .scheduler import Scheduler
+from .telemetry import TelemetryHub, normalize_executor_stats
 from .tracing import TraceEvent, Tracer
 
 # per-worker in-flight task budget for pipelined backends (DESIGN.md §14);
@@ -91,16 +92,20 @@ class TaskExecution:
     """One claimed task with resolved inputs — the unit a pipelined
     backend keeps in flight between ``begin_task`` and completion."""
 
-    __slots__ = ("t", "args", "kwargs", "input_keys", "t0", "worker", "node_id")
+    __slots__ = ("t", "args", "kwargs", "input_keys", "t0", "t_run",
+                 "worker", "node_id")
 
     def __init__(self, t: TaskNode, args: tuple, kwargs: dict,
                  input_keys: Dict[int, Tuple[int, int]], t0: float,
-                 worker: int, node_id: int):
+                 worker: int, node_id: int, t_run: Optional[float] = None):
         self.t = t
         self.args = args
         self.kwargs = kwargs
         self.input_keys = input_keys
         self.t0 = t0
+        # inputs resolved, body about to run: t_run - t0 is the
+        # fetch/stall gap the telemetry plane surfaces (DESIGN.md §17)
+        self.t_run = t_run
         self.worker = worker
         self.node_id = node_id
 
@@ -121,6 +126,8 @@ class Runtime:
         memory_budget: Any = None,
         spill_dir: Optional[str] = None,
         pipeline_depth: Optional[int] = None,
+        telemetry: Optional[bool] = None,
+        dashboard_port: Optional[int] = None,
     ):
         # memory governance (DESIGN.md §13): explicit knob beats
         # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
@@ -153,9 +160,24 @@ class Runtime:
         self.n_workers = int(n_workers)
         self.backend = backend
         self.cluster = cluster
+        # live telemetry plane (DESIGN.md §17): ring hooks follow the
+        # tracing flag unless asked for explicitly; a dashboard implies
+        # telemetry.  RJAX_DASHBOARD=<port> enables the dashboard from
+        # the environment (0 = ephemeral port).
+        if dashboard_port is None:
+            env_dash = os.environ.get("RJAX_DASHBOARD", "")
+            dashboard_port = int(env_dash) if env_dash != "" else None
+        telemetry_on = bool(tracing) if telemetry is None else bool(telemetry)
+        if dashboard_port is not None:
+            telemetry_on = True
+        # sampler threads only when someone is watching (dashboard) or
+        # telemetry was requested explicitly — plain traced runs keep
+        # their thread count unchanged
+        self._want_sampler = bool(telemetry) or dashboard_port is not None
         try:
             self._init_rest(workers_per_node, policy, tracing, retry,
-                            speculation, name, backend, backend_opts)
+                            speculation, name, backend, backend_opts,
+                            telemetry_on, dashboard_port)
         except BaseException:
             # a half-built cluster runtime must not leak agent processes
             # (GC of the listener is not guaranteed, e.g. in a REPL)
@@ -167,7 +189,9 @@ class Runtime:
             raise
 
     def _init_rest(self, workers_per_node, policy, tracing, retry,
-                   speculation, name, backend, backend_opts) -> None:
+                   speculation, name, backend, backend_opts,
+                   telemetry_on: bool = False,
+                   dashboard_port: Optional[int] = None) -> None:
         if workers_per_node is None:
             # each worker process is its own address space => its own
             # locality domain; threads all share one
@@ -182,6 +206,10 @@ class Runtime:
             node_budget=self.memory_budget,
         )
         self.tracer = Tracer(enabled=tracing)
+        # created before the executor starts: cluster agent heartbeats
+        # can arrive the moment the channels are installed
+        self.telemetry = TelemetryHub(enabled=telemetry_on)
+        self.dashboard = None
         self.retry = retry
         self.speculation = speculation
         self.name = name
@@ -203,6 +231,15 @@ class Runtime:
         self.executor = make_executor(backend, self.n_workers, label=name,
                                       **backend_opts)
         self.executor.start(self)
+
+        if dashboard_port is not None:
+            from .dashboard import DashboardServer
+            self.dashboard = DashboardServer(self, port=dashboard_port)
+        if (self.telemetry.enabled and self._want_sampler
+                and backend != "cluster"):
+            # thread/process backends have no agents to heartbeat: an
+            # in-process sampler synthesizes the per-node view instead
+            self.telemetry.start_sampler(self)
 
         self._monitor: Optional[threading.Thread] = None
         if self.speculation.enabled:
@@ -297,6 +334,8 @@ class Runtime:
         # by a dispatcher the instant push_many releases it
         if placement_hint is not None:
             self.scheduler.set_hint(tid, placement_hint)
+        if self.telemetry.enabled:
+            self.telemetry.note_submit([{"task": tid, "name": tname}])
         ready = self.graph.add_task(node)
         self.scheduler.push_many(ready)
         if returns == 1 and not inout:
@@ -354,6 +393,9 @@ class Runtime:
                                else tuple(out_futures))
         with self._inflight_cond:
             self._inflight += n
+        if self.telemetry.enabled:
+            self.telemetry.note_submit(
+                [{"task": nd.task_id, "name": tname} for nd in nodes])
         ready = self.graph.add_tasks(nodes)
         self.scheduler.push_many(ready)
         return futures_out
@@ -409,6 +451,9 @@ class Runtime:
         if t is None:
             return None  # cancelled before start (lost speculation race)
         t0 = time.perf_counter()
+        if self.telemetry.enabled:
+            self.telemetry.note_dispatch(t.task_id, t.name, worker,
+                                         node_id, t0)
         try:
             args, kwargs, input_keys = self._resolve_inputs(t, node_id)
         except PoisonedInputError as err:
@@ -418,23 +463,28 @@ class Runtime:
         except BaseException as err:
             self._handle_task_error(t, err, worker, node_id, t0)
             return None
-        return TaskExecution(t, args, kwargs, input_keys, t0, worker, node_id)
+        return TaskExecution(t, args, kwargs, input_keys, t0, worker, node_id,
+                             t_run=time.perf_counter())
 
     def complete_task(self, ex: TaskExecution, result: Any) -> None:
         """Successful body execution: publish outputs, release children."""
         self._finish_success(ex.t, result, ex.node_id)
-        self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=True)
+        self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=True,
+                         t_run=ex.t_run)
 
     def fail_task(self, ex: TaskExecution, err: BaseException) -> None:
         """Body execution raised: apply the retry policy or fail."""
         if isinstance(err, PoisonedInputError):
             self._finish_failure(ex.t, err, retryable=False)
-            self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=False)
+            self._trace_task(ex.t, ex.worker, ex.node_id, ex.t0, ok=False,
+                             t_run=ex.t_run)
             return
-        self._handle_task_error(ex.t, err, ex.worker, ex.node_id, ex.t0)
+        self._handle_task_error(ex.t, err, ex.worker, ex.node_id, ex.t0,
+                                t_run=ex.t_run)
 
     def _handle_task_error(self, t: TaskNode, err: BaseException,
-                           worker: int, node_id: int, t0: float) -> None:
+                           worker: int, node_id: int, t0: float,
+                           t_run: Optional[float] = None) -> None:
         allowed = t.max_retries
         if getattr(err, "lost_input", False):
             allowed += LOST_INPUT_RETRIES
@@ -449,10 +499,11 @@ class Runtime:
                 timer.start()
             else:
                 self._requeue_retry(t.task_id)
-            self._trace_task(t, worker, node_id, t0, ok=False, retried=True)
+            self._trace_task(t, worker, node_id, t0, ok=False, retried=True,
+                             t_run=t_run)
             return
         self._finish_failure(t, err, retryable=True)
-        self._trace_task(t, worker, node_id, t0, ok=False)
+        self._trace_task(t, worker, node_id, t0, ok=False, t_run=t_run)
 
     def _requeue_retry(self, task_id: int) -> None:
         self.graph.requeue_for_retry(task_id)
@@ -472,13 +523,18 @@ class Runtime:
         self.complete_task(ex, result)
 
     def _trace_task(self, t: TaskNode, worker: int, node_id: int, t0: float,
-                    ok: bool, retried: bool = False) -> None:
+                    ok: bool, retried: bool = False,
+                    t_run: Optional[float] = None) -> None:
+        t1 = time.perf_counter()
         self.tracer.record(TraceEvent(
             kind="task", name=t.name, worker=worker, node=node_id,
-            t0=t0, t1=time.perf_counter(), task_id=t.task_id,
+            t0=t0, t1=t1, task_id=t.task_id,
             meta={"ok": ok, "retried": retried, "attempt": t.attempts,
                   "speculative_of": t.speculative_of},
         ))
+        if self.telemetry.enabled:
+            self.telemetry.note_task(t.task_id, t.name, worker, node_id,
+                                     t0, t_run, t1, ok, retried)
 
     # ------------------------------------------------------- completion paths
     def _logical_id(self, t: TaskNode) -> int:
@@ -698,6 +754,9 @@ class Runtime:
         if wait:
             self.barrier()
         self._stopped = True
+        if self.dashboard is not None:
+            self.dashboard.close()
+        self.telemetry.close()
         self.scheduler.close()
         self.executor.shutdown(wait=wait)
         self.tracer.stop()
@@ -706,14 +765,18 @@ class Runtime:
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:
         c = self.graph.counters()   # O(1): incrementally maintained
-        ex_stats = self.executor.stats()
+        raw_ex = self.executor.stats()
+        # uniform schema across backends (DESIGN.md §17): every canonical
+        # executor counter present, 0 where the backend has no such concept
+        ex_stats = normalize_executor_stats(raw_ex)
         data_plane = self.store.transfer_detail()
         # wire-level truth wins where the executor measures its own link
         # (the cluster backend counts actual Put payloads out + result
         # frames back); other backends fall back to the store's
-        # cross-domain ledger
-        relay = ex_stats.get("relay_bytes",
-                             data_plane["scheduler_relay_bytes"])
+        # cross-domain ledger — judged on the *raw* stats, since the
+        # normalized schema always carries a (zero) relay_bytes key
+        relay = raw_ex.get("relay_bytes",
+                           data_plane["scheduler_relay_bytes"])
         return {
             "tasks_submitted": c["submitted"],
             "tasks_done": c["done"],

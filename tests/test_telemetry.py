@@ -1,0 +1,390 @@
+"""Live telemetry plane (DESIGN.md §17): the task-lifecycle ring,
+tracer hardening + Chrome-trace export, heartbeats on a live
+LocalCluster, dashboard endpoints, stats-schema parity, and the
+node×node transfer matrix."""
+import json
+import threading
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.futures import ObjectStore, RemoteValue
+from repro.core.telemetry import (
+    EXECUTOR_STAT_KEYS,
+    TelemetryHub,
+    heartbeat_interval,
+    normalize_executor_stats,
+)
+from repro.core.tracing import TaskStream, TraceEvent, Tracer
+
+
+def _get_json(url):
+    with urllib.request.urlopen(url, timeout=10) as resp:
+        assert resp.status == 200
+        return json.loads(resp.read())
+
+
+# ---------------------------------------------------------------- TaskStream
+class TestTaskStream:
+    def test_seq_and_since(self):
+        s = TaskStream(capacity=16)
+        for i in range(5):
+            s.append("submit", task=i)
+        assert s.last_seq == 5
+        evs = s.since(0)
+        assert [e["seq"] for e in evs] == [1, 2, 3, 4, 5]
+        assert all(e["kind"] == "submit" for e in evs)
+        # watermark semantics: strictly greater
+        assert [e["seq"] for e in s.since(3)] == [4, 5]
+        assert s.since(5) == []
+
+    def test_eviction_and_dropped(self):
+        s = TaskStream(capacity=8)
+        for i in range(20):
+            s.append("dispatch", task=i)
+        assert len(s) == 8
+        assert s.dropped == 12
+        evs = s.since(0)
+        # only the newest `capacity` events survive, in order
+        assert [e["task"] for e in evs] == list(range(12, 20))
+        assert s.last_seq == 20
+
+    def test_limit_returns_newest(self):
+        s = TaskStream(capacity=64)
+        for i in range(10):
+            s.append("done", task=i)
+        evs = s.since(0, limit=3)
+        assert [e["task"] for e in evs] == [7, 8, 9]
+
+    def test_extend_batches(self):
+        s = TaskStream(capacity=64)
+        s.extend("submit", [{"task": i} for i in range(4)])
+        assert s.last_seq == 4
+        assert [e["task"] for e in s.since(0)] == [0, 1, 2, 3]
+
+    def test_concurrent_appends_keep_unique_seqs(self):
+        s = TaskStream(capacity=4096)
+
+        def hammer():
+            for i in range(500):
+                s.append("done", task=i)
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        seqs = [e["seq"] for e in s.since(0)]
+        assert len(seqs) == len(set(seqs)) == 2000
+        assert s.last_seq == 2000
+
+
+# ------------------------------------------------------------ tracer exports
+class TestTracerHardening:
+    def _tracer_with(self, events):
+        tr = Tracer(enabled=True)
+        for e in events:
+            tr.record(e)
+        return tr
+
+    def test_record_thread_safe(self):
+        tr = Tracer(enabled=True)
+
+        def hammer(w):
+            for i in range(400):
+                t = tr.t_start + i * 1e-6
+                tr.record(TraceEvent("task", "f", w, 0, t, t + 1e-6,
+                                     task_id=i))
+
+        threads = [threading.Thread(target=hammer, args=(w,))
+                   for w in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(tr.events("task")) == 8 * 400
+
+    def test_prv_zero_duration_and_out_of_order(self):
+        t0 = time.perf_counter()
+        tr = self._tracer_with([
+            # out of submission order, one zero-duration, one skewed
+            TraceEvent("task", "b", 1, 0, t0 + 2e-3, t0 + 2e-3),
+            TraceEvent("task", "a", 0, 0, t0 + 1e-3, t0 + 3e-3),
+            TraceEvent("task", "c", 0, 0, t0 - 1e-3, t0 - 2e-3),
+        ])
+        tr.t_start = t0
+        lines = tr.to_prv().splitlines()
+        assert lines[0].startswith("#Paraver")
+        recs = [ln.split(":") for ln in lines[1:]]
+        starts = [int(r[5]) for r in recs]
+        ends = [int(r[6]) for r in recs]
+        assert starts == sorted(starts)          # ordered records
+        assert all(e >= s >= 0 for s, e in zip(starts, ends))
+
+    def test_ascii_gantt_degenerate_events(self):
+        t0 = time.perf_counter()
+        tr = self._tracer_with([
+            TraceEvent("task", "z", 0, 0, t0, t0),          # zero duration
+            TraceEvent("task", "z", 1, 0, t0 + 1e-3, t0),   # negative span
+        ])
+        out = tr.ascii_gantt(width=2)   # width clamp path too
+        assert "w000" in out and "w001" in out
+
+    def test_ascii_gantt_single_instant(self):
+        # every event at the same instant: span would be zero
+        t0 = time.perf_counter()
+        tr = self._tracer_with(
+            [TraceEvent("task", "f", w, 0, t0, t0) for w in range(3)])
+        assert "(empty trace)" not in tr.ascii_gantt()
+
+    def test_chrome_trace_round_trips_event_count(self):
+        t0 = time.perf_counter()
+        tr = self._tracer_with([
+            TraceEvent("task", f"f{i}", i % 2, i % 3, t0 + i * 1e-4,
+                       t0 + i * 1e-4 + 5e-5, task_id=i,
+                       meta={"ok": True, "arr": np.zeros(2)})
+            for i in range(10)
+        ])
+        doc = json.loads(tr.to_chrome_trace())   # valid JSON by parse
+        assert doc["displayTimeUnit"] == "ms"
+        complete = [r for r in doc["traceEvents"] if r["ph"] == "X"]
+        assert len(complete) == len(tr.events())
+        for r in complete:
+            assert r["ts"] >= 0 and r["dur"] >= 0
+            assert isinstance(r["pid"], int) and isinstance(r["tid"], int)
+            assert "arr" not in r["args"]        # non-scalar meta filtered
+            assert r["args"]["ok"] is True
+        meta_recs = [r for r in doc["traceEvents"] if r["ph"] == "M"]
+        assert {r["name"] for r in meta_recs} == {"process_name",
+                                                  "thread_name"}
+
+    def test_chrome_trace_from_live_run(self):
+        api.runtime_start(n_workers=2, backend="thread")
+        try:
+            sq = api.task(lambda x: x * x, name="sq")
+            assert api.wait_on([sq(i) for i in range(8)]) == \
+                [i * i for i in range(8)]
+            rt = api.current_runtime()
+            doc = json.loads(rt.tracer.to_chrome_trace())
+            xs = [r for r in doc["traceEvents"] if r["ph"] == "X"
+                  and r["cat"] == "task"]
+            assert len(xs) == len(rt.tracer.events("task")) == 8
+        finally:
+            api.runtime_stop()
+
+
+# ----------------------------------------------------------------- the hub
+class TestTelemetryHub:
+    def test_heartbeat_latest_wins(self):
+        hub = TelemetryHub()
+        hub.note_heartbeat(0, {"plane_bytes": 1})
+        hub.note_heartbeat(0, {"plane_bytes": 2})
+        hub.note_heartbeat(1, {"plane_bytes": 9})
+        nodes = hub.nodes()
+        assert nodes[0]["count"] == 2
+        assert nodes[0]["payload"] == {"plane_bytes": 2}
+        assert nodes[1]["count"] == 1
+
+    def test_inflight_balances(self):
+        hub = TelemetryHub()
+        t = time.perf_counter()
+        hub.note_dispatch(1, "f", 0, 0, t)
+        hub.note_dispatch(2, "f", 1, 0, t)
+        assert hub.inflight() == {0: 2}
+        hub.note_task(1, "f", 0, 0, t, t, t + 1e-3, ok=True, retried=False)
+        assert hub.inflight() == {0: 1}
+        hub.note_task(2, "f", 1, 0, t, None, t + 1e-3, ok=False,
+                      retried=False)
+        assert hub.inflight() == {}
+        kinds = [e["kind"] for e in hub.stream.since(0)]
+        assert kinds == ["dispatch", "dispatch", "done", "fail"]
+
+    def test_heartbeat_interval_precedence(self, monkeypatch):
+        monkeypatch.delenv("RJAX_HEARTBEAT_S", raising=False)
+        assert heartbeat_interval(None) == 1.0
+        assert heartbeat_interval(0.25) == 0.25
+        assert heartbeat_interval(0) == 0.0          # welcome disables
+        monkeypatch.setenv("RJAX_HEARTBEAT_S", "0.5")
+        assert heartbeat_interval(0.25) == 0.5       # env wins
+        monkeypatch.setenv("RJAX_HEARTBEAT_S", "0")
+        assert heartbeat_interval(0.25) == 0.0       # env "0" disables
+        monkeypatch.setenv("RJAX_HEARTBEAT_S", "bogus")
+        assert heartbeat_interval(0.25) == 0.25      # bad env falls through
+
+    def test_in_process_sampler_process_backend(self):
+        rt = api.runtime_start(n_workers=2, backend="process",
+                               telemetry=True)
+        try:
+            rt.telemetry.sample_local(rt)   # deterministic tick
+            nodes = rt.telemetry.nodes()
+            assert "local" in nodes
+            payload = nodes["local"]["payload"]
+            assert payload["backend"] == "process"
+            assert "store_bytes_used" in payload   # memory-ledger gauge
+        finally:
+            api.runtime_stop()
+
+
+# --------------------------------------------------------- stats key parity
+class TestStatsParity:
+    def test_normalize_fills_missing_keys(self):
+        out = normalize_executor_stats({"backend": "thread"})
+        for k in EXECUTOR_STAT_KEYS:
+            assert out[k] == 0
+        assert out["p2p"] is False and out["backend"] == "thread"
+
+    @pytest.mark.parametrize("backend,kw", [
+        ("thread", {}),
+        ("process", {}),
+        ("cluster", {"n_agents": 2, "workers_per_node": 1}),
+    ])
+    def test_runtime_stats_uniform_schema(self, backend, kw):
+        api.runtime_start(n_workers=2, backend=backend, **kw)
+        try:
+            ex = api.runtime_stats()["executor"]
+        finally:
+            api.runtime_stop()
+        expected = set(EXECUTOR_STAT_KEYS) | {"backend", "p2p"}
+        assert expected <= set(ex.keys()), \
+            f"{backend} missing {expected - set(ex.keys())}"
+
+    def test_key_parity_across_backends(self):
+        keysets = {}
+        for backend, kw in [("thread", {}), ("process", {}),
+                            ("cluster", {"n_agents": 2,
+                                         "workers_per_node": 1})]:
+            api.runtime_start(n_workers=2, backend=backend, **kw)
+            try:
+                keysets[backend] = frozenset(
+                    api.runtime_stats()["executor"])
+            finally:
+                api.runtime_stop()
+        assert keysets["thread"] == keysets["process"] == keysets["cluster"]
+
+
+# --------------------------------------------------------- transfer matrix
+class TestTransferMatrix:
+    def test_relay_and_p2p_attribution(self):
+        st = ObjectStore()
+        k1, k2 = (1, 1), (2, 1)
+        st.put(k1, np.zeros(128), node=0)          # resident on node 0
+        st.note_location(k1, 1)                    # pulled by node 1: relay
+        st.put(k2, RemoteValue(token=7, node=2, addr="h:1", nbytes=1024),
+               node=2)
+        st.note_location(k2, 0, source=2)          # explicit peer source
+        rows = {(e["src"], e["dst"]): e["bytes"] for e in st.transfer_matrix()}
+        assert rows == {(-1, 1): 1024, (2, 0): 1024}
+        d = st.transfer_detail()
+        assert sum(b for (s, _), b in rows.items() if s >= 0) == d["p2p_bytes"]
+        assert sum(b for (s, _), b in rows.items() if s < 0) == \
+            d["scheduler_relay_bytes"]
+        assert d["matrix"] == st.transfer_matrix()
+
+    def test_reattribute_moves_matrix_cell(self):
+        st = ObjectStore()
+        k = (1, 1)
+        st.put(k, np.zeros(128), node=0)
+        st.note_location(k, 1)                     # booked as relay first
+        st.reattribute_to_p2p(k, 0, dest=1)        # transport was p2p
+        rows = {(e["src"], e["dst"]): e["bytes"] for e in st.transfer_matrix()}
+        assert rows == {(0, 1): 1024}
+        d = st.transfer_detail()
+        assert d["scheduler_relay_bytes"] == 0
+        assert d["p2p_bytes"] == 1024
+
+
+# ------------------------------------------------ live cluster + dashboard
+@pytest.fixture(scope="module")
+def dash_rt():
+    from repro.cluster import LocalCluster
+    cluster = LocalCluster(n_agents=3, workers_per_node=1)
+    cluster.heartbeat_s = 0.2   # fast beats for the test
+    r = api.runtime_start(backend="cluster", cluster=cluster,
+                          dashboard_port=0)
+    yield r
+    api.runtime_stop(wait=False)
+
+
+class TestLiveDashboard:
+    def _run_some_tasks(self):
+        gen = api.task(
+            lambda s, n: np.random.default_rng(s).standard_normal(n),
+            name="gen")
+        tot = api.task(lambda a, b: float(np.sum(a) + np.sum(b)),
+                       name="tot")
+        frags = [gen(i, 4096) for i in range(6)]
+        outs = [tot(frags[i], frags[(i + 1) % 6]) for i in range(6)]
+        api.wait_on(outs)
+
+    def test_heartbeats_arrive_from_every_agent(self, dash_rt):
+        self._run_some_tasks()
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            nodes = dash_rt.telemetry.nodes()
+            if len(nodes) == 3 and all(e["count"] >= 2
+                                       for e in nodes.values()):
+                break
+            time.sleep(0.1)
+        nodes = dash_rt.telemetry.nodes()
+        assert sorted(nodes) == [0, 1, 2]
+        for ent in nodes.values():
+            assert ent["count"] >= 2                  # periodic, not one-shot
+            payload = ent["payload"]
+            assert "plane_entries" in payload         # node-plane ledger
+            assert "p2p_fetches" in payload           # p2p ledger
+            assert "queued" in payload                # credit depth
+
+    def test_api_status(self, dash_rt):
+        st = _get_json(dash_rt.dashboard.url + "api/status")
+        assert st["backend"] == "cluster"
+        assert st["n_workers"] == 3
+        assert sorted(st["nodes"]) == ["0", "1", "2"]
+        for n in st["nodes"].values():
+            assert n["heartbeats"] >= 1
+            assert "plane_bytes" in n                 # memory gauge source
+        assert st["ring"]["seq"] > 0
+
+    def test_api_tasks_streams_ring(self, dash_rt):
+        self._run_some_tasks()
+        tk = _get_json(dash_rt.dashboard.url + "api/tasks?since=0")
+        kinds = {e["kind"] for e in tk["events"]}
+        assert {"submit", "dispatch", "done"} <= kinds
+        assert tk["last_seq"] == dash_rt.telemetry.stream.last_seq
+        # incremental polling: nothing new past the watermark
+        again = _get_json(dash_rt.dashboard.url +
+                          f"api/tasks?since={tk['last_seq']}")
+        assert again["events"] == []
+        done = [e for e in tk["events"] if e["kind"] == "done"]
+        assert all(e["t1"] >= e["t0"] for e in done)
+        # fetch/stall gap is derivable: t_run recorded for clean runs
+        assert any(e.get("t_run") is not None for e in done)
+
+    def test_api_transfers_matches_ledger(self, dash_rt):
+        self._run_some_tasks()
+        tr = _get_json(dash_rt.dashboard.url + "api/transfers")
+        d = dash_rt.store.transfer_detail()
+        assert tr["p2p_bytes"] == d["p2p_bytes"]
+        assert tr["scheduler_relay_bytes"] == d["scheduler_relay_bytes"]
+        mat_p2p = sum(e["bytes"] for e in tr["matrix"] if e["src"] >= 0)
+        mat_relay = sum(e["bytes"] for e in tr["matrix"] if e["src"] < 0)
+        assert mat_p2p == tr["p2p_bytes"]
+        assert mat_relay == tr["scheduler_relay_bytes"]
+        # ring traffic between 3 nodes: the matrix must show real p2p cells
+        assert mat_p2p > 0
+
+    def test_api_trace_and_page(self, dash_rt):
+        doc = _get_json(dash_rt.dashboard.url + "api/trace")
+        assert len([r for r in doc["traceEvents"] if r["ph"] == "X"]) > 0
+        with urllib.request.urlopen(dash_rt.dashboard.url,
+                                    timeout=10) as resp:
+            assert resp.status == 200
+            assert b"Task stream" in resp.read()
+
+    def test_api_trace_404(self, dash_rt):
+        import urllib.error
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(dash_rt.dashboard.url + "nope",
+                                   timeout=10)
