@@ -34,6 +34,14 @@ if the PR regresses against the committed ``benchmarks/BENCH_baseline.json``:
   number × 1.05 plus a 25 µs jitter slack.  This gate is PR-internal
   (both numbers come from the same box in the same run, interleaved),
   so no baseline entry is needed and no cross-hardware slack applies.
+* **control-plane flatness** (DESIGN.md §18) — per-task dispatch
+  overhead of a no-op fan-out at 8 agents may not exceed the same-run
+  2-agent number × 1.25 plus a 25 µs jitter slack, and the scheduler's
+  mid-run thread count at 8 agents may not exceed the 2-agent count
+  plus 1.  PR-internal like the telemetry gate: the point of the single
+  event-loop control plane is that neither number scales with agents
+  (the legacy plane grew a reader thread per agent and a dispatcher
+  thread per slot).
 
 Efficiency numbers are recorded in the artifact for trend tracking but
 not gated (CI runner variance swamps them).
@@ -57,6 +65,9 @@ EFF_TOLERANCE = 0.9              # linreg sim eff: calibration noise floor
 BCAST_TOLERANCE = 1.25           # scheduler-link copies per broadcast
 TELEMETRY_TOLERANCE = 1.05       # telemetry-on vs -off, same box same run...
 TELEMETRY_SLACK_US = 25.0        # ...plus the min-of-repeats jitter floor
+PLANE_TOLERANCE = 1.25           # 8-agent vs 2-agent dispatch, same run...
+PLANE_SLACK_US = 25.0            # ...plus the min-of-repeats jitter floor
+PLANE_THREAD_SLACK = 1           # transient helper thread racing the sample
 
 
 def deep_merge(dst: dict, src: dict) -> dict:
@@ -167,6 +178,36 @@ def check(pr: dict, baseline: dict) -> list:
                     f"telemetry_overhead_us: {on:.1f} us with telemetry on > "
                     f"{limit:.1f} us (off {off:.1f} × {TELEMETRY_TOLERANCE} "
                     f"+ {TELEMETRY_SLACK_US})")
+    cp = pr.get("multi_node", {}).get("control_plane")
+    if cp is None:
+        if baseline.get("multi_node", {}).get("control_plane"):
+            failures.append("multi_node.control_plane: missing from PR run")
+    else:
+        lo, hi = cp.get("2", {}), cp.get("8", {})
+        if not lo or not hi:
+            failures.append("multi_node.control_plane: incomplete (need "
+                            "2- and 8-agent rows)")
+        else:
+            limit = lo["per_task_us"] * PLANE_TOLERANCE + PLANE_SLACK_US
+            flat_ok = hi["per_task_us"] <= limit
+            thr_limit = lo["sched_threads"] + PLANE_THREAD_SLACK
+            thr_ok = hi["sched_threads"] <= thr_limit
+            status = "ok" if flat_ok and thr_ok else "FAIL"
+            print(f"  [{status}] control plane: dispatch "
+                  f"{lo['per_task_us']:.1f} us @2 -> {hi['per_task_us']:.1f} "
+                  f"us @8 agents (limit {limit:.1f}); threads "
+                  f"{lo['sched_threads']} -> {hi['sched_threads']} "
+                  f"(limit {thr_limit})")
+            if not flat_ok:
+                failures.append(
+                    f"control_plane: {hi['per_task_us']:.1f} us/task @8 "
+                    f"agents > {limit:.1f} (2-agent {lo['per_task_us']:.1f} "
+                    f"× {PLANE_TOLERANCE} + {PLANE_SLACK_US})")
+            if not thr_ok:
+                failures.append(
+                    f"control_plane: {hi['sched_threads']} scheduler threads "
+                    f"@8 agents > {thr_limit} — dispatch is growing threads "
+                    f"with agent count again")
     for where, ooc in iter_out_of_core(pr):
         spills = ooc.get("spills", 0) + ooc.get("node_spills", 0) \
             + ooc.get("plane_spills", 0)

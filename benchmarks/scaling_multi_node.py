@@ -205,6 +205,7 @@ def run_live(agent_counts=(1, 2), wpn: int = 2, json_path: str = None,
         ooc = run_live_out_of_core(wpn=wpn)
         dp = run_data_plane(wpn=wpn)
         coll = run_collectives(wpn=wpn)
+        cp = run_control_plane(wpn=wpn)
         top = max(agent_counts)
         base = min(agent_counts)
         payload = {"multi_node": {
@@ -217,6 +218,7 @@ def run_live(agent_counts=(1, 2), wpn: int = 2, json_path: str = None,
             "out_of_core": ooc,
             "data_plane": dp,
             "collectives": coll,
+            "control_plane": cp,
         }}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
@@ -325,6 +327,54 @@ def run_data_plane(wpn: int = 1) -> dict:
           f"p2p {on['p2p']} B (vs {off['relay']} B all-relay without p2p "
           f"= {out['relay_reduction_x']}x less scheduler-link traffic)")
     return out
+
+
+def run_control_plane(wpn: int = 1) -> dict:
+    """Dispatch-overhead flatness of the async control plane (DESIGN.md
+    §18): per-task wall time of a no-op fan-out at 2 vs 8 agents, and
+    the scheduler-side thread count sampled mid-run.  With the single
+    event-loop scheduler both must stay (near-)flat in the agent count —
+    the legacy plane grew a reader thread per agent plus a dispatcher
+    thread per slot.  Gated by bench_gate.py."""
+    import threading
+
+    from repro.core import api
+
+    n_tasks, repeats = 200, 3
+    out = {}
+    for n_agents in (2, 8):
+        api.runtime_start(backend="cluster", n_agents=n_agents,
+                          workers_per_node=wpn, tracing=False)
+        try:
+            t = api.task(_nop, name="nop")
+            # warm: agents registered, function shipped, pools forked
+            api.wait_on(api.map_tasks(
+                t, [(i,) for i in range(n_agents * wpn * 2)]))
+            best, threads = float("inf"), 0
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                futs = api.map_tasks(t, [(i,) for i in range(n_tasks)])
+                threads = max(threads, threading.active_count())
+                api.wait_on(futs)
+                best = min(best, time.perf_counter() - t0)
+            out[str(n_agents)] = {
+                "per_task_us": round(best / n_tasks * 1e6, 1),
+                "sched_threads": threads,
+            }
+        finally:
+            api.runtime_stop(wait=False)
+    r2, r8 = out["2"], out["8"]
+    out["overhead_ratio_8v2"] = round(
+        r8["per_task_us"] / max(r2["per_task_us"], 1e-9), 3)
+    print(f"control plane [async, wpn={wpn}]: no-op dispatch "
+          f"{r2['per_task_us']} us/task @2 agents -> {r8['per_task_us']} "
+          f"us/task @8 agents (ratio {out['overhead_ratio_8v2']}); "
+          f"scheduler threads {r2['sched_threads']} -> {r8['sched_threads']}")
+    return out
+
+
+def _nop(i):
+    return i
 
 
 def run_live_out_of_core(wpn: int = 1, budget: str = "400K") -> dict:

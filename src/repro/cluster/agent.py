@@ -47,13 +47,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core.config import add_agent_cli_args, resolve as resolve_knob
 from ..core.executors import ProcessExecutor, _loads_fn
-from ..core.telemetry import heartbeat_interval
+from ..core.telemetry import HEARTBEAT_DEFAULT_S
 from ..core.memory import (
     MemoryBudget,
     MemoryGovernor,
     SpilledValue,
-    budget_from_env,
     parse_bytes,
     spill_to_file,
     spillable,
@@ -61,6 +61,7 @@ from ..core.memory import (
 from ..core.serialization import as_c_contiguous
 from .peer import PEER_FETCH_TIMEOUT, DataServer, PeerFetchError, PeerPool
 from .protocol import (
+    DEFAULT_INLINE_MAX,
     ConnectionClosed,
     Fetch,
     Frame,
@@ -274,15 +275,22 @@ class NodeAgent:
     def __init__(self, address: str, workers: int,
                  node_id: Optional[int] = None,
                  mp_context: Optional[str] = None,
-                 memory_budget=None):
+                 memory_budget=None,
+                 heartbeat_s=None,
+                 inline_max=None):
         host, _, port = address.rpartition(":")
         self.addr = (host or "127.0.0.1", int(port))
         self.workers = int(workers)
         self.node_id = node_id
         self._mp_context = mp_context
-        # explicit (CLI) budget wins; otherwise the scheduler's welcome
-        # message may carry one; otherwise RJAX_MEMORY_BUDGET
+        # every knob resolves through the one precedence rule
+        # (core/config.py): CLI flag > this host's env var > the
+        # scheduler's welcome value > built-in default.  The welcome
+        # tier is filled in by run(); constructor values are the CLI
+        # (explicit) tier.
         self.memory_budget = parse_bytes(memory_budget)
+        self._heartbeat_cli = None if heartbeat_s is None else float(heartbeat_s)
+        self._inline_cli = None if inline_max is None else int(inline_max)
         self.plane = NodePlane()
         self.pool: Optional[ProcessExecutor] = None
         self.sock: Optional[socket.socket] = None
@@ -296,8 +304,7 @@ class NodeAgent:
                               fd_hooks=(self._track_fd, self._untrack_fd))
         self.p2p = True
         self.heartbeat_s = 0.0   # settled by the welcome handshake
-        self._inline_env = os.environ.get("RJAX_INLINE_MAX")
-        self.inline_max = inline_max_from_env()
+        self.inline_max = inline_max_from_env(self._inline_cli)
         self._send_lock = threading.Lock()
         self._slot_queues: List[queue.Queue] = []
         self._fns: Dict[int, Any] = {}
@@ -365,12 +372,16 @@ class NodeAgent:
         assert welcome.get("op") == "welcome", welcome
         self.node_id = welcome["node_id"]
         self.p2p = bool(welcome.get("p2p", True))
-        self.heartbeat_s = heartbeat_interval(welcome.get("heartbeat_s"))
-        if self._inline_env is None and welcome.get("inline_max") is not None:
-            self.inline_max = max(0, int(welcome["inline_max"]))
-        budget = self.memory_budget
-        if budget is None:
-            budget = budget_from_env(welcome.get("memory_budget"))
+        # CLI > env > welcome > default, uniformly (core/config.py)
+        self.heartbeat_s = max(0.0, resolve_knob(
+            self._heartbeat_cli, "RJAX_HEARTBEAT_S",
+            welcome.get("heartbeat_s"), HEARTBEAT_DEFAULT_S, float))
+        self.inline_max = max(0, resolve_knob(
+            self._inline_cli, "RJAX_INLINE_MAX",
+            welcome.get("inline_max"), DEFAULT_INLINE_MAX, int))
+        budget = resolve_knob(
+            self.memory_budget, "RJAX_MEMORY_BUDGET",
+            welcome.get("memory_budget"), None, parse_bytes)
         if budget is not None:
             # both node-local tiers are governed: the wire-facing plane
             # spills to mmap files, the intra-node shm plane drops
@@ -762,7 +773,10 @@ def _keyed_arrays(structure, plane):
 
 
 # ------------------------------------------------------------------------ CLI
-def main(argv=None) -> int:
+def build_arg_parser() -> argparse.ArgumentParser:
+    """The agent CLI: topology flags here, every tunable knob mirrored
+    from :class:`repro.core.config.RuntimeConfig` (one source of truth
+    for flag/env/welcome precedence — the flag is the explicit tier)."""
     p = argparse.ArgumentParser(
         prog="python -m repro.cluster.agent",
         description="RJAX cluster node agent: connect to a scheduler and "
@@ -774,14 +788,12 @@ def main(argv=None) -> int:
                    help="worker processes in this node's pool (default 2)")
     p.add_argument("--node-id", type=int, default=None,
                    help="node ordinal (assigned by the scheduler if omitted)")
-    p.add_argument("--mp-context", default=None,
-                   help="multiprocessing start method for the pool "
-                        "(fork/spawn; default from RJAX_MP_CONTEXT)")
-    p.add_argument("--memory-budget", default=None, metavar="BYTES",
-                   help="node object-plane budget, e.g. 256M or 2G "
-                        "(default: the scheduler's welcome value, then "
-                        "RJAX_MEMORY_BUDGET, then unbounded)")
-    args = p.parse_args(argv)
+    add_agent_cli_args(p)   # --memory-budget / --mp-context / --inline-max
+    return p                # / --heartbeat-s, docs from RuntimeConfig
+
+
+def main(argv=None) -> int:
+    args = build_arg_parser().parse_args(argv)
 
     # SIGTERM's default action skips all cleanup, which would orphan the
     # daemon pool workers (they inherit pipes/stdio and can linger
@@ -796,7 +808,9 @@ def main(argv=None) -> int:
 
     agent = NodeAgent(args.connect, args.workers, node_id=args.node_id,
                       mp_context=args.mp_context,
-                      memory_budget=args.memory_budget)
+                      memory_budget=args.memory_budget,
+                      heartbeat_s=args.heartbeat_s,
+                      inline_max=args.inline_max)
     try:
         agent.run()
     except KeyboardInterrupt:

@@ -71,6 +71,11 @@ class LocalCluster:
         # welcome like the knobs above; an agent's own RJAX_HEARTBEAT_S
         # wins.  None = let agents use their default
         self.heartbeat_s: Optional[float] = None
+        # how accepted/respawned connections become channel objects: the
+        # async control plane (DESIGN.md §18) swaps in AsyncAgentChannel
+        # bound to its IOLoop; the default is the legacy thread-per-
+        # channel reader
+        self.channel_factory = AgentChannel
         self._lock = threading.Lock()
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -155,7 +160,7 @@ class LocalCluster:
                             "memory_budget": self.memory_budget,
                             "p2p": self.p2p, "inline_max": self.inline_max,
                             "heartbeat_s": self.heartbeat_s})
-            channels[nid] = AgentChannel(conn, nid, hello)
+            channels[nid] = self.channel_factory(conn, nid, hello)
         return channels
 
     def respawn(self, i: int, timeout: float = 60.0) -> AgentChannel:
@@ -174,7 +179,7 @@ class LocalCluster:
                             "memory_budget": self.memory_budget,
                             "p2p": self.p2p, "inline_max": self.inline_max,
                             "heartbeat_s": self.heartbeat_s})
-            return AgentChannel(conn, i, hello)
+            return self.channel_factory(conn, i, hello)
 
     # ------------------------------------------------------------ teardown
     def shutdown(self, timeout: float = 5.0) -> None:

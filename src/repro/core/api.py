@@ -34,6 +34,7 @@ import functools
 import threading
 from typing import Any, Callable, Iterable, List, Optional
 
+from .config import RuntimeConfig
 from .fault import RetryPolicy, SpeculationConfig
 from .runtime import Runtime
 
@@ -41,24 +42,22 @@ _lock = threading.Lock()
 _runtime: Optional[Runtime] = None
 
 
-def runtime_start(
-    n_workers: int = 4,
-    workers_per_node: Optional[int] = None,
-    policy: str = "fifo",
-    tracing: bool = True,
-    max_retries: int = 0,
-    speculation: bool = False,
-    speculation_factor: float = 3.0,
-    backend: str = "thread",
-    cluster=None,
-    n_agents: Optional[int] = None,
-    memory_budget=None,
-    spill_dir: Optional[str] = None,
-    pipeline_depth: Optional[int] = None,
-    telemetry: Optional[bool] = None,
-    dashboard_port: Optional[int] = None,
-) -> Runtime:
+def runtime_start(n_workers: Optional[int] = None, *,
+                  config: Optional[RuntimeConfig] = None,
+                  **kwargs: Any) -> Runtime:
     """Initialize the global runtime (``compss_start``).
+
+    Configuration is one :class:`repro.core.config.RuntimeConfig`
+    (DESIGN.md §18): pass ``config=RuntimeConfig(...)``, plain keyword
+    arguments (every pre-existing ``runtime_start`` kwarg is a
+    ``RuntimeConfig`` field, so old call sites run unmodified), or both —
+    explicit kwargs override the config object, and unset knobs fall
+    through env vars to the built-in defaults under the one documented
+    precedence rule (explicit > env > welcome > default).  The returned
+    runtime is a context manager::
+
+        with api.runtime_start(backend="cluster", n_agents=2) as rt:
+            ...                       # runtime_stop guaranteed on exit
 
     ``backend`` selects the executor model (see
     :mod:`repro.core.executors`): ``"thread"`` runs task bodies on the
@@ -95,24 +94,19 @@ def runtime_start(
     ``telemetry=True``); ``RJAX_DASHBOARD=<port>`` does the same from
     the environment."""
     global _runtime
+    cfg = config if config is not None else RuntimeConfig()
+    if n_workers is not None:
+        kwargs = dict(kwargs, n_workers=n_workers)
+    cfg = cfg.merged(**kwargs)   # kwargs > config; unknown kwarg raises
     with _lock:
         if _runtime is not None and not _runtime._stopped:
             raise RuntimeError("runtime already started; call runtime_stop() first")
         _runtime = Runtime(
-            n_workers=n_workers,
-            workers_per_node=workers_per_node,
-            policy=policy,
-            tracing=tracing,
-            retry=RetryPolicy(max_retries=max_retries),
-            speculation=SpeculationConfig(enabled=speculation, factor=speculation_factor),
-            backend=backend,
-            cluster=cluster,
-            n_agents=n_agents,
-            memory_budget=memory_budget,
-            spill_dir=spill_dir,
-            pipeline_depth=pipeline_depth,
-            telemetry=telemetry,
-            dashboard_port=dashboard_port,
+            retry=RetryPolicy(max_retries=cfg.resolved("max_retries")),
+            speculation=SpeculationConfig(
+                enabled=cfg.resolved("speculation"),
+                factor=cfg.resolved("speculation_factor")),
+            **cfg.runtime_kwargs(),
         )
         return _runtime
 
@@ -144,6 +138,20 @@ def runtime_stop(wait: bool = True) -> dict:
         stats = rt.stats()
         _runtime = None
         return stats
+
+
+def _release_runtime(rt: Runtime, wait: bool = True) -> None:
+    """``Runtime.__exit__``'s half of ``runtime_stop``: stop ``rt``
+    (idempotent — an explicit ``runtime_stop()`` inside the ``with``
+    body already did it) and clear the module-level current runtime if
+    this instance is still it."""
+    global _runtime
+    with _lock:
+        try:
+            rt.stop(wait=wait)
+        finally:
+            if _runtime is rt:
+                _runtime = None
 
 
 class TaskFunction:

@@ -829,7 +829,12 @@ class ExecutorBackend:
         completion path (success or failure)."""
 
     def stats(self) -> dict:
-        return {"backend": self.name}
+        # every backend reports how its dispatch side is driven, for
+        # stats-key parity across backends: the in-process and pool
+        # executors use per-worker dispatcher threads; the cluster
+        # executor overrides this with its control-plane knob
+        # (DESIGN.md §18)
+        return {"backend": self.name, "control_plane": "threads"}
 
 
 class ThreadExecutor(ExecutorBackend):
@@ -1332,7 +1337,8 @@ class ProcessExecutor(ExecutorBackend):
         self.plane.close()
 
     def stats(self) -> dict:
-        s = {"backend": self.name, "worker_restarts": self.worker_restarts,
+        s = {"backend": self.name, "control_plane": "threads",
+             "worker_restarts": self.worker_restarts,
              "pipeline_depth": self.pipeline_depth,
              "descriptor_sends": self.descriptor_sends,
              "batched_sends": self.batched_sends}
@@ -1343,14 +1349,18 @@ class ProcessExecutor(ExecutorBackend):
 class ClusterExecutor(ExecutorBackend):
     """Dispatch tasks to TCP node agents (DESIGN.md §12).
 
-    One dispatcher thread per remote worker *slot* (``n_agents ×
-    workers_per_node`` in total); slot ``worker`` maps to agent
-    ``worker // workers_per_node``, which is also the task's locality
-    domain, so the ``locality`` policy scores real cross-node residency.
-    Each slot streams up to ``pipeline_depth`` task requests before any
-    completion arrives (DESIGN.md §14); the agent's reader enqueues them
-    on the slot's queue in wire order, and the channel's reader thread
-    routes replies straight into the completion path.
+    Slot ``worker`` maps to agent ``worker // workers_per_node``, which
+    is also the task's locality domain, so the ``locality`` policy
+    scores real cross-node residency.  Each slot streams up to
+    ``pipeline_depth`` task requests before any completion arrives
+    (DESIGN.md §14).
+
+    Two control planes (``RJAX_CONTROL_PLANE`` / the ``control_plane``
+    knob, DESIGN.md §18): the default ``async`` plane runs every channel
+    as a coroutine pair on one IOLoop thread and dispatches from a loop
+    pump — scheduler-side thread count is O(1) in agent count; the
+    legacy ``threads`` plane keeps one dispatcher thread per slot and
+    one reader thread per channel, with replies routed on the reader.
 
     Data plane: the scheduler keeps the authoritative copy of every datum
     (v1 is scheduler-mediated transfer) and tracks, per agent, which keys
@@ -1383,8 +1393,9 @@ class ClusterExecutor(ExecutorBackend):
     remote_values_ok = True
 
     def __init__(self, n_workers: int, label: str = "rjax", cluster=None,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: int = 1, p2p=None, control_plane=None):
         super().__init__(n_workers, label, pipeline_depth=pipeline_depth)
+        from .config import parse_bool, resolve as resolve_knob
         if cluster is None:
             raise ValueError(
                 'backend="cluster" needs a cluster= harness '
@@ -1398,8 +1409,22 @@ class ClusterExecutor(ExecutorBackend):
                 f"workers_per_node({self.wpn})")
         # peer data plane kill-switch: RJAX_P2P=0 restores the PR-4
         # star topology (every result framed back to the scheduler)
-        self.p2p = os.environ.get("RJAX_P2P", "1").lower() not in (
-            "0", "false", "off", "no")
+        self.p2p = resolve_knob(p2p, "RJAX_P2P", default=True,
+                                cast=parse_bool)
+        # scheduler comm layer (DESIGN.md §18): "async" = one IOLoop
+        # thread owns every channel + the dispatch pump (O(1) threads in
+        # agent count); "threads" = the legacy reader-thread-per-channel
+        # + dispatcher-thread-per-slot structure
+        self.control_plane = resolve_knob(
+            control_plane, "RJAX_CONTROL_PLANE", default="async")
+        if self.control_plane not in ("async", "threads"):
+            raise ValueError(
+                f"control_plane must be 'async' or 'threads', "
+                f"got {self.control_plane!r}")
+        self.async_plane = self.control_plane == "async"
+        self._io = None            # IOLoop (async control plane only)
+        self._recovery = None      # small pool for blocking recovery work
+        self._agent_up = [True] * self.n_agents
         self._channels: List[Any] = [None] * self.n_agents
         self._data_addrs: List[Optional[str]] = [None] * self.n_agents
         self._order_locks = [threading.Lock() for _ in range(self.n_agents)]
@@ -1444,16 +1469,44 @@ class ClusterExecutor(ExecutorBackend):
         # from the scheduler's environment so off-host agents beat in step
         if getattr(self.cluster, "heartbeat_s", None) is None:
             self.cluster.heartbeat_s = heartbeat_interval()
+        if self.async_plane:
+            from ..cluster.eventloop import AsyncAgentChannel, IOLoop
+            self._io = IOLoop(name=f"{self.label}-io")
+            # every accepted/respawned agent connection becomes a
+            # coroutine pair on the one loop instead of a reader thread
+            self.cluster.channel_factory = (
+                lambda sock, nid, hello: AsyncAgentChannel(
+                    sock, nid, hello, io=self._io))
         try:
             self._channels = self.cluster.accept_agents()
         except Exception:
             self.cluster.shutdown()
+            if self._io is not None:
+                self._io.stop()
             raise
         self._peers = PeerPool(label=f"{self.label}-sched")
         for a, ch in enumerate(self._channels):
             self._install_channel(a, ch)
         runtime.store.set_fetcher(self._fetch_remote)
-        super().start(runtime)
+        if not self.async_plane:
+            super().start(runtime)
+            return
+        # async control plane (DESIGN.md §18): no dispatcher threads.
+        # The scheduler's ready hook and every completion re-enter the
+        # dispatch pump on the loop; blocking recovery work (agent
+        # respawn, lost-input waits) is offloaded to a 2-thread pool so
+        # the loop never stalls — total scheduler-side thread count is
+        # O(1) in agent count.
+        from concurrent.futures import ThreadPoolExecutor
+        from .runtime import InputsPending
+        self._inputs_pending = InputsPending
+        self.runtime = runtime
+        self._credits = [threading.Semaphore(self.pipeline_depth)
+                         for _ in range(self.n_workers)]
+        self._recovery = ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix=f"{self.label}-recover")
+        runtime.scheduler.on_ready = self._schedule_pump
+        self._io.call_soon(self._pump)
 
     def _install_channel(self, a: int, ch) -> None:
         self._data_addrs[a] = ch.data_addr()
@@ -1475,8 +1528,84 @@ class ClusterExecutor(ExecutorBackend):
         """Connection-death hook: recover even when nothing was in
         flight — the dead node may hold the only copy of published
         results (DESIGN.md §15)."""
-        if not self._closing:
+        if self._closing:
+            return
+        if self.async_plane:
+            self._kick_restart(a, ch)
+        else:
             self._restart_agent(a, ch)
+
+    # -- async dispatch pump (DESIGN.md §18) ---------------------------------
+    def _schedule_pump(self) -> None:
+        io = self._io
+        if io is not None and not self._stop_dispatch:
+            io.call_soon(self._pump)
+
+    def _pump(self) -> None:
+        """The dispatch loop, as a loop callback: drain ready tasks into
+        free credits, no dispatcher threads.  Runs on the IOLoop, so it
+        must never block — credit acquire and scheduler take are
+        non-blocking polls, and input resolution that would wait (a
+        lost-node recovery race) is offloaded to the recovery pool."""
+        rt = self.runtime
+        if rt is None or self._stop_dispatch:
+            return
+        for worker in range(self.n_workers):
+            if not self._agent_up[worker // self.wpn]:
+                continue
+            credits = self._credits[worker]
+            node_id = rt.locality_domain(worker)
+            while credits.acquire(blocking=False):
+                if self._stop_dispatch:
+                    credits.release()
+                    return
+                tid = rt.scheduler.take(worker, timeout=0)
+                if tid is None:
+                    credits.release()
+                    break
+                rt._note_worker_busy()
+                try:
+                    ex = rt.begin_task(tid, worker, node_id,
+                                       block_inputs=False)
+                except self._inputs_pending as pend:
+                    self._recovery.submit(self._resume_begin, worker, pend)
+                    continue
+                if ex is None:   # cancelled / completed during resolution
+                    rt._note_worker_idle()
+                    credits.release()
+                    continue
+                self._submit_pipelined(worker, ex)
+
+    def _resume_begin(self, worker: int, pend) -> None:
+        """Recovery-pool tail of a non-blocking ``begin_task``: wait for
+        the straggling input (or its error) off the loop, then submit."""
+        rt = self.runtime
+        ex = rt.resume_begin(pend)
+        if ex is None:
+            rt._note_worker_idle()
+            self._credits[worker].release()
+            self._schedule_pump()
+            return
+        self._submit_pipelined(worker, ex)
+
+    def _kick_restart(self, a: int, ch) -> None:
+        """Route an agent death to the recovery pool: respawn blocks on
+        process spawn + handshake, which must never run on the loop.
+        The agent's workers are skipped by the pump until the
+        replacement is up."""
+        if self._closing:
+            return
+        self._agent_up[a] = False
+
+        def work():
+            try:
+                self._restart_agent(a, ch)
+            finally:
+                new_ch = self._channels[a]
+                self._agent_up[a] = new_ch is not None and not new_ch.closed
+                self._schedule_pump()
+
+        self._recovery.submit(work)
 
     def _fetch_remote(self, key, rv, timeout=None):
         """The store's gather-path materializer: pull a node-resident
@@ -1497,6 +1626,9 @@ class ClusterExecutor(ExecutorBackend):
         self._halt_dispatch()
         if self.runtime is not None:
             self.runtime.store.set_fetcher(None)
+            sched = getattr(self.runtime, "scheduler", None)
+            if sched is not None and getattr(sched, "on_ready", None) is not None:
+                sched.on_ready = None
         for ch in self._channels:
             if ch is not None and not ch.closed:
                 try:
@@ -1504,6 +1636,10 @@ class ClusterExecutor(ExecutorBackend):
                 except ConnectionClosed:
                     pass
         super().shutdown(wait=wait, timeout=timeout)
+        if self._recovery is not None:
+            # pending respawns observe _closing and exit fast; an
+            # in-flight one must not wedge shutdown
+            self._recovery.shutdown(wait=False, cancel_futures=True)
         if self._peers is not None:
             self._peers.close()
         for ch in self._channels:
@@ -1513,6 +1649,8 @@ class ClusterExecutor(ExecutorBackend):
             self.cluster.shutdown()
         except Exception:
             pass
+        if self._io is not None:
+            self._io.stop()
 
     # -- pipelined dispatch --------------------------------------------------
     def _submit_pipelined(self, worker: int, ex) -> None:
@@ -1520,6 +1658,14 @@ class ClusterExecutor(ExecutorBackend):
         a, slot = divmod(worker, self.wpn)
         ch = self._channels[a]
         if ch is None or ch.closed:
+            if self.async_plane:
+                # never respawn inline (it blocks); fail retryably and
+                # let the recovery pool bring the agent back
+                if not self._closing:
+                    self._kick_restart(a, ch)
+                self._finish_cluster(worker, ex, error=WorkerCrashedError(
+                    f"node agent {a} is down"))
+                return
             if not self._closing:
                 self._restart_agent(a, ch)   # no-op if already replaced
             ch = self._channels[a]
@@ -1579,7 +1725,10 @@ class ClusterExecutor(ExecutorBackend):
                                 st.reattribute_to_p2p(k, src[0], dest=a)
         except (ConnectionClosed, OSError) as err:
             if not self._closing:
-                self._restart_agent(a, ch)
+                if self.async_plane:
+                    self._kick_restart(a, ch)
+                else:
+                    self._restart_agent(a, ch)
             crash = WorkerCrashedError(
                 f"node agent {a} died executing "
                 f"{getattr(t.fn, '__name__', t.fn)!r}")
@@ -1623,7 +1772,10 @@ class ClusterExecutor(ExecutorBackend):
         drainer): exactly one call per streamed task."""
         if err is not None:
             if not self._closing:
-                self._restart_agent(a, ch)
+                if self.async_plane:
+                    self._kick_restart(a, ch)
+                else:
+                    self._restart_agent(a, ch)
             crash = WorkerCrashedError(
                 f"node agent {a} died with task {ex.t.name!r} in flight")
             crash.__cause__ = err
@@ -1670,6 +1822,10 @@ class ClusterExecutor(ExecutorBackend):
             self.task_done()
             rt._note_worker_idle()
             self._credits[worker].release()
+            if self.async_plane:
+                # a freed credit is dispatch capacity: re-enter the pump
+                # (inline when the completion already runs on the loop)
+                self._schedule_pump()
 
     def _remote_error(self, rmeta: dict) -> BaseException:
         return _rebuild_remote_error(rmeta.get("exc"), rmeta.get("tb"))
@@ -2009,6 +2165,7 @@ class ClusterExecutor(ExecutorBackend):
             "n_agents": self.n_agents,
             "workers_per_node": self.wpn,
             "pipeline_depth": self.pipeline_depth,
+            "control_plane": self.control_plane,
             "agent_restarts": self.agent_restarts,
             "p2p": self.p2p,
             "broadcasts": self.broadcasts,

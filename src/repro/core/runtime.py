@@ -53,6 +53,14 @@ DEFAULT_PIPELINE_DEPTH = 4
 # unreachable datum still fails instead of looping
 LOST_INPUT_RETRIES = int(os.environ.get("RJAX_LOST_INPUT_RETRIES", 3))
 
+# pacing for lost-input retries (per-attempt backoff slope, capped at 1s):
+# a lost input can only be refetched after lineage recovery has respawned
+# the dead node and re-executed the producer (~seconds), so an immediate
+# requeue hot-spins through the whole retry allowance in milliseconds —
+# the async control plane (DESIGN.md §18) re-dispatches fast enough to
+# burn 7 attempts before the replacement agent even registers
+LOST_INPUT_BACKOFF_S = 0.25
+
 
 def pipeline_depth_from_env(explicit: Optional[int] = None) -> int:
     if explicit is not None:
@@ -110,6 +118,24 @@ class TaskExecution:
         self.node_id = node_id
 
 
+class _InputsNotReady(Exception):
+    """Internal: ``_resolve_inputs(block=False)`` found an input that is
+    not immediately in the store."""
+
+
+class InputsPending(Exception):
+    """A ``begin_task(..., block_inputs=False)`` claim whose input
+    resolution would block (DESIGN.md §18).  Carries everything
+    ``Runtime.resume_begin`` needs to finish the claim off the loop."""
+
+    def __init__(self, t, worker: int, node_id: int, t0: float):
+        super().__init__(getattr(t, "name", None))
+        self.t = t
+        self.worker = worker
+        self.node_id = node_id
+        self.t0 = t0
+
+
 class Runtime:
     def __init__(
         self,
@@ -128,6 +154,10 @@ class Runtime:
         pipeline_depth: Optional[int] = None,
         telemetry: Optional[bool] = None,
         dashboard_port: Optional[int] = None,
+        control_plane: Optional[str] = None,
+        inline_max: Optional[int] = None,
+        heartbeat_s: Optional[float] = None,
+        p2p: Optional[bool] = None,
     ):
         # memory governance (DESIGN.md §13): explicit knob beats
         # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
@@ -153,10 +183,22 @@ class Runtime:
             n_workers = cluster.n_agents * cluster.workers_per_node
             workers_per_node = cluster.workers_per_node
             backend_opts["cluster"] = cluster
+            if control_plane is not None:
+                backend_opts["control_plane"] = control_plane
+            if p2p is not None:
+                backend_opts["p2p"] = p2p
             # agents learn the budget from the welcome handshake (their
             # own --memory-budget flag wins; see repro.cluster.agent)
             if self.memory_budget and getattr(cluster, "memory_budget", None) is None:
                 cluster.memory_budget = self.memory_budget
+            # likewise the inline threshold and heartbeat cadence: an
+            # explicit runtime_start knob seeds the welcome defaults
+            # (each agent's own flag/env still wins locally — one
+            # precedence rule, see core/config.py)
+            if inline_max is not None and getattr(cluster, "inline_max", None) is None:
+                cluster.inline_max = int(inline_max)
+            if heartbeat_s is not None and getattr(cluster, "heartbeat_s", None) is None:
+                cluster.heartbeat_s = float(heartbeat_s)
         self.n_workers = int(n_workers)
         self.backend = backend
         self.cluster = cluster
@@ -401,7 +443,8 @@ class Runtime:
         return futures_out
 
     # ------------------------------------------------------- input resolution
-    def _resolve_inputs(self, t: TaskNode, node_id: int) -> Tuple[tuple, dict, Dict[int, Tuple[int, int]]]:
+    def _resolve_inputs(self, t: TaskNode, node_id: int, block: bool = True
+                        ) -> Tuple[tuple, dict, Dict[int, Tuple[int, int]]]:
         nbytes_in = 0
         input_keys: Dict[int, Tuple[int, int]] = {}
         # a backend that understands RemoteValue placeholders (the cluster
@@ -415,7 +458,12 @@ class Runtime:
                 v = self.store.get_nowait(f.key, materialize=materialize)
             except KeyError:
                 # value arrived concurrently (or is being re-executed
-                # after its home node died); block briefly
+                # after its home node died); block briefly — unless the
+                # caller is the event-loop pump (DESIGN.md §18), which
+                # must never wait: it re-enters via ``resume_begin`` on
+                # a recovery thread instead
+                if not block:
+                    raise _InputsNotReady()
                 try:
                     v = self.store.get(f.key, timeout=30.0,
                                        materialize=materialize)
@@ -441,12 +489,17 @@ class Runtime:
         return args, kwargs, input_keys
 
     # --------------------------------------------------------- task lifecycle
-    def begin_task(self, tid: int, worker: int, node_id: int
-                   ) -> Optional[TaskExecution]:
+    def begin_task(self, tid: int, worker: int, node_id: int,
+                   block_inputs: bool = True) -> Optional[TaskExecution]:
         """Claim ``tid`` and resolve its inputs.  Returns ``None`` when the
         task was cancelled before start (lost speculation race) or input
         resolution already completed it (poisoned input / resolve error) —
-        in both cases no completion call must follow."""
+        in both cases no completion call must follow.
+
+        With ``block_inputs=False`` (the async control plane's pump), an
+        input that is not immediately in the store raises
+        :class:`InputsPending` instead of waiting; finish the claim off
+        the loop with :meth:`resume_begin`."""
         t = self.graph.claim_running(tid, worker, node_id)
         if t is None:
             return None  # cancelled before start (lost speculation race)
@@ -454,8 +507,17 @@ class Runtime:
         if self.telemetry.enabled:
             self.telemetry.note_dispatch(t.task_id, t.name, worker,
                                          node_id, t0)
+        return self._begin_resolve(t, worker, node_id, t0,
+                                   block=block_inputs)
+
+    def _begin_resolve(self, t: TaskNode, worker: int, node_id: int,
+                       t0: float, block: bool = True
+                       ) -> Optional[TaskExecution]:
         try:
-            args, kwargs, input_keys = self._resolve_inputs(t, node_id)
+            args, kwargs, input_keys = self._resolve_inputs(t, node_id,
+                                                            block=block)
+        except _InputsNotReady:
+            raise InputsPending(t, worker, node_id, t0)
         except PoisonedInputError as err:
             self._finish_failure(t, err, retryable=False)
             self._trace_task(t, worker, node_id, t0, ok=False)
@@ -465,6 +527,14 @@ class Runtime:
             return None
         return TaskExecution(t, args, kwargs, input_keys, t0, worker, node_id,
                              t_run=time.perf_counter())
+
+    def resume_begin(self, pend: "InputsPending") -> Optional[TaskExecution]:
+        """Blocking tail of a ``begin_task(..., block_inputs=False)``
+        that raised :class:`InputsPending` — same contract as
+        ``begin_task`` (the claim is already made; errors are handled
+        internally, never raised)."""
+        return self._begin_resolve(pend.t, pend.worker, pend.node_id,
+                                   pend.t0, block=True)
 
     def complete_task(self, ex: TaskExecution, result: Any) -> None:
         """Successful body execution: publish outputs, release children."""
@@ -486,14 +556,19 @@ class Runtime:
                            worker: int, node_id: int, t0: float,
                            t_run: Optional[float] = None) -> None:
         allowed = t.max_retries
+        backoff = self.retry.backoff_seconds
         if getattr(err, "lost_input", False):
             allowed += LOST_INPUT_RETRIES
+            # pace the retry: the datum only reappears once recovery has
+            # re-executed its producer (see LOST_INPUT_BACKOFF_S)
+            backoff = max(backoff,
+                          min(1.0, LOST_INPUT_BACKOFF_S * t.attempts))
         if self.retry.should_retry(t.attempts, allowed, err):
-            if self.retry.backoff_seconds:
+            if backoff:
                 # completions run on shared threads (the pool collector, a
                 # channel reader) — a blocking sleep there would stall
                 # every worker's completions, so backoff is a timer
-                timer = threading.Timer(self.retry.backoff_seconds,
+                timer = threading.Timer(backoff,
                                         self._requeue_retry, args=(t.task_id,))
                 timer.daemon = True
                 timer.start()
@@ -750,7 +825,11 @@ class Runtime:
         return _walk(obj, lambda f: f.result(timeout=timeout))
 
     def stop(self, wait: bool = True) -> None:
-        """``compss_stop``: optionally drain, then shut the pool down."""
+        """``compss_stop``: optionally drain, then shut the pool down.
+        Idempotent — a second call (e.g. explicit ``runtime_stop``
+        followed by the context manager's exit) is a no-op."""
+        if self._stopped:
+            return
         if wait:
             self.barrier()
         self._stopped = True
@@ -761,6 +840,18 @@ class Runtime:
         self.executor.shutdown(wait=wait)
         self.tracer.stop()
         self.store.dispose_spills()
+
+    # ---------------------------------------------------------- with-statement
+    def __enter__(self) -> "Runtime":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        """Guaranteed teardown for ``with runtime_start(...) as rt:`` —
+        drain on the clean path, tear down immediately (no barrier) when
+        the body raised.  Also clears the module-level current runtime
+        if this instance is still it."""
+        from . import api
+        api._release_runtime(self, wait=exc_type is None)
 
     # --------------------------------------------------------------- metrics
     def stats(self) -> dict:

@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from .dag import TaskGraph
 from .futures import ObjectStore
@@ -99,6 +99,11 @@ class Scheduler:
         # before the task is pushed, consumed when it is taken
         self._hints: Dict[int, int] = {}
         self._closed = False
+        # ready hook (DESIGN.md §18): the async control plane sets this
+        # to re-enter its dispatch pump when tasks become ready — there
+        # are no dispatcher threads parked in take() to notify.  Fired
+        # OUTSIDE the scheduler lock (the hook schedules loop work).
+        self.on_ready: Optional[Callable[[], None]] = None
 
     # ------------------------------------------------------------------ admin
     def node_of(self, worker: int) -> int:
@@ -130,6 +135,9 @@ class Scheduler:
                 self._queue.append(task_id)
             self._qsize += 1
             self._cond.notify()
+        cb = self.on_ready
+        if cb is not None:
+            cb()
 
     def push_many(self, task_ids: List[int]) -> None:
         if not task_ids:
@@ -141,6 +149,9 @@ class Scheduler:
             # notify_all here stampedes every idle dispatcher through the
             # lock only for most to go back to sleep
             self._cond.notify(len(task_ids))
+        cb = self.on_ready
+        if cb is not None:
+            cb()
 
     # ------------------------------------------------------------------- take
     def take(self, worker: int, timeout: Optional[float] = None) -> Optional[int]:

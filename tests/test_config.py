@@ -1,0 +1,194 @@
+"""The unified RuntimeConfig contract (DESIGN.md §18).
+
+Three properties pinned here:
+
+1. **No orphan knobs** — every ``RJAX_*`` env var mentioned anywhere in
+   ``src/`` is declared as a :class:`RuntimeConfig` field, so the README
+   knob table (generated from the dataclass) is complete by construction.
+2. **One precedence rule** — explicit > env > welcome > default, via the
+   single ``resolve()`` implementation every consumer routes through.
+3. **API compatibility** — old ``runtime_start(**kwargs)`` call sites run
+   unmodified, ``config=`` composes with kwargs, unknown kwargs raise
+   ``TypeError``, and the returned runtime is a context manager that
+   stops on exit (exceptions included).
+"""
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import api
+from repro.core.config import (RuntimeConfig, add_agent_cli_args,
+                               declared_env_knobs, knob_table, parse_bool,
+                               resolve)
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+README = os.path.join(os.path.dirname(__file__), os.pardir, "README.md")
+
+
+# ------------------------------------------------------------- orphan knobs
+def _knobs_in_source():
+    found = set()
+    for dirpath, dirnames, filenames in os.walk(SRC):
+        dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+        for fn in filenames:
+            if not fn.endswith(".py"):
+                continue
+            with open(os.path.join(dirpath, fn)) as fh:
+                found.update(re.findall(r"RJAX_[A-Z0-9_]+", fh.read()))
+    return found
+
+
+def test_every_env_knob_in_src_is_declared():
+    declared = set(declared_env_knobs())
+    orphans = _knobs_in_source() - declared
+    assert not orphans, (
+        f"undeclared RJAX_* knob(s) in src/: {sorted(orphans)} — add them "
+        f"to repro.core.config.RuntimeConfig so the generated README table "
+        f"and the precedence rule cover them")
+
+
+def test_declared_knobs_are_actually_read_somewhere():
+    dead = set(declared_env_knobs()) - _knobs_in_source()
+    assert not dead, f"RuntimeConfig declares unused env knob(s): {sorted(dead)}"
+
+
+def test_readme_knob_table_is_in_sync():
+    """README's table between the knob-table markers is byte-identical to
+    the generated one (regenerate: ``python -m repro.core.config``)."""
+    text = open(README).read()
+    m = re.search(r"<!-- knob-table:begin -->\n(.*?)\n<!-- knob-table:end -->",
+                  text, flags=re.S)
+    assert m, "README.md lost its knob-table markers"
+    assert m.group(1) == knob_table(), (
+        "README knob table is stale — regenerate it with "
+        "`PYTHONPATH=src python -m repro.core.config` and paste between "
+        "the markers")
+
+
+def test_knob_table_cli_prints_the_table():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.config"],
+        capture_output=True, text=True,
+        env=dict(os.environ, PYTHONPATH=SRC), check=True).stdout
+    assert knob_table() in out
+
+
+# --------------------------------------------------------------- precedence
+def test_resolve_precedence_explicit_env_welcome_default(monkeypatch):
+    monkeypatch.delenv("RJAX_TEST_KNOB", raising=False)
+    assert resolve(None, "RJAX_TEST_KNOB", None, 7, int) == 7          # default
+    assert resolve(None, "RJAX_TEST_KNOB", 5, 7, int) == 5             # welcome
+    monkeypatch.setenv("RJAX_TEST_KNOB", "3")
+    assert resolve(None, "RJAX_TEST_KNOB", 5, 7, int) == 3             # env
+    assert resolve(1, "RJAX_TEST_KNOB", 5, 7, int) == 1                # explicit
+    monkeypatch.setenv("RJAX_TEST_KNOB", "")   # empty env var = unset
+    assert resolve(None, "RJAX_TEST_KNOB", 5, 7, int) == 5
+
+
+def test_config_resolved_field_follows_env(monkeypatch):
+    monkeypatch.delenv("RJAX_PIPELINE_DEPTH", raising=False)
+    assert RuntimeConfig().resolved("pipeline_depth") == 4
+    monkeypatch.setenv("RJAX_PIPELINE_DEPTH", "9")
+    assert RuntimeConfig().resolved("pipeline_depth") == 9
+    assert RuntimeConfig(pipeline_depth=2).resolved("pipeline_depth") == 2
+
+
+def test_parse_bool_spellings():
+    for false in ("0", "false", "OFF", "no", "", None, False):
+        assert parse_bool(false) is False
+    for true in ("1", "true", "ON", "yes", True):
+        assert parse_bool(true) is True
+
+
+# ------------------------------------------------------------ merged / shim
+def test_merged_kwargs_override_config():
+    cfg = RuntimeConfig(n_workers=2, backend="process")
+    out = cfg.merged(n_workers=6)
+    assert out.n_workers == 6 and out.backend == "process"
+    assert cfg.n_workers == 2   # original untouched
+
+
+def test_unknown_kwarg_raises_typeerror():
+    with pytest.raises(TypeError, match="pipelin_depth"):
+        RuntimeConfig().merged(pipelin_depth=8)
+    with pytest.raises(TypeError, match="known knobs"):
+        api.runtime_start(definitely_not_a_knob=1)
+
+
+def test_runtime_kwargs_omits_unset_fields():
+    assert RuntimeConfig().runtime_kwargs() == {}
+    out = RuntimeConfig(n_workers=3, policy="lifo").runtime_kwargs()
+    assert out == {"n_workers": 3, "policy": "lifo"}
+
+
+# ------------------------------------------------- runtime_start integration
+def test_old_kwarg_call_sites_run_unmodified():
+    rt = api.runtime_start(n_workers=2, backend="thread", policy="fifo",
+                           max_retries=1, tracing=False)
+    try:
+        assert api.wait_on(api.task(lambda x: x * 2)(21)) == 42
+        assert rt.executor.n_workers == 2
+    finally:
+        api.runtime_stop()
+
+
+def test_config_object_and_kwargs_compose():
+    cfg = RuntimeConfig(backend="thread", n_workers=1)
+    rt = api.runtime_start(config=cfg, n_workers=3)   # kwarg wins
+    try:
+        assert rt.executor.n_workers == 3
+    finally:
+        api.runtime_stop()
+
+
+def test_runtime_start_is_a_context_manager():
+    with api.runtime_start(n_workers=2) as rt:
+        assert api.wait_on(api.task(lambda: "in")( )) == "in"
+    assert rt._stopped
+    # the module-level current runtime was released too
+    with pytest.raises(RuntimeError):
+        api.current_runtime()
+
+
+def test_context_manager_stops_on_exception():
+    class Boom(Exception):
+        pass
+    with pytest.raises(Boom):
+        with api.runtime_start(n_workers=2) as rt:
+            raise Boom()
+    assert rt._stopped
+    # and a fresh runtime can start afterwards
+    with api.runtime_start(n_workers=1):
+        pass
+
+
+def test_explicit_stop_inside_with_block_is_fine():
+    with api.runtime_start(n_workers=1) as rt:
+        api.runtime_stop()
+    assert rt._stopped
+
+
+# ----------------------------------------------------------------- agent CLI
+def test_agent_cli_mirrors_runtimeconfig_fields():
+    p = argparse.ArgumentParser()
+    add_agent_cli_args(p)
+    flags = {a.option_strings[0] for a in p._actions if a.option_strings}
+    assert {"--memory-budget", "--mp-context",
+            "--inline-max", "--heartbeat-s"} <= flags
+    args = p.parse_args(["--memory-budget", "256M", "--heartbeat-s", "0.5"])
+    assert args.memory_budget == "256M"
+    assert args.heartbeat_s == "0.5"
+    assert args.inline_max is None          # unset → env/welcome tier
+
+
+def test_agent_build_arg_parser_has_topology_and_knob_flags():
+    from repro.cluster.agent import build_arg_parser
+    p = build_arg_parser()
+    flags = {s for a in p._actions for s in a.option_strings}
+    assert {"--connect", "--workers", "--node-id",
+            "--memory-budget", "--mp-context",
+            "--inline-max", "--heartbeat-s"} <= flags

@@ -1,0 +1,301 @@
+"""The async control plane's event loop (DESIGN.md §18).
+
+Unit level: :class:`AsyncAgentChannel` against a raw socketpair peer —
+coalesced write batching, strict FIFO (the Put-before-Ref wire
+invariant), partial-read reassembly, request/callback routing, failure
+semantics.  Integration level: the scheduler side of a LocalCluster
+runs O(1) threads regardless of agent count, and (slow-marked) a
+64-agent cluster completes a fan-out DAG with heartbeats from every
+node.
+"""
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.cluster import protocol
+from repro.cluster.eventloop import AsyncAgentChannel, IOLoop
+from repro.cluster.protocol import ConnectionClosed, recv_msg, send_msg
+
+
+# ---------------------------------------------------------------- harness
+@pytest.fixture
+def io():
+    loop = IOLoop(name="test-io")
+    yield loop
+    loop.stop()
+
+
+@pytest.fixture
+def pair(io):
+    """(channel, raw peer socket) over a socketpair."""
+    a, b = socket.socketpair()
+    ch = AsyncAgentChannel(a, node_id=0, hello={"op": "hello"}, io=io)
+    yield ch, b
+    ch.close()
+    try:
+        b.close()
+    except OSError:
+        pass
+
+
+def _echo_server(sock, n, transform=None):
+    """Reply to n requests, echoing the mid (the agent side's contract)."""
+    for _ in range(n):
+        meta, frames = recv_msg(sock)
+        reply = {"op": "reply", "mid": meta.get("mid")}
+        if transform:
+            reply.update(transform(meta))
+        send_msg(sock, reply)
+
+
+# ------------------------------------------------------------- round trips
+def test_request_roundtrip(pair):
+    ch, peer = pair
+    t = threading.Thread(target=_echo_server, args=(peer, 1), daemon=True)
+    t.start()
+    meta, frames = ch.request({"op": "ping"}, timeout=10)
+    assert meta["op"] == "reply" and meta["mid"] == 1
+    t.join()
+
+
+def test_request_async_overlap(pair):
+    ch, peer = pair
+    t = threading.Thread(target=_echo_server, args=(peer, 8), daemon=True)
+    t.start()
+    waits = [ch.request_async({"op": "ping", "i": i}) for i in range(8)]
+    mids = sorted(w(timeout=10)[0]["mid"] for w in waits)
+    assert mids == list(range(1, 9))
+    t.join()
+
+
+def test_request_cb_called_exactly_once(pair):
+    ch, peer = pair
+    t = threading.Thread(target=_echo_server, args=(peer, 1), daemon=True)
+    t.start()
+    hits = []
+    done = threading.Event()
+    ch.request_cb({"op": "ping"}, (),
+                  lambda meta, frames, err: (hits.append((meta, err)),
+                                             done.set()))
+    assert done.wait(10)
+    time.sleep(0.05)
+    assert len(hits) == 1 and hits[0][1] is None
+    t.join()
+
+
+def test_frames_cross_both_ways(pair):
+    import numpy as np
+    from repro.cluster.protocol import array_frame, frame_to_array
+    ch, peer = pair
+    arr = np.arange(2048, dtype=np.float64)
+
+    def server():
+        meta, frames = recv_msg(peer)
+        got = frame_to_array(frames[0])
+        send_msg(peer, {"op": "reply", "mid": meta["mid"]},
+                 frames=[array_frame(got * 2)])
+
+    t = threading.Thread(target=server, daemon=True)
+    t.start()
+    meta, frames = ch.request({"op": "mul"}, frames=[array_frame(arr)],
+                              timeout=10)
+    out = frame_to_array(frames[0])
+    assert (out == arr * 2).all()
+    t.join()
+
+
+# --------------------------------------------------------------- batching
+def test_posts_preserve_fifo_and_coalesce(pair):
+    """N small posts enqueued while the loop is busy drain as a handful
+    of coalesced socket writes — in exact enqueue order."""
+    ch, peer = pair
+    n = 50
+    ch.post({"op": "warm"})          # forces the loop tasks to exist
+    time.sleep(0.1)
+    ch.io.call_soon(time.sleep, 0.3)  # hold the loop: posts pile up
+    for i in range(n):
+        ch.post({"op": "seq", "i": i})
+    got = [recv_msg(peer)[0] for _ in range(n + 1)]
+    assert [m["i"] for m in got[1:]] == list(range(n))
+    assert ch.msgs_sent == n + 1
+    # the pile-up drained in far fewer writes than messages
+    assert ch.writes <= 1 + n // 4, (ch.writes, ch.msgs_sent)
+
+
+def test_put_before_ref_order_under_interleaved_writers(pair):
+    """Concurrent enqueuers: each writer's own Put→Ref sequence arrives
+    in its enqueue order (the §12 wire-FIFO invariant the executor's
+    per-agent order locks rely on)."""
+    ch, peer = pair
+    writers, per = 4, 25
+    total = writers * per
+
+    def writer(w):
+        for i in range(per):
+            ch.post({"op": "put" if i % 2 == 0 else "ref", "w": w, "i": i})
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(writers)]
+    for t in threads:
+        t.start()
+    seen = {w: [] for w in range(writers)}
+    for _ in range(total):
+        m = recv_msg(peer)[0]
+        seen[m["w"]].append(m["i"])
+    for t in threads:
+        t.join()
+    for w in range(writers):
+        assert seen[w] == list(range(per)), f"writer {w} reordered"
+
+
+def test_large_message_bypasses_coalescing(pair):
+    """A message above the coalesce cutover is written per-part (no
+    giant batch buffer) but still lands in FIFO position."""
+    import numpy as np
+    from repro.cluster.protocol import array_frame, frame_to_array
+    ch, peer = pair
+    big = np.arange(protocol.WIRE_COALESCE_MAX, dtype=np.uint8)
+    ch.post({"op": "small", "i": 0})
+    ch.post({"op": "big"}, frames=[array_frame(big)])
+    ch.post({"op": "small", "i": 1})
+    metas = []
+    for _ in range(3):
+        meta, frames = recv_msg(peer)
+        metas.append(meta["op"])
+        if meta["op"] == "big":
+            assert (frame_to_array(frames[0]) == big).all()
+    assert metas == ["small", "big", "small"]
+
+
+# ----------------------------------------------------------- partial reads
+def test_trickled_reply_is_reassembled(pair):
+    """The reply arrives one byte at a time: the loop's exact-read path
+    must reassemble header, lengths, meta and frames correctly."""
+    import io as _io
+    ch, peer = pair
+
+    def server():
+        meta, _ = recv_msg(peer)
+        buf = _io.BytesIO()
+        send_msg(_FakeSock(buf), {"op": "reply", "mid": meta["mid"],
+                                  "payload": "x" * 3000})
+        blob = buf.getvalue()
+        for i in range(0, len(blob), 7):       # drip-feed 7-byte chunks
+            peer.sendall(blob[i:i + 7])
+            time.sleep(0.0005)
+
+    class _FakeSock:
+        def __init__(self, buf):
+            self.buf = buf
+
+        def sendall(self, b):
+            self.buf.write(b)
+
+    t = threading.Thread(target=server, daemon=True)
+    t.start()
+    meta, _ = ch.request({"op": "ping"}, timeout=30)
+    assert meta["payload"] == "x" * 3000
+    t.join()
+
+
+# ------------------------------------------------------------ failure paths
+def test_peer_close_fails_pending_requests(pair):
+    ch, peer = pair
+    w = ch.request_async({"op": "never-answered"})
+    closed = threading.Event()
+    ch.on_close = closed.set
+    peer.close()
+    with pytest.raises(ConnectionClosed):
+        w(timeout=10)
+    assert closed.wait(10)
+    assert ch.closed
+    with pytest.raises(ConnectionClosed):
+        ch.post({"op": "late"})
+
+
+def test_close_fails_callbacks_with_error(pair):
+    ch, peer = pair
+    t = threading.Thread(target=_echo_server, args=(peer, 1), daemon=True)
+    t.start()
+    ch.request({"op": "warm"}, timeout=10)    # channel fully up
+    errs = []
+    done = threading.Event()
+    ch.request_cb({"op": "doomed"}, (),
+                  lambda meta, frames, err: (errs.append(err), done.set()))
+    ch.close()
+    assert done.wait(10)
+    assert isinstance(errs[0], ConnectionClosed)
+    t.join()
+
+
+def test_request_timeout_names_the_op(pair):
+    ch, peer = pair
+    with pytest.raises(TimeoutError, match="silent"):
+        ch.request({"op": "silent"}, timeout=0.2)
+
+
+def test_ioloop_stop_is_idempotent():
+    loop = IOLoop(name="idem-io")
+    loop.stop()
+    loop.stop()
+    assert not loop.call_soon(lambda: None)   # dead loop refuses work
+
+
+# ------------------------------------------------- scheduler thread budget
+def _run_cluster_count_threads(n_agents):
+    from repro.core import api
+
+    def bump(x):
+        return x + 1
+
+    with api.runtime_start(backend="cluster", n_agents=n_agents,
+                           workers_per_node=1, tracing=False):
+        t = api.task(bump)
+        futs = [t(i) for i in range(n_agents * 3)]
+        api.barrier()
+        mid_run = threading.active_count()
+        assert sorted(api.wait_on(futs)) == sorted(
+            i + 1 for i in range(n_agents * 3))
+    return mid_run
+
+
+def test_scheduler_thread_count_is_flat_in_agent_count():
+    """The tentpole regression guard: scheduler-side threads must not
+    scale with agents (legacy: reader-thread/agent + dispatcher/slot)."""
+    at2 = _run_cluster_count_threads(2)
+    at4 = _run_cluster_count_threads(4)
+    # identical budget, small tolerance for transient helper threads
+    # (a recovery-pool worker, a telemetry timer) racing the sample
+    assert at4 <= at2 + 1, (at2, at4)
+
+
+# -------------------------------------------------------- 64-agent smoke
+@pytest.mark.slow
+def test_sixty_four_agent_smoke():
+    """One scheduler, 64 agents: register, heartbeat, run a fan-out +
+    reduce DAG, all on a single event-loop thread."""
+    from repro.core import api
+
+    def leaf(i):
+        return i
+
+    n = 64
+    with api.runtime_start(backend="cluster", n_agents=n,
+                           workers_per_node=1) as rt:
+        t = api.task(leaf)
+        futs = [t(i) for i in range(n * 2)]
+        api.barrier(timeout=300)
+        assert sorted(api.wait_on(futs)) == sorted(list(range(n * 2)) )
+        # every node's heartbeat reached the telemetry plane via on_push
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            hb = rt.telemetry.nodes()
+            if len(hb) >= n:
+                break
+            time.sleep(0.5)
+        assert len(hb) >= n
+        # O(1) scheduler threads even at 64 agents
+        assert threading.active_count() < 16, sorted(
+            th.name for th in threading.enumerate())
