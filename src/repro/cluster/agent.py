@@ -48,7 +48,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.config import add_agent_cli_args, resolve as resolve_knob
-from ..core.executors import ProcessExecutor, _loads_fn
+from ..core.executors import (
+    DeadlineExceededError,
+    ProcessExecutor,
+    WorkerCrashedError,
+    _loads_fn,
+)
 from ..core.telemetry import HEARTBEAT_DEFAULT_S
 from ..core.memory import (
     MemoryBudget,
@@ -59,6 +64,7 @@ from ..core.memory import (
     spillable,
 )
 from ..core.serialization import as_c_contiguous
+from . import chaos
 from .peer import PEER_FETCH_TIMEOUT, DataServer, PeerFetchError, PeerPool
 from .protocol import (
     DEFAULT_INLINE_MAX,
@@ -313,6 +319,10 @@ class NodeAgent:
         self._next_token = 1
         self._token_lock = threading.Lock()
         self._done = threading.Event()
+        # per-slot deadline watchdogs (DESIGN.md §19): armed around the
+        # pool invoke, they kill the slot's worker when the body overruns
+        self._deadline_locks = [threading.Lock() for _ in range(self.workers)]
+        self.watchdog_kills = 0
 
     # ------------------------------------------------------------- lifecycle
     def _track_fd(self, fd: int) -> None:
@@ -491,6 +501,7 @@ class NodeAgent:
         # in-flight credit depth: tasks the scheduler streamed ahead that
         # are still waiting for a pool slot (DESIGN.md §14/§17)
         s["queued"] = sum(q.qsize() for q in self._slot_queues)
+        s["watchdog_kills"] = self.watchdog_kills
         return s
 
     def _heartbeat_loop(self) -> None:
@@ -502,6 +513,15 @@ class NodeAgent:
         immediately so the scheduler's node view populates at startup
         rather than one cadence later."""
         while True:
+            inj = chaos.INJECTOR
+            if inj is not None and inj.roll("drop",
+                                            f"agent{self.node_id}-hb") is not None:
+                # chaos seam: heartbeat loss — the beat is simply never
+                # sent; enough consecutive drops and the scheduler's
+                # failure detector declares this node dead
+                if self._done.wait(self.heartbeat_s):
+                    return
+                continue
             try:
                 self._reply({"op": "hb", "node": self.node_id,
                              "t": time.time(),
@@ -648,6 +668,57 @@ class NodeAgent:
                 self._fns[token] = fn
             return fn
 
+    # -- deadline watchdog (DESIGN.md §19) -----------------------------------
+    def _arm_deadline(self, slot: int, seconds: float) -> dict:
+        """Start a timer that kills this slot's pool worker if the task
+        body runs past ``seconds``.  The kill only terminates the process
+        — no respawn here: the blocked ``pool.invoke`` observes the EOF
+        and performs the single restart, so there is exactly one respawn
+        owner and no double-restart race."""
+        state = {"fired": False, "active": True}
+        lock = self._deadline_locks[slot]
+
+        def fire():
+            with lock:
+                if not state["active"]:
+                    return
+                state["fired"] = True
+                self.watchdog_kills += 1
+                try:
+                    self.pool.kill_worker(slot)
+                except Exception:
+                    pass
+
+        timer = threading.Timer(seconds, fire)
+        timer.daemon = True
+        state["timer"] = timer
+        timer.start()
+        return state
+
+    def _disarm_deadline(self, slot: int, state: dict) -> bool:
+        """Cancel the watchdog; returns whether it already fired (the
+        fire/kill runs under the slot lock, so after this returns False
+        no kill can happen)."""
+        with self._deadline_locks[slot]:
+            state["active"] = False
+        state["timer"].cancel()
+        return state["fired"]
+
+    def _invoke_with_deadline(self, slot: int, deadline_s: float, fn,
+                              args, kwargs, keyed):
+        state = self._arm_deadline(slot, deadline_s)
+        try:
+            result = self.pool.invoke(slot, fn, args, kwargs,
+                                      input_keys=keyed)
+        except WorkerCrashedError as err:
+            if self._disarm_deadline(slot, state):
+                raise DeadlineExceededError(
+                    f"task exceeded its deadline of {deadline_s}s on node "
+                    f"{self.node_id} slot {slot} (worker killed)") from err
+            raise
+        self._disarm_deadline(slot, state)
+        return result
+
     def _slot_loop(self, slot: int) -> None:
         while not self._done.is_set():
             item = self._slot_queues[slot].get()
@@ -657,6 +728,13 @@ class NodeAgent:
             mid = meta["mid"]
             try:
                 fn = self._fn_for(meta["token"])
+                inj = chaos.INJECTOR
+                if inj is not None:
+                    # chaos seam: a wedged worker — the sleep runs INSIDE
+                    # the pool worker, so only a deadline can unwedge it
+                    hang = inj.roll("hang", f"agent{self.node_id}-s{slot}")
+                    if hang is not None:
+                        fn = chaos._HangWrapper(fn, hang)
                 keyed: Dict[int, Tuple[int, int]] = {}
                 args, kwargs = unpack_payload(meta["structure"], frames,
                                               lookup=self.plane.lookup,
@@ -665,10 +743,18 @@ class NodeAgent:
                 # the same (data_id, version), deduping across pool workers
                 for marker_key, v in _keyed_arrays(meta["structure"], self.plane):
                     keyed[id(v)] = marker_key
-                result = self.pool.invoke(slot, fn, args, kwargs,
-                                          input_keys=keyed)
+                deadline_s = meta.get("deadline_s")
+                if deadline_s is not None:
+                    result = self._invoke_with_deadline(
+                        slot, float(deadline_s), fn, args, kwargs, keyed)
+                else:
+                    result = self.pool.invoke(slot, fn, args, kwargs,
+                                              input_keys=keyed)
                 structure, out_frames, tokens = self._encode_result(
                     result, meta.get("n_out", -1))
+                if inj is not None:
+                    # chaos seam: a node draining slowly — reply latency
+                    inj.sleep("stall", f"agent{self.node_id}-reply")
                 self._reply({"op": "done", "mid": mid, "structure": structure,
                              "tokens": tokens}, out_frames)
             except BaseException as err:  # noqa: BLE001 — ships to scheduler

@@ -27,6 +27,7 @@ import threading
 import traceback
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from . import chaos
 from .protocol import ConnectionClosed, recv_msg, send_msg
 
 
@@ -91,6 +92,16 @@ class AgentChannel:
         return f"{host}:{port}"
 
     # ---------------------------------------------------------------- sending
+    def _chaos_delay(self) -> None:
+        # chaos seam (DESIGN.md §19): scheduler→agent message latency.
+        # INJECTOR is None unless RJAX_CHAOS is set — one global load on
+        # the hot path.  Sleeps before taking the send lock so injected
+        # latency contends like real network latency, not like a stall
+        # inside the channel.
+        inj = chaos.INJECTOR
+        if inj is not None:
+            inj.sleep("delay", f"sched-ch{self.node_id}")
+
     def request_async(self, meta: dict, frames: Sequence[Sequence] = ()):
         """Send a request and return a ``wait(timeout=None)`` callable that
         blocks for the reply.  Splitting send from wait lets the executor
@@ -103,6 +114,7 @@ class AgentChannel:
             self._next_mid += 1
             self._pending[mid] = slot
         meta = dict(meta, mid=mid)
+        self._chaos_delay()
         try:
             with self._send_lock:
                 send_msg(self.sock, meta, frames)
@@ -143,6 +155,7 @@ class AgentChannel:
             self._next_mid += 1
             self._pending[mid] = slot
         meta = dict(meta, mid=mid)
+        self._chaos_delay()
         try:
             with self._send_lock:
                 send_msg(self.sock, meta, frames)
@@ -159,6 +172,7 @@ class AgentChannel:
 
     def post(self, meta: dict, frames: Sequence[Sequence] = ()) -> None:
         """Fire-and-forget control message (no reply expected)."""
+        self._chaos_delay()
         try:
             with self._send_lock:
                 send_msg(self.sock, meta, frames)

@@ -49,7 +49,7 @@ import traceback
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from . import protocol
+from . import chaos, protocol
 from .protocol import ConnectionClosed
 
 __all__ = ["IOLoop", "AsyncAgentChannel"]
@@ -337,6 +337,14 @@ class AsyncAgentChannel:
         return parts, len(header) + sum(lengths)
 
     def _enqueue(self, meta: dict, frames=()) -> None:
+        # chaos seam (DESIGN.md §19): scheduler→agent message latency on
+        # the async plane.  One global load when chaos is off.  Note the
+        # pump runs _enqueue on the loop thread, so an injected delay
+        # stalls the whole control plane for its duration — exactly the
+        # pathological-scheduler-stall failure mode worth exercising.
+        inj = chaos.INJECTOR
+        if inj is not None:
+            inj.sleep("delay", f"sched-aioch{self.node_id}")
         parts, total = self._encode(meta, frames)
         with self._send_lock:
             if self.closed:

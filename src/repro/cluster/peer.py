@@ -28,9 +28,11 @@ import os
 import queue
 import socket
 import threading
+import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from ..core.executors import WorkerCrashedError
+from . import chaos
 from .protocol import (
     ConnectionClosed,
     pack_payload,
@@ -41,9 +43,18 @@ from .protocol import (
 )
 
 # how long a fetch may sit on a peer's wire before the consumer gives up
-# (covers a wedged-but-connected producer; a dead one fails fast on
-# connect/EOF)
+# (covers a wedged-but-connected producer — a half-open connection after
+# a partition or freeze never EOFs, so this timeout is the ONLY thing
+# standing between the consumer and blocking forever; a dead producer
+# fails fast on connect/EOF).  Read at call time so tests can tighten it.
 PEER_FETCH_TIMEOUT = float(os.environ.get("RJAX_PEER_FETCH_TIMEOUT", 60.0))
+
+
+def _fetch_timeout() -> float:
+    """The effective peer-fetch timeout — module attribute lookup at call
+    time, so monkeypatching ``peer.PEER_FETCH_TIMEOUT`` (the half-open
+    tests) takes effect without re-importing."""
+    return PEER_FETCH_TIMEOUT
 
 
 class PeerFetchError(WorkerCrashedError):
@@ -135,6 +146,17 @@ class DataServer:
                     send_msg(conn, {"op": "data", "ok": False,
                                     "error": f"unknown op {meta.get('op')!r}"})
                     continue
+                # chaos seam (DESIGN.md §19): half-open freeze — the
+                # request was accepted but no reply ever comes (what a
+                # network partition leaves behind).  The consumer's
+                # PEER_FETCH_TIMEOUT must turn this into a retryable
+                # PeerFetchError; parking the serving thread (rather
+                # than closing) is the point — no EOF, no on_close.
+                inj = chaos.INJECTOR
+                if inj is not None and inj.roll("freeze", "data-serve") is not None:
+                    while not self._closed:
+                        time.sleep(0.05)
+                    return
                 key = tuple(meta["key"]) if meta.get("key") else None
                 token = meta.get("token")
                 try:
@@ -230,7 +252,7 @@ class _Peer:
 
     def _connect(self) -> socket.socket:
         sock = socket.create_connection(self._sockaddr, timeout=10.0)
-        sock.settimeout(PEER_FETCH_TIMEOUT)
+        sock.settimeout(_fetch_timeout())
         try:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError:
@@ -271,6 +293,11 @@ class _Peer:
                         f"d{job.key[0]}v{job.key[1]} was served)")
                 if self._sock is None:
                     self._sock = self._connect()
+                # chaos seam (DESIGN.md §19): congested data plane —
+                # added latency ahead of the pull request
+                inj = chaos.INJECTOR
+                if inj is not None:
+                    inj.sleep("fetch-slow", f"peer-{self.addr}")
                 send_msg(self._sock, {"op": "fetch", "key": job.key,
                                       "token": job.token})
                 meta, frames = recv_msg(self._sock)
@@ -376,8 +403,11 @@ class PeerPool:
                     del self._peers[addr]
 
     def fetch(self, addr: str, key, token,
-              timeout: float = PEER_FETCH_TIMEOUT) -> Any:
-        """Synchronous pull (the scheduler's gather path)."""
+              timeout: Optional[float] = None) -> Any:
+        """Synchronous pull (the scheduler's gather path).  ``timeout``
+        defaults to the effective ``PEER_FETCH_TIMEOUT`` at call time."""
+        if timeout is None:
+            timeout = _fetch_timeout()
         done = threading.Event()
         box: list = [None, None]
 

@@ -102,7 +102,8 @@ def runtime_start(n_workers: Optional[int] = None, *,
         if _runtime is not None and not _runtime._stopped:
             raise RuntimeError("runtime already started; call runtime_stop() first")
         _runtime = Runtime(
-            retry=RetryPolicy(max_retries=cfg.resolved("max_retries")),
+            retry=RetryPolicy(max_retries=cfg.resolved("max_retries"),
+                              backoff_seconds=cfg.resolved("retry_backoff_s")),
             speculation=SpeculationConfig(
                 enabled=cfg.resolved("speculation"),
                 factor=cfg.resolved("speculation_factor")),
@@ -160,7 +161,7 @@ class TaskFunction:
 
     def __init__(self, fn: Callable, *, returns: int = 1, name: Optional[str] = None,
                  max_retries: Optional[int] = None, priority: int = 0,
-                 speculatable: bool = True):
+                 speculatable: bool = True, deadline_s: Optional[float] = None):
         functools.update_wrapper(self, fn)
         self.fn = fn
         self.returns = returns
@@ -168,6 +169,7 @@ class TaskFunction:
         self.max_retries = max_retries
         self.priority = priority
         self.speculatable = speculatable
+        self.deadline_s = deadline_s
 
     def __call__(self, *args, **kwargs):
         rt = current_runtime()
@@ -175,6 +177,7 @@ class TaskFunction:
             self.fn, args, kwargs,
             name=self.name, returns=self.returns, max_retries=self.max_retries,
             priority=self.priority, speculatable=self.speculatable,
+            deadline_s=self.deadline_s,
         )
 
     def map(self, args_list: Iterable[tuple]) -> List[Any]:
@@ -189,11 +192,18 @@ class TaskFunction:
 
 def task(fn: Optional[Callable] = None, *, returns: int = 1, name: Optional[str] = None,
          max_retries: Optional[int] = None, priority: int = 0,
-         speculatable: bool = True) -> Any:
-    """Register ``fn`` as a task (paper's ``task()``); decorator or wrapper."""
+         speculatable: bool = True, deadline_s: Optional[float] = None) -> Any:
+    """Register ``fn`` as a task (paper's ``task()``); decorator or wrapper.
+
+    ``deadline_s`` bounds each attempt's execution time (DESIGN.md §19):
+    a body running longer has its worker killed and the attempt fails as
+    a retryable :class:`~repro.core.executors.DeadlineExceededError` —
+    pair it with ``max_retries`` when overruns are transient.  Defaults
+    to the runtime's ``deadline_s`` knob (``RJAX_DEADLINE_S``)."""
     def wrap(f: Callable) -> TaskFunction:
         return TaskFunction(f, returns=returns, name=name, max_retries=max_retries,
-                            priority=priority, speculatable=speculatable)
+                            priority=priority, speculatable=speculatable,
+                            deadline_s=deadline_s)
     return wrap(fn) if fn is not None else wrap
 
 
@@ -213,7 +223,7 @@ def map_tasks(task_fn: Any, args_list: Iterable[tuple]) -> List[Any]:
             task_fn.fn, [tuple(a) for a in args_list],
             name=task_fn.name, returns=task_fn.returns,
             max_retries=task_fn.max_retries, priority=task_fn.priority,
-            speculatable=task_fn.speculatable,
+            speculatable=task_fn.speculatable, deadline_s=task_fn.deadline_s,
         )
     return rt.submit_many(task_fn, [tuple(a) for a in args_list])
 

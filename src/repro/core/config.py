@@ -132,12 +132,43 @@ class RuntimeConfig:
     max_retries: Optional[int] = knob(
         default=0, cast=int,
         doc="Automatic re-submissions per failed task.")
+    retry_backoff_s: Optional[float] = knob(
+        env="RJAX_RETRY_BACKOFF_S", default=0.0, cast=float,
+        doc="Base re-queue delay after a failed attempt; grows "
+            "exponentially (x2 per attempt, capped at 30 s) with up to "
+            "25% jitter.  0 = immediate (lost-input pacing still applies).")
     speculation: Optional[bool] = knob(
         default=False, cast=parse_bool,
         doc="Duplicate straggler tasks (first completion wins).")
     speculation_factor: Optional[float] = knob(
         default=3.0, cast=float,
         doc="A task is a straggler past factor x its name's mean duration.")
+
+    # -- fault tolerance (DESIGN.md §19) ----------------------------------
+    liveness: Optional[bool] = knob(
+        env="RJAX_LIVENESS", default=True, cast=parse_bool,
+        doc="Scheduler-side failure detector over heartbeat ages (cluster "
+            "backend): a node silent past the suspicion window has its "
+            "channel closed, driving the normal respawn/lineage recovery.")
+    suspicion_s: Optional[float] = knob(
+        env="RJAX_SUSPICION_S", default=5.0, cast=float,
+        doc="Heartbeat age after which a node is suspect; dead (and "
+            "recovered) at 2x this, never sooner than 3 beat periods.")
+    deadline_s: Optional[float] = knob(
+        env="RJAX_DEADLINE_S", default=None, cast=float,
+        doc="Default per-task deadline: a task body running longer has "
+            "its worker killed and fails retryable.  Per-call "
+            "submit(deadline_s=) overrides; unset = no deadline.")
+    resolve_timeout_s: Optional[float] = knob(
+        env="RJAX_RESOLVE_TIMEOUT_S", default=30.0, cast=float,
+        doc="Seconds a dispatch may wait for an input datum to resolve "
+            "(spill fault-back, §15 lineage rebuild) before failing "
+            "retryable.")
+    chaos: Optional[str] = knob(
+        env="RJAX_CHAOS", default=None, scope="env",
+        doc="Deterministic fault injection, '<seed>:<fault>[=arg][@rate],"
+            "...' (repro.cluster.chaos); faults: delay, drop, stall, "
+            "freeze, hang, fetch-slow.  Unset = zero-overhead no-op.")
 
     # -- memory -----------------------------------------------------------
     memory_budget: Optional[Any] = knob(
@@ -254,7 +285,8 @@ class RuntimeConfig:
                      "backend", "cluster", "n_agents", "memory_budget",
                      "spill_dir", "pipeline_depth", "telemetry",
                      "dashboard_port", "control_plane", "inline_max",
-                     "heartbeat_s", "p2p"):
+                     "heartbeat_s", "p2p", "liveness", "suspicion_s",
+                     "deadline_s", "resolve_timeout_s"):
             v = getattr(self, name)
             if v is not None:
                 out[name] = v

@@ -71,6 +71,9 @@ class TaskNode:
     nbytes_in: int = 0
     speculatable: bool = True
     speculative_of: Optional[int] = None  # set on speculative duplicates
+    # fault tolerance (DESIGN.md §19): body wall-time bound; an attempt
+    # running longer is killed agent-side and fails retryable
+    deadline_s: Optional[float] = None
 
     @property
     def duration(self) -> float:

@@ -111,15 +111,20 @@ function renderStream(now){
   [...names].map(n=>'<span style="color:'+color(n)+'">■</span> '+n).join('  ');
 }
 function renderNodes(st){
- let h='<table><tr><th>node</th><th>heartbeats</th><th>age</th>'+
+ let h='<table><tr><th>node</th><th>state</th><th>heartbeats</th><th>age</th>'+
   '<th>in-flight</th><th>queued</th><th>memory</th><th>spills</th>'+
   '<th>p2p fetches</th></tr>';
  for(const [nid,n] of Object.entries(st.nodes)){
   const used=n.plane_bytes_used??n.plane_bytes??n.store_bytes_used??0;
   const budget=n.plane_budget_bytes??n.store_budget_bytes??0;
   const pct=budget?Math.min(100,100*used/budget):0;
-  h+='<tr><td>'+nid+'</td><td>'+n.heartbeats+'</td><td>'+
-   n.age_s.toFixed(1)+'s</td><td>'+(n.inflight||0)+'</td><td>'+
+  const sc={alive:'#5ad18b',suspect:'#e0b25a',dead:'#e06c5a',
+   respawning:'#e0b25a'}[n.state]||'#888';
+  const state=n.state?'<span style="color:'+sc+'">'+n.state+'</span>'+
+   (n.beat_age_s!=null?' <span class="meta">'+n.beat_age_s.toFixed(1)+
+   's</span>':''):'-';
+  h+='<tr><td>'+nid+'</td><td>'+state+'</td><td>'+n.heartbeats+'</td><td>'+
+   (n.age_s!=null?n.age_s.toFixed(1)+'s':'-')+'</td><td>'+(n.inflight||0)+'</td><td>'+
    (n.queued??'-')+'</td><td><span class="bar"><i class="'+
    (pct>85?'hot':'')+'" style="width:'+pct+'%"></i></span> '+
    fmtB(used)+(budget?' / '+fmtB(budget):'')+'</td><td>'+

@@ -91,6 +91,12 @@ class WorkerCrashedError(RuntimeError):
     """A worker process died mid-task (segfault/OOM-kill).  Retryable."""
 
 
+class DeadlineExceededError(WorkerCrashedError):
+    """A task body overran its ``deadline_s`` and its worker was killed
+    (DESIGN.md §19).  Retryable like any crash: pair ``deadline_s`` with
+    ``max_retries`` when the overrun is expected to be transient."""
+
+
 class RemoteTaskError(RuntimeError):
     """A worker-side exception that could not be unpickled; carries the
     original type name and traceback text."""
@@ -907,6 +913,12 @@ class ProcessExecutor(ExecutorBackend):
         self.worker_restarts = 0
         self.descriptor_sends = 0      # compact-descriptor fast-path hits
         self.batched_sends = 0         # multi-task M messages shipped
+        # deadline enforcement (DESIGN.md §19, pipelined mode): lazily
+        # started monitor killing workers whose head-of-pipe task has sat
+        # at the head (≈ been running) past its deadline_s
+        self._deadline_monitor: Optional[threading.Thread] = None
+        self._deadline_victims: Dict[int, Any] = {}
+        self.deadline_kills = 0
 
     # -- process management --------------------------------------------------
     def spawn_workers(self) -> None:
@@ -1109,6 +1121,8 @@ class ProcessExecutor(ExecutorBackend):
             with self._inflight_locks[worker]:
                 for _, entry in items:
                     self._inflight[worker].append(entry)
+            if any(entry.ex.t.deadline_s is not None for _, entry in items):
+                self._ensure_deadline_monitor()
             try:
                 conn.send_bytes(out)
                 return   # in flight; the collector completes them
@@ -1238,11 +1252,71 @@ class ProcessExecutor(ExecutorBackend):
                 self._conns[worker] = None
             else:
                 self._restart(worker)
+        victim = self._deadline_victims.pop(worker, None)
         n = len(entries)
         for entry in entries:
-            self._finish_entry(worker, entry, error=WorkerCrashedError(
-                f"worker process {worker} died with {n} task(s) in flight "
-                f"(executing up to {entry.ex.t.name!r})"))
+            if entry is victim:
+                err: WorkerCrashedError = DeadlineExceededError(
+                    f"task {entry.ex.t.name!r} exceeded its deadline of "
+                    f"{entry.ex.t.deadline_s}s on worker {worker} (killed)")
+            else:
+                err = WorkerCrashedError(
+                    f"worker process {worker} died with {n} task(s) in flight "
+                    f"(executing up to {entry.ex.t.name!r})")
+            self._finish_entry(worker, entry, error=err)
+
+    # -- deadline enforcement (DESIGN.md §19, pipelined mode) ----------------
+    def kill_worker(self, worker: int) -> None:
+        """Forcibly terminate a (wedged) worker process *without*
+        respawning it here: the pipe EOF surfaces wherever its replies
+        are awaited — the collector's crash handler (pipelined mode) or
+        a blocked ``invoke`` (pool mode, the agent watchdog's case) —
+        and THAT path does the single restart, so enforcement rides the
+        existing crash machinery instead of racing it.  SIGKILL, not
+        SIGTERM: forked workers inherit the parent's signal handlers (the
+        node agent turns SIGTERM into ``SystemExit``), and a catchable
+        signal would come back as a non-retryable task error from a
+        still-wedgeable worker instead of a crash."""
+        proc = self._procs[worker]
+        try:
+            if proc is not None and proc.is_alive():
+                proc.kill()
+        except Exception:
+            pass
+
+    def _ensure_deadline_monitor(self) -> None:
+        if self._deadline_monitor is not None or self._closing:
+            return
+        t = threading.Thread(target=self._deadline_loop, daemon=True,
+                             name=f"{self.label}-deadline")
+        self._deadline_monitor = t
+        t.start()
+
+    def _deadline_loop(self) -> None:
+        """Kill workers whose head-of-pipe task overran its deadline.
+        Replies are FIFO per pipe, so head-of-queue residency is the
+        closest observable proxy for "the body is running" — a queued
+        task's clock only starts once its predecessors' replies drain."""
+        heads: Dict[int, Tuple[Any, float]] = {}
+        while not self._closing and not self._collector_stop.is_set():
+            now = time.monotonic()
+            for w in range(self.n_workers):
+                with self._inflight_locks[w]:
+                    entry = self._inflight[w][0] if self._inflight[w] else None
+                if entry is None:
+                    heads.pop(w, None)
+                    continue
+                prev = heads.get(w)
+                if prev is None or prev[0] is not entry:
+                    heads[w] = (entry, now)
+                    continue
+                dl = entry.ex.t.deadline_s
+                if dl is not None and now - prev[1] > dl:
+                    self._deadline_victims[w] = entry
+                    self.deadline_kills += 1
+                    self.kill_worker(w)
+                    heads.pop(w, None)
+            time.sleep(0.02)
 
     # -- synchronous invocation (pool mode: the cluster node agent) ----------
     def invoke(self, worker, fn, args, kwargs, input_keys=None):
@@ -1341,7 +1415,8 @@ class ProcessExecutor(ExecutorBackend):
              "worker_restarts": self.worker_restarts,
              "pipeline_depth": self.pipeline_depth,
              "descriptor_sends": self.descriptor_sends,
-             "batched_sends": self.batched_sends}
+             "batched_sends": self.batched_sends,
+             "deadline_kills": self.deadline_kills}
         s.update(self.plane.stats())
         return s
 
@@ -1393,9 +1468,11 @@ class ClusterExecutor(ExecutorBackend):
     remote_values_ok = True
 
     def __init__(self, n_workers: int, label: str = "rjax", cluster=None,
-                 pipeline_depth: int = 1, p2p=None, control_plane=None):
+                 pipeline_depth: int = 1, p2p=None, control_plane=None,
+                 liveness=None, suspicion_s=None):
         super().__init__(n_workers, label, pipeline_depth=pipeline_depth)
         from .config import parse_bool, resolve as resolve_knob
+        from .fault import LivenessConfig
         if cluster is None:
             raise ValueError(
                 'backend="cluster" needs a cluster= harness '
@@ -1422,6 +1499,24 @@ class ClusterExecutor(ExecutorBackend):
                 f"control_plane must be 'async' or 'threads', "
                 f"got {self.control_plane!r}")
         self.async_plane = self.control_plane == "async"
+        # liveness failure detector (DESIGN.md §19): suspicion over
+        # heartbeat age + in-flight request deadlines; a dead verdict
+        # closes the channel, driving the normal on_close recovery
+        self.liveness_cfg = LivenessConfig(
+            enabled=resolve_knob(liveness, "RJAX_LIVENESS",
+                                 default=True, cast=parse_bool),
+            suspicion_s=resolve_knob(suspicion_s, "RJAX_SUSPICION_S",
+                                     default=5.0, cast=float))
+        self._detector = None
+        self._liveness_stop = threading.Event()
+        self._liveness_thread: Optional[threading.Thread] = None
+        # per-agent in-flight scheduler-side deadlines: id(ex) ->
+        # monotonic kill time (deadline + slack), under _stats_lock.
+        # The agent watchdog fires first at deadline_s; this is the
+        # backstop for an agent too wedged to run its own watchdog
+        self._deadline_inflight: List[Dict[int, float]] = []
+        self._deadline_slack = 0.0
+        self.liveness_kills = 0
         self._io = None            # IOLoop (async control plane only)
         self._recovery = None      # small pool for blocking recovery work
         self._agent_up = [True] * self.n_agents
@@ -1485,9 +1580,22 @@ class ClusterExecutor(ExecutorBackend):
                 self._io.stop()
             raise
         self._peers = PeerPool(label=f"{self.label}-sched")
+        # arm the failure detector BEFORE channels are installed so
+        # note_install (the synthetic first beat) has somewhere to land
+        from .fault import FailureDetector
+        self._detector = FailureDetector(
+            self.liveness_cfg, float(self.cluster.heartbeat_s or 0.0))
+        self._deadline_slack = max(
+            1.0, 2.0 * float(self.cluster.heartbeat_s or 0.0))
+        self._deadline_inflight = [dict() for _ in range(self.n_agents)]
         for a, ch in enumerate(self._channels):
             self._install_channel(a, ch)
         runtime.store.set_fetcher(self._fetch_remote)
+        if self.liveness_cfg.enabled:
+            self._liveness_thread = threading.Thread(
+                target=self._liveness_loop, daemon=True,
+                name=f"{self.label}-liveness")
+            self._liveness_thread.start()
         if not self.async_plane:
             super().start(runtime)
             return
@@ -1512,13 +1620,19 @@ class ClusterExecutor(ExecutorBackend):
         self._data_addrs[a] = ch.data_addr()
         ch.on_close = lambda _a=a, _ch=ch: self._on_channel_down(_a, _ch)
         ch.on_push = lambda meta, frames, _a=a: self._on_push(_a, meta)
+        if self._detector is not None:
+            self._detector.note_install(a)
 
     def _on_push(self, a: int, meta: dict) -> None:
-        """Agent-initiated push (channel reader thread): route heartbeats
-        into the runtime's telemetry hub.  Guarded — the first beats can
-        arrive before ``super().start`` binds the runtime."""
+        """Agent-initiated push (channel reader thread): feed the failure
+        detector and route heartbeats into the runtime's telemetry hub.
+        Guarded — the first beats can arrive before ``super().start``
+        binds the runtime."""
         if meta.get("op") != "hb" or self._closing:
             return
+        if self._detector is not None:
+            # liveness is independent of whether telemetry is enabled
+            self._detector.note_beat(a)
         rt = self.runtime
         if rt is not None:
             rt.telemetry.note_heartbeat(meta.get("node", a),
@@ -1528,12 +1642,42 @@ class ClusterExecutor(ExecutorBackend):
         """Connection-death hook: recover even when nothing was in
         flight — the dead node may hold the only copy of published
         results (DESIGN.md §15)."""
+        if self._detector is not None:
+            self._detector.note_removed(a)
         if self._closing:
             return
         if self.async_plane:
             self._kick_restart(a, ch)
         else:
             self._restart_agent(a, ch)
+
+    # -- liveness monitor (DESIGN.md §19) ------------------------------------
+    def _liveness_loop(self) -> None:
+        """Poll the failure detector and act on ``dead`` verdicts by
+        closing the node's channel — everything downstream (failing the
+        in-flight tasks retryable, respawn, §15 lineage re-execution) is
+        the one existing ``on_close`` recovery path."""
+        from .fault import DEAD
+        det = self._detector
+        poll = max(0.02, min(0.25, self.liveness_cfg.suspicion_s / 8.0))
+        while not self._liveness_stop.wait(poll):
+            if self._closing:
+                return
+            for a in range(self.n_agents):
+                ch = self._channels[a]
+                if ch is None or ch.closed or not self._agent_up[a]:
+                    continue   # down or respawning: recovery owns it
+                dl = self._deadline_inflight[a]
+                if dl:
+                    with self._stats_lock:
+                        oldest = min(dl.values()) if dl else None
+                    det.note_deadline(a, oldest)
+                else:
+                    det.note_deadline(a, None)
+                if det.assess(a) == DEAD:
+                    with self._stats_lock:
+                        self.liveness_kills += 1
+                    ch.close()
 
     # -- async dispatch pump (DESIGN.md §18) ---------------------------------
     def _schedule_pump(self) -> None:
@@ -1623,6 +1767,9 @@ class ClusterExecutor(ExecutorBackend):
     def shutdown(self, wait: bool = True, timeout: float = 10.0) -> None:
         from ..cluster.protocol import ConnectionClosed
         self._closing = True
+        self._liveness_stop.set()
+        if self._liveness_thread is not None:
+            self._liveness_thread.join(timeout=2.0)
         self._halt_dispatch()
         if self.runtime is not None:
             self.runtime.store.set_fetcher(None)
@@ -1694,6 +1841,18 @@ class ClusterExecutor(ExecutorBackend):
                         "structure": structure, "n_out": n_out}
                 if token not in self._shipped_fns[a]:
                     meta["fn"] = blob
+                if t.deadline_s is not None:
+                    # the agent watchdog enforces deadline_s at the body
+                    # (kills the wedged pool worker); the detector's
+                    # slacked copy is the backstop for an agent too
+                    # wedged to run its own watchdog.  Registered BEFORE
+                    # the send: the reply callback (which pops) can fire
+                    # on the reader thread the instant the send lands
+                    meta["deadline_s"] = t.deadline_s
+                    with self._stats_lock:
+                        self._deadline_inflight[a][id(ex)] = (
+                            time.monotonic() + t.deadline_s
+                            + self._deadline_slack)
                 ch.request_cb(
                     meta, frames,
                     lambda rmeta, rframes, err, _w=worker, _a=a, _ch=ch,
@@ -1724,6 +1883,9 @@ class ClusterExecutor(ExecutorBackend):
                             if src is not None:
                                 st.reattribute_to_p2p(k, src[0], dest=a)
         except (ConnectionClosed, OSError) as err:
+            if t.deadline_s is not None and self._deadline_inflight:
+                with self._stats_lock:
+                    self._deadline_inflight[a].pop(id(ex), None)
             if not self._closing:
                 if self.async_plane:
                     self._kick_restart(a, ch)
@@ -1770,6 +1932,9 @@ class ClusterExecutor(ExecutorBackend):
                   err) -> None:
         """Completion path, on the channel reader (or its failure
         drainer): exactly one call per streamed task."""
+        if ex.t.deadline_s is not None and self._deadline_inflight:
+            with self._stats_lock:
+                self._deadline_inflight[a].pop(id(ex), None)
         if err is not None:
             if not self._closing:
                 if self.async_plane:
@@ -2113,6 +2278,12 @@ class ClusterExecutor(ExecutorBackend):
                     new_ch = self.cluster.respawn(a)
                 except Exception:
                     new_ch = None
+            if self._deadline_inflight:
+                # in-flight deadline entries die with the channel (each
+                # reply callback also pops its own — this is belt and
+                # braces against the detector chasing ghosts)
+                with self._stats_lock:
+                    self._deadline_inflight[a].clear()
             with self._order_locks[a]:
                 self._resident[a] = set()
                 self._shipped_fns[a] = set()
@@ -2144,6 +2315,21 @@ class ClusterExecutor(ExecutorBackend):
                 self.agent_restarts += 1
 
     # -- metrics -------------------------------------------------------------
+    def liveness(self) -> Dict[int, dict]:
+        """Per-agent liveness view (state, beat age, beat count) for
+        ``/api/status`` and the dashboard — the failure detector's own
+        numbers, so what the UI shows is exactly what verdicts use.
+        Agents between channel death and reinstall report ``respawning``."""
+        det = self._detector
+        snap = det.snapshot() if det is not None else {}
+        out: Dict[int, dict] = {}
+        for a in range(self.n_agents):
+            ent = snap.get(a)
+            if ent is None:
+                ent = {"state": "respawning", "beat_age_s": None, "beats": 0}
+            out[a] = ent
+        return out
+
     def agent_stats(self) -> List[Optional[dict]]:
         """Round-trip per-agent stats (pool + node plane); ``None`` for
         agents that are down."""
@@ -2167,6 +2353,7 @@ class ClusterExecutor(ExecutorBackend):
             "pipeline_depth": self.pipeline_depth,
             "control_plane": self.control_plane,
             "agent_restarts": self.agent_restarts,
+            "liveness_kills": self.liveness_kills,
             "p2p": self.p2p,
             "broadcasts": self.broadcasts,
             "puts": self.puts,

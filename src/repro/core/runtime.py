@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .config import resolve as resolve_knob
 from .dag import TaskGraph, TaskNode
 from .executors import make_executor
 from .fault import PoisonedInputError, RetryPolicy, SpeculationConfig
@@ -158,6 +159,10 @@ class Runtime:
         inline_max: Optional[int] = None,
         heartbeat_s: Optional[float] = None,
         p2p: Optional[bool] = None,
+        liveness: Optional[bool] = None,
+        suspicion_s: Optional[float] = None,
+        deadline_s: Optional[float] = None,
+        resolve_timeout_s: Optional[float] = None,
     ):
         # memory governance (DESIGN.md §13): explicit knob beats
         # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
@@ -168,6 +173,13 @@ class Runtime:
         # dispatch pipelining (DESIGN.md §14): explicit knob beats
         # RJAX_PIPELINE_DEPTH; depth 1 = stop-and-wait
         self.pipeline_depth = pipeline_depth_from_env(pipeline_depth)
+        # fault-tolerance knobs (DESIGN.md §19): how long a dispatch may
+        # wait for an input datum, and the default per-task deadline
+        # (per-call submit(deadline_s=) overrides)
+        self.resolve_timeout_s = resolve_knob(
+            resolve_timeout_s, "RJAX_RESOLVE_TIMEOUT_S", None, 30.0, float)
+        self.default_deadline_s = resolve_knob(
+            deadline_s, "RJAX_DEADLINE_S", None, None, float)
         backend_opts = {}
         if backend == "process" and self.memory_budget:
             backend_opts["memory_budget"] = self.memory_budget
@@ -187,6 +199,12 @@ class Runtime:
                 backend_opts["control_plane"] = control_plane
             if p2p is not None:
                 backend_opts["p2p"] = p2p
+            # liveness failure detector (DESIGN.md §19): resolved inside
+            # ClusterExecutor (explicit > env > default), like p2p
+            if liveness is not None:
+                backend_opts["liveness"] = liveness
+            if suspicion_s is not None:
+                backend_opts["suspicion_s"] = suspicion_s
             # agents learn the budget from the welcome handshake (their
             # own --memory-budget flag wins; see repro.cluster.agent)
             if self.memory_budget and getattr(cluster, "memory_budget", None) is None:
@@ -316,8 +334,14 @@ class Runtime:
         speculatable: bool = True,
         inout: Sequence[Future] = (),
         placement_hint: Optional[int] = None,
+        deadline_s: Optional[float] = None,
     ):
         """Submit one asynchronous task; returns ``returns`` Future(s).
+
+        ``deadline_s`` bounds the task body's running time (DESIGN.md
+        §19): an attempt running longer has its worker killed and fails
+        retryable.  Defaults to ``runtime_start(deadline_s=)`` /
+        ``RJAX_DEADLINE_S``; ``None`` = unbounded.
 
         ``inout`` lists argument Futures the task semantically *updates*: the
         runtime bumps their datum version (COMPSs renaming) so later readers
@@ -369,6 +393,8 @@ class Runtime:
             dep_keys=dep_keys, out_keys=out_keys,
             max_retries=self.retry.max_retries if max_retries is None else max_retries,
             priority=priority, speculatable=speculatable,
+            deadline_s=(self.default_deadline_s if deadline_s is None
+                        else float(deadline_s)),
         )
         with self._inflight_cond:
             self._inflight += 1
@@ -394,6 +420,7 @@ class Runtime:
         max_retries: Optional[int] = None,
         priority: int = 0,
         speculatable: bool = True,
+        deadline_s: Optional[float] = None,
     ) -> List[Any]:
         """Fan-out submission: one task per entry of ``args_list`` (each a
         tuple of positional arguments), amortizing the per-task graph,
@@ -411,6 +438,7 @@ class Runtime:
         tids = self.graph.next_task_ids(n)
         dids = iter(self.store.new_data_ids(n * returns))
         max_r = self.retry.max_retries if max_retries is None else max_retries
+        dl = self.default_deadline_s if deadline_s is None else float(deadline_s)
 
         nodes: List[TaskNode] = []
         futures_out: List[Any] = []
@@ -429,7 +457,7 @@ class Runtime:
                 dep_keys=dep_keys,
                 out_keys=[f.key for f in out_futures],
                 max_retries=max_r, priority=priority,
-                speculatable=speculatable,
+                speculatable=speculatable, deadline_s=dl,
             ))
             futures_out.append(out_futures[0] if returns == 1
                                else tuple(out_futures))
@@ -465,7 +493,7 @@ class Runtime:
                 if not block:
                     raise _InputsNotReady()
                 try:
-                    v = self.store.get(f.key, timeout=30.0,
+                    v = self.store.get(f.key, timeout=self.resolve_timeout_s,
                                        materialize=materialize)
                 except TimeoutError as terr:
                     with self._recover_lock:
@@ -556,14 +584,17 @@ class Runtime:
                            worker: int, node_id: int, t0: float,
                            t_run: Optional[float] = None) -> None:
         allowed = t.max_retries
-        backoff = self.retry.backoff_seconds
-        if getattr(err, "lost_input", False):
+        lost = bool(getattr(err, "lost_input", False))
+        if lost:
             allowed += LOST_INPUT_RETRIES
-            # pace the retry: the datum only reappears once recovery has
-            # re-executed its producer (see LOST_INPUT_BACKOFF_S)
-            backoff = max(backoff,
-                          min(1.0, LOST_INPUT_BACKOFF_S * t.attempts))
         if self.retry.should_retry(t.attempts, allowed, err):
+            # one unified backoff policy (DESIGN.md §19): exponential in
+            # the attempt number with bounded jitter, folded with the
+            # lost-input pacing — the datum only reappears once lineage
+            # recovery has re-executed its producer
+            backoff = self.retry.delay_for(
+                t.attempts, lost_input=lost,
+                lost_input_pace=LOST_INPUT_BACKOFF_S)
             if backoff:
                 # completions run on shared threads (the pool collector, a
                 # channel reader) — a blocking sleep there would stall

@@ -58,9 +58,10 @@ EXECUTOR_STAT_KEYS = (
     "pipeline_depth",
     # process backend
     "worker_restarts", "descriptor_sends", "batched_sends",
-    "segments", "bytes_planed", "refs_shipped",
+    "segments", "bytes_planed", "refs_shipped", "deadline_kills",
     # cluster backend
-    "n_agents", "workers_per_node", "agent_restarts", "broadcasts",
+    "n_agents", "workers_per_node", "agent_restarts", "liveness_kills",
+    "broadcasts",
     "puts", "refs", "fetches", "fetch_bytes", "bytes_shipped",
     "relay_result_bytes", "remote_results", "deferred_result_bytes",
     "relay_bytes",
@@ -200,6 +201,16 @@ class TelemetryHub:
                      "inflight": inflight.get(nid, 0)}
             entry.update(ent.get("payload") or {})
             nodes[str(nid)] = entry
+        # failure-detector verdicts (DESIGN.md §19): merged per node so the
+        # dashboard shows exactly what liveness decisions are based on —
+        # including nodes that have never beaten (install is a synthetic
+        # beat, so they still appear, aging towards suspect/dead)
+        for nid, view in self._executor_liveness(runtime).items():
+            entry = nodes.setdefault(
+                str(nid), {"heartbeats": 0, "age_s": None,
+                           "inflight": inflight.get(nid, 0)})
+            entry["state"] = view.get("state")
+            entry["beat_age_s"] = view.get("beat_age_s")
         return {
             "name": runtime.name,
             "backend": runtime.backend,
@@ -215,6 +226,18 @@ class TelemetryHub:
                      "dropped": self.stream.dropped},
             "nodes": nodes,
         }
+
+    @staticmethod
+    def _executor_liveness(runtime) -> dict:
+        """The cluster executor's failure-detector snapshot (``{}`` for
+        backends without one)."""
+        live = getattr(getattr(runtime, "executor", None), "liveness", None)
+        if not callable(live):
+            return {}
+        try:
+            return live() or {}
+        except Exception:
+            return {}
 
     def snapshot_tasks(self, runtime, since: int = 0,
                        limit: Optional[int] = None) -> dict:

@@ -1,0 +1,85 @@
+"""Task deadlines (DESIGN.md §19): a body that overruns ``deadline_s``
+has its worker killed and the attempt fails retryable
+(``DeadlineExceededError``) — enforced by the process backend's
+head-of-queue monitor and, on the cluster backend, by the agent-side
+watchdog.  The hang-once pattern (marker file) proves the retry then
+completes normally."""
+import os
+
+import pytest
+
+from repro.core import api
+from repro.core.futures import TaskFailedError
+
+
+def hang_once(marker: str, result: int):
+    """Sleeps 'forever' on the first attempt, instant on the retry."""
+    import os
+    import time
+    if not os.path.exists(marker):
+        with open(marker, "w"):
+            pass
+        time.sleep(60)
+    return result
+
+
+def hang_always():
+    import time
+    time.sleep(60)
+
+
+def test_process_deadline_kills_and_retry_completes(tmp_path):
+    """Runtime-default deadline (``runtime_start(deadline_s=)``): the
+    wedged first attempt is killed by the pool's deadline monitor, the
+    retry completes, and the kill is ledgered."""
+    marker = str(tmp_path / "hung")
+    with api.runtime_start(n_workers=2, backend="process",
+                           deadline_s=1.0, max_retries=1) as rt:
+        t = api.task(hang_once, name="hang_once")
+        assert api.wait_on(t(marker, 42), timeout=60) == 42
+        assert rt.executor.stats()["deadline_kills"] >= 1
+    assert os.path.exists(marker)
+
+
+def test_process_deadline_exhausted_surfaces_deadline_error():
+    with api.runtime_start(n_workers=2, backend="process") as rt:
+        f = rt.submit(hang_always, (), {}, name="hang_always",
+                      deadline_s=0.5, max_retries=0)
+        with pytest.raises(TaskFailedError) as exc:
+            api.wait_on(f, timeout=60)
+        assert "deadline" in str(exc.value).lower()
+
+
+def test_per_call_deadline_overrides_runtime_default(tmp_path):
+    """submit(deadline_s=) wins over the runtime default: here the
+    runtime default is generous and the per-call one is what kills."""
+    marker = str(tmp_path / "hung")
+    with api.runtime_start(n_workers=2, backend="process",
+                           deadline_s=120.0) as rt:
+        f = rt.submit(hang_once, (marker, 7), {}, name="hang_once",
+                      deadline_s=1.0, max_retries=1)
+        assert api.wait_on(f, timeout=60) == 7
+        assert rt.executor.stats()["deadline_kills"] >= 1
+
+
+def test_thread_backend_ignores_deadline_gracefully():
+    """The thread backend cannot kill a body (same address space); a
+    deadline on a well-behaved task must be a no-op, not an error."""
+    with api.runtime_start(n_workers=2, backend="thread", deadline_s=5.0):
+        t = api.task(lambda x: x * 2, name="dbl")
+        assert api.wait_on(t(21), timeout=30) == 42
+
+
+def test_cluster_agent_watchdog_kills_and_retry_completes(tmp_path):
+    """Cluster backend: the per-task deadline rides the task message;
+    the agent's watchdog kills the wedged pool worker and ships back a
+    retryable ``DeadlineExceededError`` — the agent itself survives (no
+    respawn) and the retry completes."""
+    marker = str(tmp_path / "hung")
+    with api.runtime_start(backend="cluster", n_agents=2,
+                           workers_per_node=2, max_retries=1) as rt:
+        t = api.task(hang_once, name="hang_once", deadline_s=1.5,
+                     max_retries=1)
+        assert api.wait_on(t(marker, 99), timeout=90) == 99
+        # killed a pool worker, not the agent: no agent respawn happened
+        assert rt.executor.stats()["agent_restarts"] == 0

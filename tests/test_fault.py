@@ -1,0 +1,181 @@
+"""Fault-tolerance policy units (DESIGN.md §19): retry backoff math, the
+``FailureDetector`` state machine against a fake clock, and the runtime
+honoring ``backoff_seconds`` end to end (the regression for the knob that
+previously existed but was never applied)."""
+import time
+
+import pytest
+
+from repro.core import api
+from repro.core.fault import (
+    ALIVE,
+    DEAD,
+    SUSPECT,
+    FailureDetector,
+    LivenessConfig,
+    RetryPolicy,
+)
+
+
+# ------------------------------------------------------------ RetryPolicy
+def test_delay_for_exponential_floor_and_jitter_ceiling():
+    """Attempt N waits at least ``backoff * factor**(N-1)`` and at most
+    that times ``1 + jitter`` — pinned with the rng at both extremes."""
+    p = RetryPolicy(backoff_seconds=0.5, backoff_factor=2.0,
+                    backoff_max=30.0, jitter=0.25)
+    for n in (1, 2, 3, 4):
+        floor = 0.5 * 2.0 ** (n - 1)
+        assert p.delay_for(n, rng=lambda: 0.0) == pytest.approx(floor)
+        assert p.delay_for(n, rng=lambda: 1.0) == pytest.approx(floor * 1.25)
+        mid = p.delay_for(n, rng=lambda: 0.5)
+        assert floor <= mid <= floor * 1.25
+
+
+def test_delay_for_caps_at_backoff_max():
+    p = RetryPolicy(backoff_seconds=1.0, backoff_factor=10.0, backoff_max=5.0,
+                    jitter=0.0)
+    assert p.delay_for(1) == 1.0
+    assert p.delay_for(2) == 5.0   # 10.0 capped
+    assert p.delay_for(9) == 5.0
+
+
+def test_delay_for_zero_backoff_is_immediate():
+    p = RetryPolicy()   # backoff_seconds=0.0: the historical behavior
+    assert p.delay_for(1) == 0.0
+    assert p.delay_for(7) == 0.0
+
+
+def test_delay_for_lost_input_pacing():
+    """Lost-input failures are paced even with no backoff configured
+    (§15: retries must not race the lineage rebuild), and the pacing
+    floor combines with — never weakens — the exponential term."""
+    p = RetryPolicy(jitter=0.0)
+    assert p.delay_for(1, lost_input=True, lost_input_pace=0.25) == 0.25
+    assert p.delay_for(3, lost_input=True, lost_input_pace=0.25) == 0.75
+    assert p.delay_for(9, lost_input=True, lost_input_pace=0.25) == 1.0  # capped
+    strong = RetryPolicy(backoff_seconds=2.0, jitter=0.0)
+    assert strong.delay_for(1, lost_input=True) == 2.0   # backoff dominates
+
+
+def test_runtime_waits_backoff_between_attempts():
+    """End-to-end regression: with ``retry_backoff_s`` set, the gap
+    between attempt 1 and attempt 2 is at least the configured base (the
+    knob used to be silently ignored)."""
+    stamps = []
+
+    with api.runtime_start(n_workers=2, backend="thread", max_retries=1,
+                           retry_backoff_s=0.3):
+        def flaky():
+            stamps.append(time.monotonic())
+            if len(stamps) == 1:
+                raise ValueError("first attempt fails")
+            return "ok"
+
+        t = api.task(flaky, name="flaky")
+        assert api.wait_on(t(), timeout=30) == "ok"
+
+    assert len(stamps) == 2
+    gap = stamps[1] - stamps[0]
+    assert gap >= 0.3, f"retry fired after {gap:.3f}s, expected >= 0.3s"
+    # and with jitter bounded: never more than base * (1 + 0.25) + slack
+    assert gap < 0.3 * 1.25 + 2.0
+
+
+# -------------------------------------------------------- FailureDetector
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def make_detector(suspicion_s=1.0, heartbeat_s=0.1, enabled=True,
+                  dead_factor=2.0, min_grace_beats=3.0):
+    clock = FakeClock()
+    det = FailureDetector(
+        LivenessConfig(enabled=enabled, suspicion_s=suspicion_s,
+                       dead_factor=dead_factor,
+                       min_grace_beats=min_grace_beats),
+        heartbeat_s, clock=clock)
+    return det, clock
+
+
+def test_detector_alive_suspect_dead_progression():
+    det, clock = make_detector(suspicion_s=1.0, heartbeat_s=0.1)
+    det.note_install(0)
+    assert det.assess(0) == ALIVE
+    clock.t += 0.9
+    assert det.assess(0) == ALIVE
+    clock.t += 0.2            # age 1.1 > suspicion 1.0
+    assert det.assess(0) == SUSPECT
+    clock.t += 1.0            # age 2.1 > dead 2.0
+    assert det.assess(0) == DEAD
+    assert det.snapshot()[0]["state"] == DEAD
+
+
+def test_detector_beat_resets_age():
+    det, clock = make_detector(suspicion_s=1.0, heartbeat_s=0.1)
+    det.note_install(0)
+    clock.t += 1.5
+    assert det.assess(0) == SUSPECT
+    det.note_beat(0)
+    assert det.assess(0) == ALIVE
+    assert det.snapshot()[0]["beats"] == 1
+
+
+def test_detector_install_counts_as_synthetic_beat():
+    """A node wedged at birth (never beat once) still ages out."""
+    det, clock = make_detector(suspicion_s=0.5, heartbeat_s=0.1)
+    det.note_install(2)
+    clock.t += 5.0
+    assert det.assess(2) == DEAD
+
+
+def test_detector_grace_beats_floor():
+    """A suspicion window tighter than the beat cadence never fires
+    before ``min_grace_beats`` beat periods — no false kills when the
+    operator sets suspicion_s < heartbeat_s."""
+    det, clock = make_detector(suspicion_s=0.1, heartbeat_s=1.0,
+                               min_grace_beats=3.0)
+    det.note_install(0)
+    clock.t += 2.5             # > suspicion, < 3 beat periods
+    assert det.assess(0) == ALIVE
+    clock.t += 1.0             # 3.5 > 3 beat periods
+    assert det.assess(0) != ALIVE
+
+
+def test_detector_inactive_without_heartbeats():
+    """heartbeat_s=0 (heartbeats off) means beat age carries no
+    information: never suspect on it."""
+    det, clock = make_detector(heartbeat_s=0.0)
+    det.note_install(0)
+    clock.t += 1e6
+    assert det.assess(0) == ALIVE
+    det2, clock2 = make_detector(enabled=False)
+    assert not det2.active
+
+
+def test_detector_deadline_overrides_beats():
+    """An in-flight request past its deadline marks the node dead even
+    while it beats — the SIGSTOP-adjacent 'beating but wedged' case."""
+    det, clock = make_detector(suspicion_s=10.0, heartbeat_s=0.1)
+    det.note_install(0)
+    det.note_deadline(0, clock.t + 1.0)
+    det.note_beat(0)
+    assert det.assess(0) == ALIVE
+    clock.t += 1.5
+    det.note_beat(0)           # still beating...
+    assert det.assess(0) == DEAD
+    det.note_deadline(0, None)   # request completed after all
+    assert det.assess(0) == ALIVE
+
+
+def test_detector_removed_node_is_dead_until_reinstalled():
+    det, clock = make_detector()
+    det.note_install(0)
+    det.note_removed(0)
+    assert det.assess(0) == DEAD
+    assert 0 not in det.snapshot()
+    det.note_install(0)
+    assert det.assess(0) == ALIVE

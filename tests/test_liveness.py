@@ -1,0 +1,107 @@
+"""Liveness failure detection over the heartbeat plane (DESIGN.md §19).
+
+The headline property: an agent that *wedges without dying* (SIGSTOP —
+the TCP connection stays open, so before this layer the job hung
+forever) is detected by beat age alone, its channel is closed, and the
+existing respawn/lineage recovery finishes the job with bitwise-identical
+results.  Plus: the detector's verdicts surface in ``/api/status``, and
+conservative settings never false-kill a healthy cluster."""
+import os
+import signal
+import time
+
+import pytest
+
+from repro.core import api
+
+
+def work(i: int) -> float:
+    """Deterministic, small-result body (results ride the reply inline:
+    no peer pulls can block on a frozen node's data plane)."""
+    import time
+
+    import numpy as np
+    time.sleep(0.1)
+    a = np.arange(200, dtype=np.float64) * (i + 1)
+    return float(np.sqrt(a).sum())
+
+
+def expected(i: int) -> float:
+    import numpy as np
+    a = np.arange(200, dtype=np.float64) * (i + 1)
+    return float(np.sqrt(a).sum())
+
+
+@pytest.mark.chaos
+def test_sigstop_agent_detected_and_job_completes_bitwise():
+    """SIGSTOP an agent mid-run: no TCP disconnect ever happens, yet the
+    failure detector declares it dead within the suspicion window, the
+    channel close drives the normal respawn path, and every result is
+    bitwise-identical to the reference."""
+    n_tasks = 60
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                           heartbeat_s=0.2, suspicion_s=0.6,
+                           max_retries=4) as rt:
+        t = api.task(work, name="work", max_retries=4)
+        futures = t.map([(i,) for i in range(n_tasks)])
+        time.sleep(0.5)   # let dispatch spread over both agents
+        victim = rt.executor.cluster._procs[1]
+        assert victim is not None and victim.poll() is None
+        os.kill(victim.pid, signal.SIGSTOP)
+        t_stop = time.monotonic()
+        results = api.wait_on(futures, timeout=120)
+        ex = rt.executor
+        # detected by liveness (beat age), not by a disconnect
+        assert ex.liveness_kills >= 1
+        assert ex.agent_restarts >= 1
+        detect_window = time.monotonic() - t_stop
+        assert detect_window < 60, "detection took implausibly long"
+    assert results == [expected(i) for i in range(n_tasks)]
+
+
+def test_no_false_kills_with_default_settings():
+    """Conservative (default) liveness settings on a healthy cluster:
+    zero kills, zero restarts — the detector must never create the
+    failures it exists to catch."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                           heartbeat_s=0.2) as rt:
+        t = api.task(work, name="work")
+        out = api.wait_on(t.map([(i,) for i in range(12)]), timeout=60)
+        assert out == [expected(i) for i in range(12)]
+        assert rt.executor.liveness_kills == 0
+        assert rt.executor.agent_restarts == 0
+        states = {v["state"] for v in rt.executor.liveness().values()}
+        assert states == {"alive"}
+
+
+def test_liveness_surfaces_in_api_status():
+    """``/api/status`` node entries carry the detector's verdict and the
+    beat age it is based on."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           heartbeat_s=0.2, telemetry=True) as rt:
+        t = api.task(lambda x: x + 1, name="inc")
+        assert api.wait_on(t(1), timeout=60) == 2
+        deadline = time.monotonic() + 10
+        snap = {}
+        while time.monotonic() < deadline:
+            snap = rt.telemetry.snapshot_status(rt)
+            nodes = snap.get("nodes", {})
+            if {"0", "1"} <= set(nodes) and all(
+                    "state" in n for n in nodes.values()):
+                break
+            time.sleep(0.1)
+        nodes = snap["nodes"]
+        assert {"0", "1"} <= set(nodes)
+        for n in nodes.values():
+            assert n["state"] == "alive"
+            assert n["beat_age_s"] is not None and n["beat_age_s"] < 5.0
+
+
+def test_liveness_disabled_runs_clean():
+    """``liveness=False`` (RJAX_LIVENESS=0): no detector thread, no
+    kills, everything still works."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           liveness=False) as rt:
+        t = api.task(lambda x: x * 3, name="tri")
+        assert api.wait_on(t(5), timeout=60) == 15
+        assert rt.executor.liveness_kills == 0
