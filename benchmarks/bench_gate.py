@@ -68,6 +68,8 @@ TELEMETRY_SLACK_US = 25.0        # ...plus the min-of-repeats jitter floor
 PLANE_TOLERANCE = 1.25           # 8-agent vs 2-agent dispatch, same run...
 PLANE_SLACK_US = 25.0            # ...plus the min-of-repeats jitter floor
 PLANE_THREAD_SLACK = 1           # transient helper thread racing the sample
+CHECKSUM_TOLERANCE = 1.3         # CRC32 trailers on vs off, same box
+#                                  same run (min-of-repeats each side)
 
 
 def deep_merge(dst: dict, src: dict) -> dict:
@@ -208,6 +210,49 @@ def check(pr: dict, baseline: dict) -> list:
                     f"control_plane: {hi['sched_threads']} scheduler threads "
                     f"@8 agents > {thr_limit} — dispatch is growing threads "
                     f"with agent count again")
+    rec = pr.get("multi_node", {}).get("recovery")
+    if rec is None:
+        if baseline.get("multi_node", {}).get("recovery"):
+            failures.append("multi_node.recovery: missing from PR run")
+    else:
+        on = rec.get("replication_on", {})
+        off = rec.get("replication_off", {})
+        hit_ok = on.get("replica_hits", 0) > 0
+        zero_ok = on.get("reexecuted") == 0
+        lineage_ok = off.get("reexecuted", 0) > 0
+        ok = hit_ok and zero_ok and lineage_ok
+        print(f"  [{'ok' if ok else 'FAIL'}] recovery: replication-on "
+              f"re-executed {on.get('reexecuted')} "
+              f"({on.get('replica_hits')} replica hits, "
+              f"{on.get('recover_s')}s); replication-off re-executed "
+              f"{off.get('reexecuted')} ({off.get('recover_s')}s)")
+        if not zero_ok:
+            failures.append(
+                f"recovery.replication_on.reexecuted: "
+                f"{on.get('reexecuted')} != 0 — replicated producers "
+                f"re-ran instead of serving from replicas")
+        if not hit_ok:
+            failures.append(
+                "recovery.replication_on.replica_hits: 0 — no store "
+                "placeholder was redirected to a surviving replica")
+        if not lineage_ok:
+            failures.append(
+                "recovery.replication_off.reexecuted: 0 — the control "
+                "run lost no work, the kill did not exercise recovery")
+    wc = pr.get("multi_node", {}).get("wire_checksum")
+    if wc is None:
+        if baseline.get("multi_node", {}).get("wire_checksum"):
+            failures.append("multi_node.wire_checksum: missing from PR run")
+    else:
+        ratio = wc.get("overhead_ratio")
+        ok = ratio is not None and ratio <= CHECKSUM_TOLERANCE
+        print(f"  [{'ok' if ok else 'FAIL'}] wire checksum: "
+              f"{wc.get('off_s')}s off -> {wc.get('on_s')}s on "
+              f"(ratio {ratio}, limit {CHECKSUM_TOLERANCE})")
+        if not ok:
+            failures.append(
+                f"wire_checksum.overhead_ratio: {ratio} > "
+                f"{CHECKSUM_TOLERANCE} — CRC32 trailers cost too much")
     for where, ooc in iter_out_of_core(pr):
         spills = ooc.get("spills", 0) + ooc.get("node_spills", 0) \
             + ooc.get("plane_spills", 0)

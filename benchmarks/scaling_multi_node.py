@@ -206,6 +206,8 @@ def run_live(agent_counts=(1, 2), wpn: int = 2, json_path: str = None,
         dp = run_data_plane(wpn=wpn)
         coll = run_collectives(wpn=wpn)
         cp = run_control_plane(wpn=wpn)
+        rec = run_recovery(wpn=wpn)
+        wc = run_wire_checksum(wpn=wpn)
         top = max(agent_counts)
         base = min(agent_counts)
         payload = {"multi_node": {
@@ -219,6 +221,8 @@ def run_live(agent_counts=(1, 2), wpn: int = 2, json_path: str = None,
             "data_plane": dp,
             "collectives": coll,
             "control_plane": cp,
+            "recovery": rec,
+            "wire_checksum": wc,
         }}
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
@@ -375,6 +379,128 @@ def run_control_plane(wpn: int = 1) -> dict:
 
 def _nop(i):
     return i
+
+
+def _slow_frag(i):
+    import time as _t
+
+    import numpy as np
+    _t.sleep(0.15)
+    return np.sin(np.arange(20000, dtype=np.float64) * 1e-4 * (i + 1))
+
+
+def _frag_sum(a):
+    return float(a.sum())
+
+
+def run_recovery(wpn: int = 1) -> dict:
+    """Bounded recovery (DESIGN.md §20): SIGKILL one of 3 agents after a
+    round of costly producers lands, then time how long re-serving every
+    consumer takes — with k=1 replication (consumers are redirected to
+    buddy replicas, zero replicated producers re-execute) vs without
+    (full §15 lineage re-execution).  ``reexecuted`` with replication on
+    is gated at 0 by bench_gate.py."""
+    import signal
+
+    from repro.core import api
+
+    n = 9
+
+    def one(replication: int) -> dict:
+        rt = api.runtime_start(backend="cluster", n_agents=3,
+                               workers_per_node=wpn, tracing=False,
+                               replication=replication, heartbeat_s=0.2,
+                               reconnect_grace_s=0, max_retries=4)
+        try:
+            ex = rt.executor
+            prod = api.task(_slow_frag, name="slow_frag")
+            cons = api.task(_frag_sum, name="frag_sum")
+            frags = prod.map([(i,) for i in range(n)])
+            api.wait_on([cons(f) for f in frags], timeout=120)
+            if replication:
+                # replication is asynchronous: wait until the
+                # fire-and-forget buddy pulls are booked before killing
+                deadline = time.monotonic() + 15
+                while time.monotonic() < deadline:
+                    homed = [k for a in range(3)
+                             for k in rt.store.homed_keys(a)]
+                    with ex._stats_lock:
+                        placed = bool(homed) and all(
+                            ex._replicas.get(k) for k in homed)
+                    if placed:
+                        break
+                    time.sleep(0.05)
+            before = rt.graph.counters().get("retries", 0)
+            os.kill(ex.cluster._procs[1].pid, signal.SIGKILL)
+            t0 = time.perf_counter()
+            # the respawn (which redirects store placeholders at
+            # surviving replicas) must land before consumers re-resolve
+            deadline = time.monotonic() + 30
+            while ex.agent_restarts == 0 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            api.wait_on([cons(f) for f in frags], timeout=120)
+            return {
+                "recover_s": round(time.perf_counter() - t0, 3),
+                "reexecuted": int(rt.graph.counters().get("retries", 0)
+                                  - before),
+                "replica_hits": int(ex.replica_hits),
+                "replica_bytes": int(ex.replica_bytes),
+            }
+        finally:
+            api.runtime_stop(wait=False)
+
+    on = one(1)
+    off = one(0)
+    out = {"replication_on": on, "replication_off": off}
+    print(f"recovery [3 agents, SIGKILL mid-run]: replication on -> "
+          f"{on['recover_s']}s to re-serve, {on['reexecuted']} re-executed "
+          f"({on['replica_hits']} replica hits, {on['replica_bytes']} B "
+          f"replicated); off -> {off['recover_s']}s, "
+          f"{off['reexecuted']} re-executed from lineage")
+    return out
+
+
+def run_wire_checksum(wpn: int = 1) -> dict:
+    """CRC32 frame-trailer overhead (DESIGN.md §20): the same KNN tile
+    pipeline with and without ``RJAX_WIRE_CHECKSUM``, same box, same run
+    — bench_gate.py bounds the on/off wall-clock ratio."""
+    from repro.cluster import protocol
+    from repro.core import api
+
+    kw = dict(n_train=800, n_test=1600, d=20, k=5, n_classes=4,
+              train_fragments=4, test_blocks=4)
+
+    def one(on: bool) -> float:
+        saved = os.environ.get("RJAX_WIRE_CHECKSUM")
+        os.environ["RJAX_WIRE_CHECKSUM"] = "1" if on else "0"
+        protocol.refresh_checksum()
+        try:
+            api.runtime_start(backend="cluster", n_agents=2,
+                              workers_per_node=wpn, tracing=False)
+            try:
+                knn.run_knn(**kw)          # warm: agents up, fn shipped
+                best = float("inf")
+                for _ in range(3):
+                    t0 = time.perf_counter()
+                    knn.run_knn(**kw, seed=1)
+                    best = min(best, time.perf_counter() - t0)
+                return best
+            finally:
+                api.runtime_stop(wait=False)
+        finally:
+            if saved is None:
+                os.environ.pop("RJAX_WIRE_CHECKSUM", None)
+            else:
+                os.environ["RJAX_WIRE_CHECKSUM"] = saved
+            protocol.refresh_checksum()
+
+    off = one(False)
+    on = one(True)
+    out = {"off_s": round(off, 3), "on_s": round(on, 3),
+           "overhead_ratio": round(on / max(off, 1e-9), 3)}
+    print(f"wire checksum [knn tiles, 2 agents]: off {out['off_s']}s -> "
+          f"on {out['on_s']}s (ratio {out['overhead_ratio']})")
+    return out
 
 
 def run_live_out_of_core(wpn: int = 1, budget: str = "400K") -> dict:

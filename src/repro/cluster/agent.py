@@ -43,6 +43,7 @@ import sys
 import threading
 import time
 import traceback
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -104,6 +105,12 @@ class NodePlane:
         self._lock = threading.RLock()
         self._data: Dict[Tuple[int, int], Any] = {}
         self._tmp: Dict[int, Any] = {}
+        # per-key residency generations (DESIGN.md §20): bumped once per
+        # residency *mark* the scheduler ships (Put/Fetch directive,
+        # alias, broadcast leg) — the scheduler bumps its mirror ledger
+        # at the same message, so after a clean stream both sides agree
+        # and a resume manifest entry with a matching generation is valid
+        self._gens: Dict[Tuple[int, int], int] = {}
         # keys with a peer fetch in flight (DESIGN.md §15): registered on
         # the reader thread in wire order, resolved by the peer pool;
         # lookups block on the event so a Ref can never observe a gap
@@ -243,6 +250,26 @@ class NodePlane:
         with self._lock:
             self._tmp.pop(token, None)
 
+    def note_mark(self, key: Tuple[int, int]) -> int:
+        """Bump (and return) the residency generation for ``key`` —
+        called once per scheduler residency mark received (§20)."""
+        with self._lock:
+            g = self._gens.get(key, 0) + 1
+            self._gens[key] = g
+            return g
+
+    def manifest(self) -> List[Tuple[Tuple[int, int], int, int]]:
+        """The resume manifest: ``[(key, generation, nbytes), ...]`` for
+        every resident datum (pending fetches excluded — their bytes may
+        never land)."""
+        with self._lock:
+            out = []
+            for key, v in self._data.items():
+                nb = int(getattr(v, "nbytes", 0) or 0) \
+                    if hasattr(v, "nbytes") else struct_nbytes(v)
+                out.append((key, self._gens.get(key, 0), nb))
+            return out
+
     def dispose_spills(self) -> None:
         """Unlink still-spilled entries' files (agent shutdown); faulted
         views unlink their own file at GC."""
@@ -319,6 +346,14 @@ class NodeAgent:
         self._next_token = 1
         self._token_lock = threading.Lock()
         self._done = threading.Event()
+        # session resumption (DESIGN.md §20): settled by the welcome
+        self._session: Optional[str] = None
+        self._grace = 0.0
+        self._epoch = 0
+        self._last_mid = 0              # highest mid received (serve order)
+        self._sent_replies: "OrderedDict[int, tuple]" = OrderedDict()
+        self._conn_ok = threading.Event()   # cleared while reconnecting
+        self._conn_dead = False
         # per-slot deadline watchdogs (DESIGN.md §19): armed around the
         # pool invoke, they kill the slot's worker when the body overruns
         self._deadline_locks = [threading.Lock() for _ in range(self.workers)]
@@ -382,6 +417,12 @@ class NodeAgent:
         assert welcome.get("op") == "welcome", welcome
         self.node_id = welcome["node_id"]
         self.p2p = bool(welcome.get("p2p", True))
+        # session resumption (§20): keep the token; on a transient
+        # disconnect we re-dial within the grace window instead of dying
+        self._session = welcome.get("session")
+        self._grace = max(0.0, float(welcome.get("reconnect_grace_s") or 0.0))
+        self._epoch = int(welcome.get("epoch") or 0)
+        self._conn_ok.set()
         # CLI > env > welcome > default, uniformly (core/config.py)
         self.heartbeat_s = max(0.0, resolve_knob(
             self._heartbeat_cli, "RJAX_HEARTBEAT_S",
@@ -442,7 +483,16 @@ class NodeAgent:
             try:
                 meta, frames = recv_msg(self.sock)
             except ConnectionClosed:
-                return  # scheduler went away: nothing left to serve
+                # scheduler link dropped: resume the session within the
+                # grace window (§20), else exit and let respawn happen
+                if self._try_resume():
+                    continue
+                return
+            mid = meta.get("mid")
+            if mid is not None and mid > self._last_mid:
+                # the resume hello reports this high-water mark so the
+                # scheduler knows which in-flight requests we ever saw
+                self._last_mid = mid
             op = meta.get("op")
             if op == "task":
                 # pre-store Puts and the fn blob HERE, on the reader, before
@@ -461,7 +511,9 @@ class NodeAgent:
                     continue
                 self._slot_queues[meta["slot"]].put((meta, frames))
             elif op == "alias":
-                self.plane.alias(meta["token"], tuple(meta["key"]))
+                key = tuple(meta["key"])
+                self.plane.note_mark(key)
+                self.plane.alias(meta["token"], key)
             elif op == "bcast":
                 self._handle_bcast(meta, frames)
             elif op == "drop":
@@ -475,9 +527,140 @@ class NodeAgent:
                 self._reply({"op": "err", "mid": meta.get("mid"), "exc": None,
                              "tb": f"agent: unknown op {op!r}"})
 
+    _REPLAY_RING = 256   # recorded replies kept for resume replay
+
+    @property
+    def _resume_enabled(self) -> bool:
+        return bool(self._session) and self._grace > 0
+
+    def _record_reply(self, mid: int, meta: dict, frames) -> None:
+        # caller holds _send_lock.  Bounded: entries reference plane-held
+        # buffers, so the ring itself costs little extra memory, but it
+        # must not grow with job length
+        ring = self._sent_replies
+        ring[mid] = (meta, frames)
+        ring.move_to_end(mid)
+        while len(ring) > self._REPLAY_RING:
+            ring.popitem(last=False)
+
     def _reply(self, meta: dict, frames=()) -> None:
+        """Send a reply/push to the scheduler.  With session resumption
+        armed, a mid-carrying reply survives a transient disconnect: it
+        is recorded in the replay ring and the send retried once the
+        serve loop has swapped in the resumed socket (§20)."""
+        mid = meta.get("mid")
+        retryable = mid is not None and self._resume_enabled
+        while True:
+            if not self._conn_ok.wait(timeout=self._grace + 5.0):
+                raise ConnectionClosed("scheduler connection not restored")
+            if self._conn_dead:
+                raise ConnectionClosed("scheduler gone")
+            try:
+                with self._send_lock:
+                    inj = chaos.INJECTOR
+                    if inj is not None:
+                        # chaos seam (§19/§20): the node's uplink is
+                        # partitioned — every outbound message stalls
+                        inj.partition_stall(f"agent{self.node_id}-wire")
+                    if retryable:
+                        self._record_reply(mid, meta, frames)
+                    send_msg(self.sock, meta, frames)
+                return
+            except (ConnectionClosed, OSError) as err:
+                if not retryable:
+                    raise ConnectionClosed(str(err) or "send failed") from err
+                # the serve loop's recv fails too and drives the
+                # reconnect; wait for the swapped socket and retry
+                self._conn_ok.clear()
+
+    # -------------------------------------------- session resumption (§20)
+    def _try_resume(self) -> bool:
+        """Re-dial the scheduler and resume this session after a
+        transient disconnect.  Returns True with ``self.sock`` swapped to
+        the accepted resume connection, or False (grace exhausted,
+        session rejected, or resumption disabled) — the caller then exits
+        and the scheduler's respawn path takes over."""
+        if not self._resume_enabled or self._done.is_set():
+            return False
+        self._conn_ok.clear()
+        self._epoch += 1
+        deadline = time.monotonic() + self._grace + 2.0
+        delay = 0.05
+        while time.monotonic() < deadline and not self._done.is_set():
+            sock = None
+            try:
+                sock = socket.create_connection(self.addr, timeout=5.0)
+                try:
+                    sock.setsockopt(socket.IPPROTO_TCP,
+                                    socket.TCP_NODELAY, 1)
+                except OSError:
+                    pass
+                hello = {"op": "hello", "resume": self._session,
+                         "epoch": self._epoch, "node_id": self.node_id,
+                         "workers": self.workers, "pid": os.getpid(),
+                         "host": socket.gethostname(),
+                         "data_port": self.data_server.port,
+                         "seen_mid": self._last_mid,
+                         "manifest": self.plane.manifest()}
+                data_host = os.environ.get("RJAX_DATA_HOST")
+                if data_host:
+                    hello["data_host"] = data_host
+                send_msg(sock, hello)
+                sock.settimeout(10.0)
+                welcome, _ = recv_msg(sock)
+                sock.settimeout(None)
+            except (OSError, ConnectionClosed):
+                if sock is not None:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                time.sleep(delay)
+                delay = min(delay * 2, 0.5)
+                continue
+            if not welcome.get("resumed"):
+                # session superseded or grace expired scheduler-side:
+                # this process is dead weight, the respawn owns the node
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+                break
+            with self._send_lock:
+                old, self.sock = self.sock, sock
+            # fd hygiene: respawned pool workers must close the NEW
+            # scheduler socket at birth, and stop blocking on the old fd
+            old_fd = -1
+            try:
+                old_fd = old.fileno()
+            except OSError:
+                pass
+            self.pool.inherit_blockers.append(sock.fileno())
+            self._untrack_fd(old_fd)
+            try:
+                old.close()
+            except OSError:
+                pass
+            self._replay(welcome.get("outstanding") or ())
+            self._conn_ok.set()
+            return True
+        self._conn_dead = True
+        self._conn_ok.set()   # wake blocked repliers so they fail fast
+        return False
+
+    def _replay(self, outstanding) -> None:
+        """Re-send recorded replies for still-outstanding mids: the
+        first copy may have died in the old socket's buffers.  The
+        scheduler ignores a mid it has already completed."""
         with self._send_lock:
-            send_msg(self.sock, meta, frames)
+            for mid in outstanding:
+                entry = self._sent_replies.get(mid)
+                if entry is None:
+                    continue   # task still executing: reply comes later
+                try:
+                    send_msg(self.sock, entry[0], entry[1])
+                except (ConnectionClosed, OSError):
+                    return
 
     # ------------------------------------------------------------- telemetry
     def _telemetry_stats(self) -> dict:
@@ -527,7 +710,11 @@ class NodeAgent:
                              "t": time.time(),
                              "stats": self._telemetry_stats()})
             except (ConnectionClosed, OSError):
-                return
+                if not self._resume_enabled or self._conn_dead:
+                    return
+                # reconnecting: skip this beat, keep the loop alive —
+                # the resumed session needs heartbeats or the failure
+                # detector would declare the node dead post-resume
             if self._done.wait(self.heartbeat_s):
                 return
 
@@ -543,6 +730,7 @@ class NodeAgent:
         reader thread never blocks on a pull."""
         key = tuple(meta["key"])
         mid = meta["mid"]
+        self.plane.note_mark(key)
 
         def ack():
             try:
@@ -619,12 +807,16 @@ class NodeAgent:
 
         def walk(o):
             if isinstance(o, Put):
+                # generation bump regardless of the contains-skip: the
+                # scheduler bumped its mirror when it *sent* the mark
+                self.plane.note_mark(o.key)
                 if not self.plane.contains(o.key):   # probe, don't fault
                     # a Put payload is the datum's structure with Frame
                     # markers only (enc_value never nests other datums),
                     # so the protocol's own walker decodes it
                     self.plane.store(o.key, unpack_payload(o.value, frames))
             elif isinstance(o, Fetch):
+                self.plane.note_mark(o.key)
                 if self.plane.begin_fetch(o.key):
                     self._start_fetch(o)
             elif isinstance(o, (list, tuple)):
@@ -744,19 +936,25 @@ class NodeAgent:
                 for marker_key, v in _keyed_arrays(meta["structure"], self.plane):
                     keyed[id(v)] = marker_key
                 deadline_s = meta.get("deadline_s")
+                t_body = time.perf_counter()
                 if deadline_s is not None:
                     result = self._invoke_with_deadline(
                         slot, float(deadline_s), fn, args, kwargs, keyed)
                 else:
                     result = self.pool.invoke(slot, fn, args, kwargs,
                                               input_keys=keyed)
+                # body seconds, free of queue/dispatch latency — the
+                # scheduler's replication cost bar (DESIGN.md §20) needs
+                # the true producer cost, not its pipeline wait
+                dur = time.perf_counter() - t_body
                 structure, out_frames, tokens = self._encode_result(
                     result, meta.get("n_out", -1))
                 if inj is not None:
                     # chaos seam: a node draining slowly — reply latency
                     inj.sleep("stall", f"agent{self.node_id}-reply")
                 self._reply({"op": "done", "mid": mid, "structure": structure,
-                             "tokens": tokens}, out_frames)
+                             "tokens": tokens, "dur": round(dur, 6)},
+                            out_frames)
             except BaseException as err:  # noqa: BLE001 — ships to scheduler
                 tb = traceback.format_exc()
                 try:

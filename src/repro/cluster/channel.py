@@ -45,7 +45,8 @@ class _Pending:
 class AgentChannel:
     """A registered, live agent connection."""
 
-    def __init__(self, sock: socket.socket, node_id: int, hello: dict):
+    def __init__(self, sock: socket.socket, node_id: int, hello: dict,
+                 start_mid: int = 1):
         try:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         except OSError:
@@ -55,6 +56,13 @@ class AgentChannel:
         self.hello = hello            # {"workers": N, "pid": ..., "host": ...,
         #                                "data_port": ...}
         self.closed = False
+        # session-resumption interface parity with AsyncAgentChannel
+        # (DESIGN.md §20).  The executor only parks channels on the async
+        # control plane, but the surface must exist on both so the park
+        # logic never AttributeErrors under RJAX_CONTROL_PLANE=threads.
+        self.on_lost_pending: Optional[
+            Callable[[Dict[int, "_Pending"]], bool]] = None
+        self.liveness_killed = False
         # fired exactly once when the connection dies (crash OR close);
         # the executor uses it to start recovery even when no request was
         # in flight — a producer can die holding node-resident results
@@ -67,10 +75,24 @@ class AgentChannel:
         self._send_lock = threading.Lock()
         self._pending: Dict[int, _Pending] = {}
         self._pending_lock = threading.Lock()
-        self._next_mid = 1
+        self._next_mid = int(start_mid)
         self._reader = threading.Thread(target=self._read_loop, daemon=True,
                                         name=f"agent{node_id}-reader")
         self._reader.start()
+
+    @property
+    def next_mid(self) -> int:
+        """The next mid this channel would assign (mid monotonicity
+        across a resumed session, DESIGN.md §20)."""
+        with self._pending_lock:
+            return self._next_mid
+
+    def adopt_pending(self, pending: Dict[int, _Pending]) -> None:
+        """Re-register surviving in-flight slots from a predecessor
+        channel (session resumption)."""
+        with self._pending_lock:
+            for mid, slot in pending.items():
+                self._pending.setdefault(mid, slot)
 
     def data_addr(self) -> Optional[str]:
         """The agent's peer data-plane address (``host:port``): the host
@@ -101,6 +123,10 @@ class AgentChannel:
         inj = chaos.INJECTOR
         if inj is not None:
             inj.sleep("delay", f"sched-ch{self.node_id}")
+            # partition (§20): blackhole this channel's sends for a
+            # window without closing the socket.  Blocking is fine here —
+            # each legacy channel owns its own sender threads.
+            inj.partition_stall(f"sched-ch{self.node_id}")
 
     def request_async(self, meta: dict, frames: Sequence[Sequence] = ()):
         """Send a request and return a ``wait(timeout=None)`` callable that
@@ -139,14 +165,15 @@ class AgentChannel:
         return self.request_async(meta, frames)(timeout=timeout)
 
     def request_cb(self, meta: dict, frames: Sequence[Sequence],
-                   callback: Callable) -> None:
+                   callback: Callable) -> int:
         """Send a request whose reply is delivered as
         ``callback(meta, frames, error)`` on the channel's reader thread
-        (``error`` is None on success).  Exactly one invocation per
-        accepted request; if the *send itself* fails, the callback is NOT
-        invoked — the ``ConnectionClosed`` propagates to the caller, which
-        owns that task's completion (every other pending request is failed
-        through its own callback/waiter)."""
+        (``error`` is None on success); returns the assigned mid.
+        Exactly one invocation per accepted request; if the *send
+        itself* fails, the callback is NOT invoked — the
+        ``ConnectionClosed`` propagates to the caller, which owns that
+        task's completion (every other pending request is failed through
+        its own callback/waiter)."""
         slot = _Pending(callback=callback)
         with self._pending_lock:
             if self.closed:
@@ -169,6 +196,7 @@ class AgentChannel:
             self._fail_all()
             if owned:
                 raise
+        return mid
 
     def post(self, meta: dict, frames: Sequence[Sequence] = ()) -> None:
         """Fire-and-forget control message (no reply expected)."""
@@ -219,7 +247,7 @@ class AgentChannel:
     def _fail_all(self, err: Optional[BaseException] = None) -> None:
         with self._pending_lock:
             self.closed = True
-            pending = list(self._pending.values())
+            pending = dict(self._pending)
             self._pending.clear()
             on_close, self.on_close = self.on_close, None
         if on_close is not None:
@@ -230,10 +258,19 @@ class AgentChannel:
                              name=f"agent{self.node_id}-onclose").start()
         if not pending:
             return
+        # session resumption (§20): the executor may adopt the in-flight
+        # map instead of having every slot errored (see AsyncAgentChannel)
+        hook = self.on_lost_pending
+        if hook is not None:
+            try:
+                if hook(pending):
+                    return
+            except BaseException:
+                traceback.print_exc(file=sys.stderr)
         err = err if err is not None else ConnectionClosed(
             f"agent {self.node_id} connection lost", mid_message=True)
         cb_slots = []
-        for slot in pending:
+        for slot in pending.values():
             if slot.callback is not None:
                 cb_slots.append(slot)
             else:

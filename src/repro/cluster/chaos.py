@@ -32,6 +32,18 @@ Fault classes and the seams they fire at:
                ``deadline_s`` armed, the agent watchdog kills it.
 ``fetch-slow`` sleep ``arg`` seconds before a peer pull request is sent —
                a congested data plane.
+``partition``  blackhole a scheduler↔agent channel for ``arg`` seconds
+               without closing the socket: every send on the seam's
+               endpoint stalls until the window passes (TCP keeps the
+               stream intact, so nothing is *lost* — exactly what a
+               transient network partition looks like).  Distinct from
+               ``freeze``, which parks the DataServer.  Windows are
+               per-scope: one channel partitions, the rest keep flowing.
+``bitflip``    flip one bit of an out-of-band array frame before it is
+               sent (``protocol.send_msg``) — wire corruption.  With
+               ``RJAX_WIRE_CHECKSUM`` armed the receiver detects it and
+               fails the transfer retryably; without checksums this is
+               the silent corruption the knob exists to catch.
 =============  =========================================================
 
 Determinism: every (seam scope, fault) pair draws from its own
@@ -63,6 +75,8 @@ FAULTS: Dict[str, Tuple[float, float]] = {
     "freeze": (0.1, 0.0),        # half-open DataServer connection
     "hang": (0.1, 1.0),          # seconds the task body sleeps first
     "fetch-slow": (0.2, 0.05),   # seconds of added peer-pull latency
+    "partition": (0.02, 2.0),    # seconds a channel is blackholed
+    "bitflip": (0.05, 0.0),      # corrupt one array-frame byte pre-send
 }
 
 
@@ -83,6 +97,8 @@ class ChaosInjector:
         self.faults = dict(faults)
         self._lock = threading.Lock()
         self._streams: Dict[Tuple[str, str], random.Random] = {}
+        # open partition windows, scope -> monotonic deadline
+        self._windows: Dict[str, float] = {}
 
     # ------------------------------------------------------------- parsing
     @classmethod
@@ -150,6 +166,37 @@ class ChaosInjector:
         with self._lock:
             fire = self._stream(fault, scope).random() < rate
         return arg if fire else None
+
+    def partition_window(self, scope: str = "") -> float:
+        """The ``partition`` seam decision: seconds the caller must
+        stall before its send may proceed (0.0 = no partition).  While
+        a window is open no new rolls are drawn for the scope — one
+        partition event is one decision, however many sends pile up
+        behind it.  The caller does the stalling (synchronously or with
+        ``asyncio.sleep`` — the async control plane's writer coroutine
+        must not block its loop)."""
+        if "partition" not in self.faults:
+            return 0.0
+        now = time.monotonic()
+        with self._lock:
+            deadline = self._windows.get(scope, 0.0)
+            if now >= deadline:
+                rate, arg = self.faults["partition"]
+                if self._stream("partition", scope).random() < rate \
+                        and arg > 0.0:
+                    deadline = now + arg
+                    self._windows[scope] = deadline
+                else:
+                    return 0.0
+        return max(0.0, deadline - time.monotonic())
+
+    def partition_stall(self, scope: str = "") -> bool:
+        """Roll the ``partition`` seam and block out the window —
+        the synchronous seam body (agent send path, legacy channel)."""
+        remaining = self.partition_window(scope)
+        if remaining > 0.0:
+            time.sleep(remaining)
+        return remaining > 0.0
 
     def sleep(self, fault: str, scope: str = "") -> bool:
         """Roll and, on a hit, sleep the fault's argument.  Returns

@@ -13,12 +13,14 @@ node yourself).
 from __future__ import annotations
 
 import os
+import queue
+import secrets
 import socket
 import subprocess
 import sys
 import threading
 import time
-from typing import List, Optional
+from typing import Callable, Dict, List, Optional
 
 from .channel import AgentChannel
 from .protocol import recv_msg, send_msg
@@ -71,6 +73,12 @@ class LocalCluster:
         # welcome like the knobs above; an agent's own RJAX_HEARTBEAT_S
         # wins.  None = let agents use their default
         self.heartbeat_s: Optional[float] = None
+        # session resumption (DESIGN.md §20): the executor sets the grace
+        # window before accepting agents; each welcome carries a fresh
+        # session token the agent presents when it re-dials after a
+        # transient disconnect.  0/None = resumption disabled.
+        self.reconnect_grace_s: Optional[float] = None
+        self.session_tokens: Dict[int, str] = {}   # node_id -> current token
         # how accepted/respawned connections become channel objects: the
         # async control plane (DESIGN.md §18) swaps in AsyncAgentChannel
         # bound to its IOLoop; the default is the legacy thread-per-
@@ -85,6 +93,11 @@ class LocalCluster:
         self._agent_args = list(agent_args or ())
         self._procs: List[Optional[subprocess.Popen]] = [None] * self.n_agents
         self._closed = False
+        # background acceptor (started by the executor once the initial
+        # agents are in): routes resume hellos to the executor's handler
+        # and parks fresh hellos for respawn() to claim
+        self._acceptor: Optional[threading.Thread] = None
+        self._fresh_q: "queue.Queue" = queue.Queue()
         if spawn:
             for i in range(self.n_agents):
                 self._spawn(i)
@@ -128,6 +141,19 @@ class LocalCluster:
             raise ConnectionError(f"bad registration message: {hello}")
         return conn, hello
 
+    def _welcome_payload(self, nid: int) -> dict:
+        """Mint a fresh session for node ``nid`` and build its welcome.
+        A respawned process gets a NEW token — the old session (and any
+        reconnect attempt still carrying its token) is dead."""
+        tok = secrets.token_hex(8)
+        self.session_tokens[nid] = tok
+        return {"op": "welcome", "node_id": nid,
+                "memory_budget": self.memory_budget,
+                "p2p": self.p2p, "inline_max": self.inline_max,
+                "heartbeat_s": self.heartbeat_s,
+                "session": tok, "epoch": 0,
+                "reconnect_grace_s": self.reconnect_grace_s}
+
     def accept_agents(self, timeout: float = 60.0) -> List[AgentChannel]:
         """Accept ``n_agents`` registrations; returns channels ordered by
         node id.  Defensive against externally-launched agents
@@ -156,12 +182,45 @@ class LocalCluster:
             nid = hello.get("node_id")
             if nid is None:
                 nid = next(free)
-            send_msg(conn, {"op": "welcome", "node_id": nid,
-                            "memory_budget": self.memory_budget,
-                            "p2p": self.p2p, "inline_max": self.inline_max,
-                            "heartbeat_s": self.heartbeat_s})
+            send_msg(conn, self._welcome_payload(nid))
             channels[nid] = self.channel_factory(conn, nid, hello)
         return channels
+
+    # -------------------------------------------------- session resumption
+    def start_acceptor(self, resume_handler: Callable) -> None:
+        """Run a background accept loop (DESIGN.md §20): resume hellos —
+        those carrying a ``resume`` token — go to ``resume_handler(conn,
+        hello)``; fresh registrations are queued for :meth:`respawn` to
+        claim.  Idempotent; the thread exits when the listener closes."""
+        if self._acceptor is not None or self._closed:
+            return
+
+        def loop():
+            while not self._closed:
+                try:
+                    conn, _ = self._listener.accept()
+                except OSError:
+                    return   # listener closed: shutdown
+                try:
+                    conn.settimeout(10.0)
+                    hello, _ = recv_msg(conn)
+                    conn.settimeout(None)
+                    if hello.get("op") != "hello":
+                        raise ConnectionError(f"bad hello: {hello}")
+                except Exception:
+                    conn.close()
+                    continue
+                if hello.get("resume"):
+                    try:
+                        resume_handler(conn, hello)
+                    except Exception:
+                        conn.close()
+                else:
+                    self._fresh_q.put((conn, hello))
+
+        self._acceptor = threading.Thread(target=loop, daemon=True,
+                                          name="cluster-acceptor")
+        self._acceptor.start()
 
     def respawn(self, i: int, timeout: float = 60.0) -> AgentChannel:
         """Replace a dead agent: kill leftovers, spawn a fresh process,
@@ -174,11 +233,20 @@ class LocalCluster:
                 proc.kill()
                 proc.wait(timeout=5.0)
             self._spawn(i)
-            conn, hello = self._accept_one(timeout)
-            send_msg(conn, {"op": "welcome", "node_id": i,
-                            "memory_budget": self.memory_budget,
-                            "p2p": self.p2p, "inline_max": self.inline_max,
-                            "heartbeat_s": self.heartbeat_s})
+            if self._acceptor is not None:
+                # the background acceptor owns the listener now; fresh
+                # registrations arrive via its queue (respawns are
+                # serialized under self._lock, so the next fresh hello is
+                # ours)
+                try:
+                    conn, hello = self._fresh_q.get(timeout=timeout)
+                except queue.Empty:
+                    raise TimeoutError(
+                        f"no agent registered with {self.address} "
+                        f"within {timeout}s")
+            else:
+                conn, hello = self._accept_one(timeout)
+            send_msg(conn, self._welcome_payload(i))
             return self.channel_factory(conn, i, hello)
 
     # ------------------------------------------------------------ teardown

@@ -146,7 +146,7 @@ class AsyncAgentChannel:
     """
 
     def __init__(self, sock: socket.socket, node_id: int, hello: dict,
-                 io: IOLoop):
+                 io: IOLoop, start_mid: int = 1):
         self.sock = sock
         self.node_id = node_id
         self.hello = hello
@@ -154,6 +154,15 @@ class AsyncAgentChannel:
         self.closed = False
         self.on_close: Optional[Callable[[], None]] = None
         self.on_push: Optional[Callable[[dict, list], None]] = None
+        # session resumption (DESIGN.md §20): when the channel dies, the
+        # executor may take ownership of the in-flight mid->slot map via
+        # this hook (returning True) instead of having every slot errored
+        # — the slots are re-adopted into the resumed channel.  A DEAD
+        # liveness verdict sets ``liveness_killed`` before close() so the
+        # park path can tell a kill from a transient disconnect.
+        self.on_lost_pending: Optional[
+            Callable[[Dict[int, _Slot]], bool]] = None
+        self.liveness_killed = False
         try:
             self._peer = sock.getpeername()
         except OSError:
@@ -171,7 +180,7 @@ class AsyncAgentChannel:
         # request side
         self._pending: Dict[int, _Slot] = {}
         self._pending_lock = threading.Lock()
-        self._next_mid = 1
+        self._next_mid = int(start_mid)
         self._failed = False
         # batching counters (asserted by tests: msgs_sent can exceed
         # writes when the coalescer is doing its job)
@@ -194,6 +203,16 @@ class AsyncAgentChannel:
             while True:
                 await self._wake.wait()
                 self._wake.clear()
+                # chaos seam (§19/§20): a network partition blackholes
+                # this channel's sends for a window WITHOUT closing the
+                # socket.  awaited, never slept — other channels on the
+                # shared loop keep flowing (per-scope windows).
+                inj = chaos.INJECTOR
+                if inj is not None:
+                    stall = inj.partition_window(
+                        f"sched-aioch{self.node_id}")
+                    if stall > 0.0:
+                        await asyncio.sleep(stall)
                 while True:
                     # coalesce: consecutive small messages become ONE
                     # socket write; a large framed message flushes the
@@ -266,6 +285,8 @@ class AsyncAgentChannel:
                     loop, lengths[0]))
                 frames = [await self._recv_exactly(loop, ln)
                           for ln in lengths[1:]]
+                if protocol.WIRE_CHECKSUM:
+                    frames = [protocol.verify_frame(f) for f in frames]
                 self._dispatch(meta, frames)
         except asyncio.CancelledError:
             raise
@@ -302,6 +323,22 @@ class AsyncAgentChannel:
             slot.event.set()
 
     # ---------------------------------------------------------- caller side
+    @property
+    def next_mid(self) -> int:
+        """The next mid this channel would assign — a resumed channel is
+        constructed with ``start_mid=next_mid`` of its predecessor so the
+        mid sequence stays monotonic across the session (§20)."""
+        with self._pending_lock:
+            return self._next_mid
+
+    def adopt_pending(self, pending: Dict[int, _Slot]) -> None:
+        """Re-register surviving in-flight slots from a predecessor
+        channel (session resumption): their replies will arrive on THIS
+        connection carrying the original mids."""
+        with self._pending_lock:
+            for mid, slot in pending.items():
+                self._pending.setdefault(mid, slot)
+
     def data_addr(self) -> Optional[str]:
         """The agent's peer data-plane address (``host:port``): the host
         this connection actually came from (or the ``data_host`` the
@@ -320,17 +357,24 @@ class AsyncAgentChannel:
     @staticmethod
     def _encode(meta: dict, frames) -> Tuple[list, int]:
         """Wire-encode on the *caller's* thread (pickling off the loop);
-        mirrors ``protocol.send_msg``'s framing exactly."""
+        mirrors ``protocol.send_msg``'s framing exactly, including the
+        optional CRC32 trailers (RJAX_WIRE_CHECKSUM).  The ``bitflip``
+        chaos seam intentionally lives only in ``protocol.send_msg`` —
+        agent replies and the p2p plane — so injected corruption always
+        exercises a *receive*-side detection path."""
+        checksum = protocol.WIRE_CHECKSUM
         meta_blob = pickle.dumps(meta, protocol=5)
         lengths = [len(meta_blob)]
         parts: list = [b"", meta_blob]   # placeholder for the header
         for f in frames or ():
-            if isinstance(f, (list, tuple)):
-                lengths.append(sum(len(p) for p in f))
-                parts.extend(f)
-            else:
-                lengths.append(len(f))
-                parts.append(f)
+            if not isinstance(f, (list, tuple)):
+                f = (f,)
+            ln = sum(len(p) for p in f)
+            parts.extend(f)
+            if checksum:
+                parts.append(protocol._CRC.pack(protocol.frame_crc(f)))
+                ln += protocol._CRC.size
+            lengths.append(ln)
         header = protocol._HEAD.pack(protocol.MAGIC, len(lengths)) \
             + b"".join(protocol._U64.pack(ln) for ln in lengths)
         parts[0] = header
@@ -397,12 +441,14 @@ class AsyncAgentChannel:
 
     def request_cb(self, meta: dict, frames,
                    callback: Callable[[Optional[dict], Optional[list],
-                                       Optional[BaseException]], None]) -> None:
+                                       Optional[BaseException]], None]) -> int:
         """Send now, deliver the reply to ``callback(meta, frames, err)``
         exactly once — with the reply (on the loop) or with the channel
-        failure (off the loop).  Raises only if the send itself failed
-        while this call still owned the mid (the caller then handles the
-        task; the callback will never fire for it)."""
+        failure (off the loop).  Returns the assigned mid (the session
+        resumption ledger keys re-submittable requests by it).  Raises
+        only if the send itself failed while this call still owned the
+        mid (the caller then handles the task; the callback will never
+        fire for it)."""
         slot = _Slot(callback=callback)
         with self._pending_lock:
             if self.closed:
@@ -420,6 +466,7 @@ class AsyncAgentChannel:
             self._fail_all()
             if owned:
                 raise
+        return mid
 
     # ------------------------------------------------------------- teardown
     def _cancel_tasks(self) -> None:
@@ -436,20 +483,32 @@ class AsyncAgentChannel:
                 return
             self._failed = True
             self.closed = True
-            pending = list(self._pending.values())
+            pending = dict(self._pending)
             self._pending.clear()
             on_close, self.on_close = self.on_close, None
         if err is None:
             err = ConnectionClosed(
                 f"agent {self.node_id} connection lost", mid_message=True)
         self.io.call_soon(self._cancel_tasks)
+        # session resumption (§20): give the executor first refusal on
+        # the in-flight map — True means it parked the slots for adoption
+        # by a resumed channel, so they are NOT errored here.  on_close
+        # still fires (it drives the park/grace bookkeeping).
+        adopted = False
+        hook = self.on_lost_pending
+        if pending and hook is not None:
+            try:
+                adopted = bool(hook(pending))
+            except BaseException:
+                traceback.print_exc()
         cbs = []
-        for slot in pending:
-            if slot.callback is None:
-                slot.error = err
-                slot.event.set()
-            else:
-                cbs.append(slot)
+        if not adopted:
+            for slot in pending.values():
+                if slot.callback is None:
+                    slot.error = err
+                    slot.event.set()
+                else:
+                    cbs.append(slot)
         if cbs or on_close is not None:
             def drain():
                 if on_close is not None:

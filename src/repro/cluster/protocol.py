@@ -52,10 +52,28 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.serialization import _pack_header, _unpack_header, as_c_contiguous
+from . import chaos
+from ..core.config import parse_bool
 
 MAGIC = b"RJW1"
 _HEAD = struct.Struct("<4sQ")        # magic, n_frames
 _U64 = struct.Struct("<Q")
+_CRC = struct.Struct("<I")           # per-frame CRC32 trailer
+
+# RJAX_WIRE_CHECKSUM: append a CRC32 trailer to every out-of-band frame
+# (frames 1..; frame 0's pickle already fails loudly on corruption) and
+# verify on receive — a flipped bit surfaces as ChecksumError, a
+# retryable transfer error, never silent data corruption.  Read at
+# import (agents inherit the scheduler's environment); both ends of a
+# link MUST agree, which the single-env LocalCluster guarantees.
+WIRE_CHECKSUM = parse_bool(os.environ.get("RJAX_WIRE_CHECKSUM"))
+
+
+def refresh_checksum() -> bool:
+    """Re-read ``RJAX_WIRE_CHECKSUM`` (tests toggle it mid-process)."""
+    global WIRE_CHECKSUM
+    WIRE_CHECKSUM = parse_bool(os.environ.get("RJAX_WIRE_CHECKSUM"))
+    return WIRE_CHECKSUM
 
 # frames are for raw-codec-eligible ndarrays; anything smaller than this
 # is cheaper pickled inline in the metadata frame (keyed data is framed
@@ -96,6 +114,44 @@ class ConnectionClosed(ConnectionError):
         self.mid_message = mid_message
 
 
+class ChecksumError(ConnectionClosed):
+    """A frame's CRC32 trailer did not match its payload (wire
+    corruption).  A :class:`ConnectionClosed` subclass: the stream can no
+    longer be trusted, so the connection is torn down and the transfer
+    retried through the normal recovery paths (``WorkerCrashedError`` /
+    ``PeerFetchError``) — corruption is loud, never silent."""
+
+    def __init__(self, message: str = "frame checksum mismatch"):
+        super().__init__(message, mid_message=True)
+
+
+def frame_crc(parts) -> int:
+    """CRC32 over one frame's buffer parts (send side streams the same
+    bytes the receiver will hash as one contiguous buffer)."""
+    import zlib
+    crc = 0
+    for p in parts:
+        crc = zlib.crc32(p, crc)
+    return crc & 0xFFFFFFFF
+
+
+def _chaos_bitflip(frames: List[List]) -> List[List]:
+    """The ``bitflip`` chaos seam: corrupt one byte of the first
+    out-of-band frame in a COPY (the parts are memoryviews over live
+    arrays — the sender's data must stay intact)."""
+    inj = chaos.INJECTOR
+    if inj is None or not frames:
+        return frames
+    if inj.roll("bitflip", "wire") is None:
+        return frames
+    blob = bytearray(b"".join(bytes(p) for p in frames[0]))
+    if blob:
+        blob[len(blob) // 2] ^= 0x01
+    out = list(frames)
+    out[0] = [bytes(blob)]
+    return out
+
+
 # ------------------------------------------------------------------ raw I/O
 def recv_exactly(sock, n: int, mid_message: bool = True) -> memoryview:
     """Read exactly ``n`` bytes, tolerating arbitrarily short reads."""
@@ -127,6 +183,15 @@ def send_msg(sock, meta: dict, frames: Sequence[Sequence] = ()) -> None:
     to ``sendall`` straight from the array's own buffer — no intermediate
     serialized copy."""
     meta_blob = pickle.dumps(meta, protocol=5)
+    if WIRE_CHECKSUM or chaos.INJECTOR is not None:
+        frames = list(frames)
+        # the trailer hashes the true payload BEFORE the bitflip seam
+        # corrupts it — corruption happens "on the wire", after checksum
+        trailers = [_CRC.pack(frame_crc(f)) for f in frames] \
+            if WIRE_CHECKSUM else None
+        frames = _chaos_bitflip(frames)
+        if trailers is not None:
+            frames = [list(f) + [t] for f, t in zip(frames, trailers)]
     lengths = [len(meta_blob)] + [sum(len(p) for p in f) for f in frames]
     header = _HEAD.pack(MAGIC, len(lengths)) + b"".join(_U64.pack(n) for n in lengths)
     total = len(header) + sum(lengths)
@@ -158,7 +223,19 @@ def recv_msg(sock) -> Tuple[dict, List[memoryview]]:
     lengths = struct.unpack(f"<{n_frames}Q", lens_buf)
     meta = pickle.loads(recv_exactly(sock, lengths[0]))
     frames = [recv_exactly(sock, n) for n in lengths[1:]]
+    if WIRE_CHECKSUM:
+        frames = [verify_frame(f) for f in frames]
     return meta, frames
+
+
+def verify_frame(frame: memoryview) -> memoryview:
+    """Strip and verify a frame's CRC32 trailer (checksummed wire)."""
+    if len(frame) < _CRC.size:
+        raise ChecksumError("frame shorter than its CRC32 trailer")
+    payload, trailer = frame[:-_CRC.size], frame[-_CRC.size:]
+    if frame_crc((payload,)) != _CRC.unpack(trailer)[0]:
+        raise ChecksumError()
+    return payload
 
 
 # ------------------------------------------------------------ ndarray frames

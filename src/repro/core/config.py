@@ -164,11 +164,26 @@ class RuntimeConfig:
         doc="Seconds a dispatch may wait for an input datum to resolve "
             "(spill fault-back, §15 lineage rebuild) before failing "
             "retryable.")
+    reconnect_grace_s: Optional[float] = knob(
+        env="RJAX_RECONNECT_GRACE_S", default=5.0, cast=float,
+        doc="Seconds a disconnected agent is parked awaiting session "
+            "resumption (DESIGN.md §20) before the scheduler falls back "
+            "to respawn + lineage recovery.  0 disables resumption "
+            "(every disconnect is treated as death, the pre-§20 "
+            "behaviour).  Async control plane only.")
+    replication: Optional[int] = knob(
+        env="RJAX_REPLICATION", default=0, cast=int,
+        doc="Replicas kept of expensive node-resident intermediates "
+            "(DESIGN.md §20): results whose producer duration crosses "
+            "the TaskGraph-derived threshold are pushed to k buddy "
+            "nodes over the p2p plane, so node death recovers by "
+            "refetch instead of lineage replay.  0 = off.")
     chaos: Optional[str] = knob(
         env="RJAX_CHAOS", default=None, scope="env",
         doc="Deterministic fault injection, '<seed>:<fault>[=arg][@rate],"
             "...' (repro.cluster.chaos); faults: delay, drop, stall, "
-            "freeze, hang, fetch-slow.  Unset = zero-overhead no-op.")
+            "freeze, hang, fetch-slow, partition, bitflip.  Unset = "
+            "zero-overhead no-op.")
 
     # -- memory -----------------------------------------------------------
     memory_budget: Optional[Any] = knob(
@@ -234,6 +249,13 @@ class RuntimeConfig:
     peer_fetch_timeout: Optional[float] = knob(
         env="RJAX_PEER_FETCH_TIMEOUT", default=60.0, cast=float, scope="env",
         doc="Seconds a peer pull may take before it fails as retryable.")
+    wire_checksum: Optional[bool] = knob(
+        env="RJAX_WIRE_CHECKSUM", default=False, cast=parse_bool,
+        scope="env",
+        doc="CRC32 trailer on every out-of-band array frame (control "
+            "and data plane): a corrupted frame surfaces as a retryable "
+            "transfer error instead of silent data corruption.  Off by "
+            "default (overhead gated in bench_gate.py).")
 
     # -- telemetry ---------------------------------------------------------
     tracing: Optional[bool] = knob(
@@ -286,7 +308,8 @@ class RuntimeConfig:
                      "spill_dir", "pipeline_depth", "telemetry",
                      "dashboard_port", "control_plane", "inline_max",
                      "heartbeat_s", "p2p", "liveness", "suspicion_s",
-                     "deadline_s", "resolve_timeout_s"):
+                     "deadline_s", "resolve_timeout_s",
+                     "reconnect_grace_s", "replication"):
             v = getattr(self, name)
             if v is not None:
                 out[name] = v

@@ -104,6 +104,12 @@ class TaskGraph:
         self._running: Set[int] = set()          # RUNNING task ids
         self._terminal: collections.deque = collections.deque()  # completion order
         self._durations: Dict[str, collections.deque] = {}
+        # body seconds as measured by the executing worker itself (the
+        # cluster agent times around its pool invoke and ships ``dur``
+        # in the done reply) — unlike ``_durations`` these carry no
+        # dispatch/queue latency, so the replication cost bar (§20)
+        # compares producer cost with producer cost
+        self._run_s: Dict[str, collections.deque] = {}
         self._submitted = 0      # non-speculative adds (cumulative)
         self._speculative = 0    # speculative adds (cumulative)
         self._retries = 0        # re-executions observed (cumulative)
@@ -327,6 +333,33 @@ class TaskGraph:
         with self._lock:
             ds = self._durations.get(name)
             return list(ds) if ds else []
+
+    def note_run_s(self, name: str, dur: float) -> None:
+        """Record a worker-measured body duration (no queue latency) for
+        ``name`` — the cluster backend feeds these from the agent's done
+        replies."""
+        with self._lock:
+            ds = self._run_s.get(name)
+            if ds is None:
+                ds = self._run_s[name] = collections.deque(
+                    maxlen=_DURATIONS_KEPT)
+            ds.append(float(dur))
+
+    def duration_threshold(self) -> float:
+        """Fleet-wide mean of the recorded task durations — the
+        replication cost bar (DESIGN.md §20): a producer at or above the
+        mean is worth pushing a replica for, one below it is cheaper to
+        re-execute from lineage.  Prefers worker-measured body times
+        (``note_run_s``) over scheduler-observed completion latencies;
+        0.0 while no history exists, so early results replicate until
+        the profile fills in."""
+        with self._lock:
+            total = 0.0
+            n = 0
+            for ds in (self._run_s or self._durations).values():
+                total += sum(ds)
+                n += len(ds)
+        return (total / n) if n else 0.0
 
     def pending_count(self) -> int:
         with self._lock:

@@ -113,13 +113,14 @@ function renderStream(now){
 function renderNodes(st){
  let h='<table><tr><th>node</th><th>state</th><th>heartbeats</th><th>age</th>'+
   '<th>in-flight</th><th>queued</th><th>memory</th><th>spills</th>'+
-  '<th>p2p fetches</th></tr>';
+  '<th>p2p fetches</th><th>replicas</th></tr>';
  for(const [nid,n] of Object.entries(st.nodes)){
   const used=n.plane_bytes_used??n.plane_bytes??n.store_bytes_used??0;
   const budget=n.plane_budget_bytes??n.store_budget_bytes??0;
   const pct=budget?Math.min(100,100*used/budget):0;
   const sc={alive:'#5ad18b',suspect:'#e0b25a',dead:'#e06c5a',
-   respawning:'#e0b25a'}[n.state]||'#888';
+   respawning:'#e0b25a',disconnected:'#e0b25a',
+   reconnecting:'#4e9af1'}[n.state]||'#888';
   const state=n.state?'<span style="color:'+sc+'">'+n.state+'</span>'+
    (n.beat_age_s!=null?' <span class="meta">'+n.beat_age_s.toFixed(1)+
    's</span>':''):'-';
@@ -129,7 +130,7 @@ function renderNodes(st){
    (pct>85?'hot':'')+'" style="width:'+pct+'%"></i></span> '+
    fmtB(used)+(budget?' / '+fmtB(budget):'')+'</td><td>'+
    (n.plane_spills??n.store_spills??0)+'</td><td>'+(n.p2p_fetches??0)+
-   '</td></tr>';}
+   '</td><td>'+(n.replicas??0)+'</td></tr>';}
  document.getElementById('nodes').innerHTML=h+'</table>';
 }
 function renderTransfers(tr){

@@ -63,6 +63,7 @@ import pickle
 import struct
 import threading
 import time
+import traceback
 from multiprocessing import get_context
 from multiprocessing import shared_memory as _shm_mod
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
@@ -1469,7 +1470,8 @@ class ClusterExecutor(ExecutorBackend):
 
     def __init__(self, n_workers: int, label: str = "rjax", cluster=None,
                  pipeline_depth: int = 1, p2p=None, control_plane=None,
-                 liveness=None, suspicion_s=None):
+                 liveness=None, suspicion_s=None, reconnect_grace_s=None,
+                 replication=None):
         super().__init__(n_workers, label, pipeline_depth=pipeline_depth)
         from .config import parse_bool, resolve as resolve_knob
         from .fault import LivenessConfig
@@ -1517,6 +1519,21 @@ class ClusterExecutor(ExecutorBackend):
         self._deadline_inflight: List[Dict[int, float]] = []
         self._deadline_slack = 0.0
         self.liveness_kills = 0
+        # session resumption (DESIGN.md §20): on a TCP disconnect the
+        # agent is PARKED for a grace window and allowed to re-dial with
+        # its session token instead of being killed and replayed.  Only
+        # wired on the async plane (the legacy channel starts its
+        # on_close thread before consulting the adoption hook, so parking
+        # there would race the restart path).
+        self.reconnect_grace_s = resolve_knob(
+            reconnect_grace_s, "RJAX_RECONNECT_GRACE_S", default=5.0,
+            cast=float)
+        self.resumption = self.async_plane and self.reconnect_grace_s > 0
+        # asynchronous k-way replication (DESIGN.md §20): node-resident
+        # results whose producer cost clears the duration threshold are
+        # pushed to k buddy planes over the existing p2p bcast leg
+        self.replication = resolve_knob(
+            replication, "RJAX_REPLICATION", default=0, cast=int)
         self._io = None            # IOLoop (async control plane only)
         self._recovery = None      # small pool for blocking recovery work
         self._agent_up = [True] * self.n_agents
@@ -1539,6 +1556,40 @@ class ClusterExecutor(ExecutorBackend):
         # same key pull it agent→agent instead of costing a second copy
         # over our own link (the broadcast-residue fix, DESIGN.md §16)
         self._put_home: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        # residency generations (§20): per-(agent, key) counter bumped on
+        # every residency MARK the scheduler sends (Put/Fetch/alias/bcast
+        # leg); the agent bumps its mirror on receipt.  Equal counters at
+        # resume time prove the mark landed — the manifest reconciliation
+        # predicate.  Survives _drop_residency (a strike is not a
+        # process death); reset only when the process is replaced.
+        # Guarded by _order_locks[a], like _resident.
+        self._res_gen: List[Dict[Tuple[int, int], int]] = [
+            dict() for _ in range(self.n_agents)]
+        # process generation per agent: bumped in _restart_agent only.
+        # Result-token views carry the gen they were minted under so
+        # publish/drop never talk to a replacement process, while tokens
+        # minted before a RESUME (same process) stay valid.
+        self._proc_gen = [0] * self.n_agents
+        # parked agents: a -> {"ch", "token", "pending", "next_mid",
+        # "deadline", "timer", "state"}; under _park_lock.  "state" moves
+        # disconnected -> reconnecting while _on_resume reconciles.
+        self._park_lock = threading.Lock()
+        self._disconnected: Dict[int, dict] = {}
+        # ops (alias/drop) that arrived while the agent was parked; each
+        # list guarded by _order_locks[a], flushed on resume in order
+        self._parked_ops: List[list] = [[] for _ in range(self.n_agents)]
+        # in-flight task sends by mid: a -> {mid: (worker, ex)}.  A mid
+        # the resumed agent never received maps back to its task here and
+        # is re-submitted on the new channel instead of burning a retry
+        # (GIL-atomic dict ops; entries die with the reply or restart)
+        self._inflight_reqs: List[Dict[int, tuple]] = [
+            dict() for _ in range(self.n_agents)]
+        # replica locations: key -> set of agents holding a pushed copy
+        # (beyond the producer); under _stats_lock
+        self._replicas: Dict[Tuple[int, int], Set[int]] = {}
+        self.reconnects = 0        # sessions resumed in place
+        self.replica_bytes = 0     # bytes pushed to buddy planes
+        self.replica_hits = 0      # lost keys served from a replica
         self.agent_restarts = 0
         self.broadcasts = 0        # collective broadcast waves completed
         self.puts = 0              # keyed datums shipped to some node
@@ -1564,6 +1615,11 @@ class ClusterExecutor(ExecutorBackend):
         # from the scheduler's environment so off-host agents beat in step
         if getattr(self.cluster, "heartbeat_s", None) is None:
             self.cluster.heartbeat_s = heartbeat_interval()
+        # grace window rides the welcome so agents know to re-dial
+        # (None disables the agent-side reconnect loop entirely)
+        if hasattr(self.cluster, "reconnect_grace_s"):
+            self.cluster.reconnect_grace_s = (
+                self.reconnect_grace_s if self.resumption else None)
         if self.async_plane:
             from ..cluster.eventloop import AsyncAgentChannel, IOLoop
             self._io = IOLoop(name=f"{self.label}-io")
@@ -1590,6 +1646,10 @@ class ClusterExecutor(ExecutorBackend):
         self._deadline_inflight = [dict() for _ in range(self.n_agents)]
         for a, ch in enumerate(self._channels):
             self._install_channel(a, ch)
+        if self.resumption and hasattr(self.cluster, "start_acceptor"):
+            # re-dials land on the harness's background acceptor and are
+            # routed here with the session token for reconciliation
+            self.cluster.start_acceptor(self._on_resume)
         runtime.store.set_fetcher(self._fetch_remote)
         if self.liveness_cfg.enabled:
             self._liveness_thread = threading.Thread(
@@ -1620,6 +1680,13 @@ class ClusterExecutor(ExecutorBackend):
         self._data_addrs[a] = ch.data_addr()
         ch.on_close = lambda _a=a, _ch=ch: self._on_channel_down(_a, _ch)
         ch.on_push = lambda meta, frames, _a=a: self._on_push(_a, meta)
+        if self.resumption:
+            # the channel consults this before erroring its in-flight
+            # slots: True = the executor adopted them (parked, awaiting a
+            # session resume); False = fail them retryably as before
+            ch.on_lost_pending = (
+                lambda pending, _a=a, _ch=ch:
+                    self._maybe_park(_a, _ch, pending))
         if self._detector is not None:
             self._detector.note_install(a)
 
@@ -1643,8 +1710,23 @@ class ClusterExecutor(ExecutorBackend):
         flight — the dead node may hold the only copy of published
         results (DESIGN.md §15)."""
         if self._detector is not None:
-            self._detector.note_removed(a)
+            # this hook runs on the dead channel's drain thread and can
+            # arrive AFTER a session resume already installed (and
+            # note_install-ed) the successor — wiping the fresh view
+            # would read as an instant DEAD verdict on the next liveness
+            # poll.  The order lock serializes against _do_resume's swap.
+            with self._order_locks[a]:
+                if self._channels[a] is ch:
+                    self._detector.note_removed(a)
         if self._closing:
+            return
+        # session resumption (§20): a parked channel's recovery belongs
+        # to the grace timer / resume handler, not the restart path.
+        # _maybe_park is idempotent — on_lost_pending (fires only when
+        # requests were in flight) and this hook race freely, and an idle
+        # disconnect (no pending) parks here.
+        if ch is not None and self._maybe_park(a, ch, {}):
+            self._agent_up[a] = False
             return
         if self.async_plane:
             self._kick_restart(a, ch)
@@ -1677,6 +1759,9 @@ class ClusterExecutor(ExecutorBackend):
                 if det.assess(a) == DEAD:
                     with self._stats_lock:
                         self.liveness_kills += 1
+                    # a liveness verdict means the PROCESS is gone or
+                    # wedged — never park this channel for resumption
+                    ch.liveness_killed = True
                     ch.close()
 
     # -- async dispatch pump (DESIGN.md §18) ---------------------------------
@@ -1732,12 +1817,20 @@ class ClusterExecutor(ExecutorBackend):
             return
         self._submit_pipelined(worker, ex)
 
-    def _kick_restart(self, a: int, ch) -> None:
+    def _kick_restart(self, a: int, ch, park: bool = True) -> None:
         """Route an agent death to the recovery pool: respawn blocks on
         process spawn + handshake, which must never run on the loop.
         The agent's workers are skipped by the pump until the
-        replacement is up."""
+        replacement is up.  ``park=False`` is the resumption machinery
+        giving up on a session (grace expired / resume failed): the
+        respawn must proceed, never re-park the same dead channel."""
         if self._closing:
+            return
+        # a caller that observed ``closed`` before the park registered
+        # (the flag flips a beat earlier) must not respawn a channel the
+        # resume path owns — park it here instead (idempotent)
+        if park and ch is not None and self._maybe_park(a, ch, {}):
+            self._agent_up[a] = False
             return
         self._agent_up[a] = False
 
@@ -1806,9 +1899,15 @@ class ClusterExecutor(ExecutorBackend):
         ch = self._channels[a]
         if ch is None or ch.closed:
             if self.async_plane:
+                # a parked channel (§20) is coming back: hold the task
+                # for the resumed session rather than burning a retry
+                if self._defer_if_parked(a, worker, ex):
+                    return
                 # never respawn inline (it blocks); fail retryably and
-                # let the recovery pool bring the agent back
-                if not self._closing:
+                # let the recovery pool bring the agent back — unless the
+                # channel is parked for session resumption (§20), whose
+                # grace timer owns recovery
+                if not self._closing and not self._is_parked(a):
                     self._kick_restart(a, ch)
                 self._finish_cluster(worker, ex, error=WorkerCrashedError(
                     f"node agent {a} is down"))
@@ -1853,17 +1952,26 @@ class ClusterExecutor(ExecutorBackend):
                         self._deadline_inflight[a][id(ex)] = (
                             time.monotonic() + t.deadline_s
                             + self._deadline_slack)
-                ch.request_cb(
+                mid = ch.request_cb(
                     meta, frames,
                     lambda rmeta, rframes, err, _w=worker, _a=a, _ch=ch,
                     _ex=ex: self._on_reply(_w, _a, _ch, _ex, rmeta,
                                            rframes, err))
+                self._inflight_reqs[a][mid] = (worker, ex)
                 self._shipped_fns[a].add(token)
                 # a Fetch directive makes the key node-resident exactly
                 # like a Put — the consumer agent registers the pull on
                 # its reader in stream order, so later Refs are safe
                 self._resident[a].update(info["put_keys"])
                 self._resident[a].update(info["fetch_keys"])
+                # residency generations (§20): one bump per mark message
+                # sent; the agent bumps its mirror on receipt, and equal
+                # counters at resume time validate a manifest entry
+                gens = self._res_gen[a]
+                for k in info["put_keys"]:
+                    gens[k] = gens.get(k, 0) + 1
+                for k in info["fetch_keys"]:
+                    gens[k] = gens.get(k, 0) + 1
                 with self._stats_lock:
                     self.puts += len(info["put_keys"])
                     self.refs += info["refs"]
@@ -1886,7 +1994,12 @@ class ClusterExecutor(ExecutorBackend):
             if t.deadline_s is not None and self._deadline_inflight:
                 with self._stats_lock:
                     self._deadline_inflight[a].pop(id(ex), None)
-            if not self._closing:
+            # the send failed while this call still owned the mid (the
+            # reply callback will never fire): a parked channel defers
+            # the task to the resumed session instead of failing it
+            if self._defer_if_parked(a, worker, ex):
+                return
+            if not self._closing and not self._is_parked(a):
                 if self.async_plane:
                     self._kick_restart(a, ch)
                 else:
@@ -1932,11 +2045,13 @@ class ClusterExecutor(ExecutorBackend):
                   err) -> None:
         """Completion path, on the channel reader (or its failure
         drainer): exactly one call per streamed task."""
+        if rmeta is not None and rmeta.get("mid") is not None:
+            self._inflight_reqs[a].pop(rmeta["mid"], None)
         if ex.t.deadline_s is not None and self._deadline_inflight:
             with self._stats_lock:
                 self._deadline_inflight[a].pop(id(ex), None)
         if err is not None:
-            if not self._closing:
+            if not self._closing and not self._is_parked(a):
                 if self.async_plane:
                     self._kick_restart(a, ch)
                 else:
@@ -1948,6 +2063,24 @@ class ClusterExecutor(ExecutorBackend):
             return
         if rmeta.get("op") == "done":
             self._tl.views = None
+            # replication hint (§20): publish() consults this, in the same
+            # thread, for every RemoteValue this reply produced — replicate
+            # when the producer's run time clears the graph's fleet-wide
+            # duration bar (re-running cheap tasks beats paying their copy)
+            self._tl.replicate = False
+            # the agent times the task body itself ("dur" in the done
+            # reply) — scheduler-observed latency would fold pipeline
+            # queue time into every producer's apparent cost.  The
+            # profile is only consulted by the replication bar, so with
+            # replication off the hot completion path skips the graph
+            # lock entirely.
+            if self.replication > 0 and self.runtime is not None:
+                dur = rmeta.get("dur")
+                if dur is not None:
+                    dur = float(dur)
+                    self.runtime.graph.note_run_s(ex.t.name, dur)
+                    self._tl.replicate = (
+                        dur >= self.runtime.graph.duration_threshold())
             try:
                 result = self._decode_result(a, ch, rmeta, rframes)
             except BaseException as derr:
@@ -2000,7 +2133,8 @@ class ClusterExecutor(ExecutorBackend):
         from ..cluster.protocol import (Frame, RemoteRef, frame_to_array,
                                         struct_nbytes)
         tokens = rmeta.get("tokens") or []
-        views: Dict[int, Tuple[int, int, Any]] = {}
+        gen = self._proc_gen[a]
+        views: Dict[int, Tuple[int, int, Any, int]] = {}
         # inline (below-RJAX_INLINE_MAX) result arrays ride the reply
         # pickle — they crossed our link too, so the relay ledger counts
         # them (Frame/RemoteRef markers contribute 0 here; frames add
@@ -2014,7 +2148,7 @@ class ClusterExecutor(ExecutorBackend):
                 # placeholder; only this descriptor crossed our link
                 rv = RemoteValue(marker.token, a, self._data_addrs[a],
                                  marker.nbytes)
-                views[id(rv)] = (a, marker.token, ch)
+                views[id(rv)] = (a, marker.token, ch, gen)
                 with self._stats_lock:
                     self.remote_results += 1
                     self.deferred_result_bytes += marker.nbytes
@@ -2022,10 +2156,12 @@ class ClusterExecutor(ExecutorBackend):
             arr = frame_to_array(rframes[marker.i])
             with self._stats_lock:
                 self.relay_result_bytes += int(arr.nbytes)
-            # the token is only meaningful on the exact connection that
-            # minted it — a respawned agent restarts its counter, so
-            # publish/drop must verify channel identity, not just index
-            views[id(arr)] = (a, tokens[marker.i], ch)
+            # the token is only meaningful in the PROCESS that minted it —
+            # a respawned agent restarts its counter, so publish/drop
+            # verify the process generation; a RESUMED session (§20) is
+            # the same process, and its tokens stay valid across the
+            # channel swap
+            views[id(arr)] = (a, tokens[marker.i], ch, gen)
             return arr
 
         result = _walk(rmeta["structure"], dec, (Frame, RemoteRef))
@@ -2048,10 +2184,44 @@ class ClusterExecutor(ExecutorBackend):
         entry = views.pop(id(value), None)
         if entry is None:
             return
-        a, token, ch = entry
+        a, token, ch, gen = entry
+        key = tuple(key)
         if isinstance(value, RemoteValue):
-            value.key = tuple(key)
-        if ch.closed or self._channels[a] is not ch:
+            value.key = key
+        nb = int(getattr(value, "nbytes", 0) or 0)
+        published = False
+        try:
+            with self._order_locks[a]:
+                # the token survives as long as the agent PROCESS does:
+                # valid on the original channel and on any resumed
+                # successor (§20), dead after a respawn (gen mismatch)
+                if self._proc_gen[a] == gen:
+                    cur = self._channels[a]
+                    if cur is not None and not cur.closed:
+                        cur.post({"op": "alias", "token": token,
+                                  "key": key})
+                        self._resident[a].add(key)
+                        self._res_gen[a][key] = (
+                            self._res_gen[a].get(key, 0) + 1)
+                        if not isinstance(value, RemoteValue):
+                            # a framed result relayed through us now
+                            # lives BOTH here and on its producer: other
+                            # agents can pull it from that plane instead
+                            # of costing a second Put
+                            with self._stats_lock:
+                                self._put_home.setdefault(key, (a, nb))
+                        published = True
+                    elif self._is_parked(a):
+                        # parked for resumption: defer the alias; the
+                        # resume flush posts it (FIFO before any later
+                        # Ref) or the grace-expiry restart discards it
+                        self._parked_ops[a].append(
+                            ("alias", token, key, nb,
+                             isinstance(value, RemoteValue)))
+                        published = True
+        except ConnectionClosed:
+            return   # the restart path resets this node's residency ledger
+        if not published:
             # agent died/respawned since.  A plain array is already safe
             # in the store; a RemoteValue just entered the store pointing
             # at a dead node AFTER the crash sweep.  Recovery cannot run
@@ -2063,24 +2233,15 @@ class ClusterExecutor(ExecutorBackend):
                 orphans = getattr(self._tl, "orphaned", None)
                 if orphans is None:
                     orphans = self._tl.orphaned = []
-                orphans.append(tuple(key))
+                orphans.append(key)
             return
-        try:
-            with self._order_locks[a]:
-                if self._channels[a] is not ch:   # re-check under the lock
-                    return
-                ch.post({"op": "alias", "token": token, "key": tuple(key)})
-                self._resident[a].add(tuple(key))
-                if not isinstance(value, RemoteValue):
-                    # a framed result relayed through us now lives BOTH
-                    # here and on its producer: other agents can pull it
-                    # from that plane instead of costing a second Put
-                    with self._stats_lock:
-                        self._put_home.setdefault(
-                            tuple(key),
-                            (a, int(getattr(value, "nbytes", 0) or 0)))
-        except ConnectionClosed:
-            pass   # the restart path resets this node's residency ledger
+        # asynchronous replication (§20): push a costly node-resident
+        # result to k buddy planes over the existing p2p bcast leg —
+        # fire-and-forget, outside the producer's ordering lock
+        if (isinstance(value, RemoteValue) and self.replication > 0
+                and getattr(self._tl, "replicate", False)
+                and not self._closing):
+            self._replicate(key, value, a)
 
     def task_done(self):
         """Drop result tokens that were never published (discarded
@@ -2091,12 +2252,18 @@ class ClusterExecutor(ExecutorBackend):
         from ..cluster.protocol import ConnectionClosed
         views = getattr(self._tl, "views", None)
         if views:
-            for a, token, ch in views.values():
-                if not ch.closed and self._channels[a] is ch:
-                    try:
-                        ch.post({"op": "drop", "token": token})
-                    except ConnectionClosed:
-                        pass
+            for a, token, ch, gen in views.values():
+                with self._order_locks[a]:
+                    if self._proc_gen[a] != gen:
+                        continue   # the minting process is gone
+                    cur = self._channels[a]
+                    if cur is not None and not cur.closed:
+                        try:
+                            cur.post({"op": "drop", "token": token})
+                        except ConnectionClosed:
+                            pass
+                    elif self._is_parked(a):
+                        self._parked_ops[a].append(("drop", token))
         self._tl.views = None
         orphans = getattr(self._tl, "orphaned", None)
         self._tl.orphaned = None
@@ -2226,6 +2393,10 @@ class ClusterExecutor(ExecutorBackend):
                     with self._order_locks[a]:
                         if self._channels[a] is not None:
                             self._resident[a].add(key)
+                            # the agent bumped its mirror when the bcast
+                            # landed; bump ours on the ack (§20)
+                            self._res_gen[a][key] = (
+                                self._res_gen[a].get(key, 0) + 1)
                     with self._stats_lock:
                         self._put_home.setdefault(key, (a, nbytes))
                     holders.append(a)
@@ -2263,11 +2434,361 @@ class ClusterExecutor(ExecutorBackend):
         with self._stats_lock:
             for k in keyset:
                 self._put_home.pop(k, None)
+                self._replicas.pop(k, None)
+
+    # -- session resumption (DESIGN.md §20) ----------------------------------
+    def _is_parked(self, a: int) -> bool:
+        with self._park_lock:
+            return a in self._disconnected
+
+    def _maybe_park(self, a: int, ch, pending) -> bool:
+        """Channel-death first refusal: adopt the in-flight slots and
+        park the node for the grace window instead of killing it.
+        Idempotent — the on_lost_pending hook and the on_close hook race
+        freely, and later calls merge extra pending slots into the
+        existing entry.  Returns False when resumption cannot apply
+        (disabled, closing, liveness-killed, or already replaced) — the
+        caller then runs the PR-9 fail/respawn path unchanged."""
+        if (not self.resumption or self._closing
+                or getattr(ch, "liveness_killed", False)):
+            return False
+        tok = getattr(self.cluster, "session_tokens", {}).get(a)
+        if not tok:
+            return False
+        with self._park_lock:
+            entry = self._disconnected.get(a)
+            if entry is not None:
+                if entry["ch"] is not ch:
+                    return False   # a successor channel died, not ours
+                entry["pending"].update(pending)
+                return True
+            if self._channels[a] is not ch:
+                return False       # already replaced: restart owns it
+            entry = {"ch": ch, "token": tok, "pending": dict(pending),
+                     "next_mid": ch.next_mid, "state": "disconnected",
+                     "deferred": [],
+                     "deadline": time.monotonic() + self.reconnect_grace_s}
+            timer = threading.Timer(self.reconnect_grace_s,
+                                    self._grace_expired, (a, entry))
+            timer.daemon = True
+            entry["timer"] = timer
+            self._disconnected[a] = entry
+            # stop the pump from offering this agent's workers new tasks
+            # while parked (set HERE, synchronously on the failing loop
+            # thread, so no dispatch can slip between close and park)
+            self._agent_up[a] = False
+            timer.start()
+        return True
+
+    def _defer_if_parked(self, a: int, worker: int, ex) -> bool:
+        """A dispatch raced the park: hold the task (credit and all)
+        until the session resumes instead of burning one of its retries
+        on a channel that is coming back."""
+        with self._park_lock:
+            entry = self._disconnected.get(a)
+            if entry is None:
+                return False
+            entry["deferred"].append((worker, ex))
+            return True
+
+    def _grace_expired(self, a: int, entry: dict) -> None:
+        """The agent did not re-dial in time: fall through to the
+        normal kill-and-replay path (fail adopted slots retryably,
+        respawn, §15 lineage re-execution)."""
+        if self._closing:
+            return
+        with self._park_lock:
+            if self._disconnected.get(a) is not entry \
+                    or entry["state"] != "disconnected":
+                return   # resumed (or resuming) in time
+            del self._disconnected[a]
+        self._fail_slots(a, entry["pending"].values())
+        for worker, ex in entry["deferred"]:
+            self._finish_cluster(worker, ex, error=WorkerCrashedError(
+                f"node agent {a} session lost (grace expired)"))
+        if self.async_plane:
+            self._kick_restart(a, entry["ch"], park=False)
+        else:
+            self._restart_agent(a, entry["ch"])
+
+    def _fail_slots(self, a: int, slots) -> None:
+        """Error adopted slots retryably (grace expiry, or mids the
+        resumed agent never received)."""
+        from ..cluster.protocol import ConnectionClosed
+        err = ConnectionClosed(
+            f"agent {a} session lost", mid_message=True)
+        for slot in slots:
+            cb = getattr(slot, "callback", None)
+            if cb is not None:
+                try:
+                    cb(None, None, err)
+                except BaseException:
+                    traceback.print_exc()
+            else:
+                slot.error = err
+                slot.event.set()
+
+    def _on_resume(self, conn, hello: dict) -> None:
+        """A parked agent re-dialed with its session token (runs on the
+        cluster's acceptor thread).  Reconcile and swap the channel in;
+        any failure falls back to reject + the kill-and-replay path."""
+        from ..cluster.protocol import send_msg
+        a = hello.get("node_id")
+        tokens = getattr(self.cluster, "session_tokens", {})
+        ok = (isinstance(a, int) and 0 <= a < self.n_agents
+              and not self._closing and self.resumption
+              and tokens.get(a) == hello.get("resume"))
+        entry = None
+        if ok:
+            # the park entry may lag the re-dial (the scheduler-side
+            # read loop notices the break asynchronously): force the old
+            # channel down and wait briefly for the park to land
+            deadline = time.monotonic() + 2.0
+            kicked = False
+            while entry is None and time.monotonic() < deadline:
+                with self._park_lock:
+                    cur = self._disconnected.get(a)
+                    if cur is not None and cur["state"] == "disconnected":
+                        cur["state"] = "reconnecting"
+                        entry = cur
+                        break
+                    if cur is not None:
+                        break   # another resume is already in progress
+                if not kicked:
+                    kicked = True
+                    old = self._channels[a]
+                    if old is not None and not old.closed:
+                        old.close()
+                time.sleep(0.01)
+        if entry is None:
+            try:
+                send_msg(conn, {"op": "welcome", "resumed": False})
+            except Exception:
+                pass
+            conn.close()
+            return
+        timer = entry.get("timer")
+        if timer is not None:
+            timer.cancel()
+        try:
+            self._do_resume(a, conn, hello, entry)
+        except BaseException:
+            traceback.print_exc()
+            with self._park_lock:
+                self._disconnected.pop(a, None)
+            try:
+                conn.close()
+            except OSError:
+                pass
+            self._fail_slots(a, entry["pending"].values())
+            for worker, ex in entry["deferred"]:
+                self._finish_cluster(worker, ex, error=WorkerCrashedError(
+                    f"node agent {a} resume failed"))
+            self._kick_restart(a, entry["ch"], park=False)
+
+    def _do_resume(self, a: int, conn, hello: dict, entry: dict) -> None:
+        """The resumption body: strike stale residency via the manifest,
+        split in-flight mids at the agent's receive high-water, welcome,
+        swap the channel, flush parked ops — the partition costs zero
+        task re-executions (§20)."""
+        from ..cluster.eventloop import AsyncAgentChannel
+        from ..cluster.protocol import send_msg
+        pending = entry["pending"]
+        seen = int(hello.get("seen_mid") or 0)
+        # the async writer drains its queue in mid order, so a mid the
+        # agent has not seen implies nothing after it arrived either:
+        # mids <= seen survive (the agent replays their recorded replies
+        # or is still executing them); mids > seen never arrived — fail
+        # them retryably once the channel is live again
+        kept = {mid: slot for mid, slot in pending.items() if mid <= seen}
+        lost = {mid: slot for mid, slot in pending.items() if mid > seen}
+        # a lost mid that maps back to a task in the send ledger is not
+        # dead work — the request never reached the agent, so it re-sends
+        # on the resumed channel with a fresh mid, costing zero retries.
+        # Only mids with no ledger entry (stats probes, bcast legs) fail.
+        reqs = self._inflight_reqs[a]
+        resend = []
+        orphans = []
+        for mid, slot in lost.items():
+            req = reqs.pop(mid, None)
+            if req is not None:
+                resend.append(req)
+            else:
+                orphans.append(slot)
+        # manifest reconciliation: an entry is valid iff the agent's
+        # per-key mark generation matches ours — every mark message that
+        # was in flight when the wire broke shows up as a mismatch and
+        # is struck (conservative: a struck Put key only costs a re-ship)
+        manifest = hello.get("manifest") or ()
+        struck: Set[Tuple[int, int]] = set()
+        with self._order_locks[a]:
+            gens = self._res_gen[a]
+            valid = set()
+            for item in manifest:
+                k = tuple(item[0])
+                if gens.get(k, 0) == int(item[1]):
+                    valid.add(k)
+            struck = self._resident[a] - valid
+            self._resident[a] = valid
+            # an fn body that first shipped inside a lost message never
+            # landed: strike the ship ledger so the re-send carries the
+            # body again (the agent's blob table dedupes if it did land)
+            for _w, _ex in resend:
+                self._shipped_fns[a].discard(self._fns.entry(_ex.t.fn)[0])
+            if struck:
+                with self._stats_lock:
+                    for k in struck:
+                        home = self._put_home.get(k)
+                        if home is not None and home[0] == a:
+                            del self._put_home[k]
+            # welcome + channel swap still under the ordering lock: a
+            # dispatcher blocked on it must see the fully-resumed state
+            send_msg(conn, {"op": "welcome", "node_id": a,
+                            "resumed": True,
+                            "epoch": int(hello.get("epoch") or 0),
+                            "outstanding": sorted(kept)})
+            new_ch = AsyncAgentChannel(conn, a, hello, io=self._io,
+                                       start_mid=entry["next_mid"])
+            new_ch.adopt_pending(kept)
+            self._install_channel(a, new_ch)
+            self._channels[a] = new_ch
+            # flush ops that landed while parked, in arrival order (FIFO
+            # before anything a dispatcher sends after the lock drops)
+            for op in self._parked_ops[a]:
+                if op[0] == "alias":
+                    _, token, k, nb, _remote = op
+                    new_ch.post({"op": "alias", "token": token, "key": k})
+                    self._resident[a].add(k)
+                    gens[k] = gens.get(k, 0) + 1
+                elif op[0] == "drop":
+                    new_ch.post({"op": "drop", "token": op[1]})
+            self._parked_ops[a] = []
+            with self._park_lock:
+                self._disconnected.pop(a, None)
+        # node-resident values homed here whose manifest entry was struck
+        # are actually gone: invalidate + lineage, like a partial loss
+        if struck and self.runtime is not None:
+            gone = [k for k in self.runtime.store.homed_keys(a)
+                    if k in struck]
+            if gone:
+                self.runtime.store.invalidate_keys(gone)
+                self._drop_residency(gone)
+                self.runtime.relaunch_lost(
+                    [k for k in gone
+                     if not self.runtime.store.is_ready(k)])
+        self._agent_up[a] = True
+        with self._stats_lock:
+            self.reconnects += 1
+        if orphans:
+            self._fail_slots(a, orphans)
+        # tasks whose send died on the wire, then tasks a dispatcher
+        # deferred while the node was parked, go out on the resumed
+        # channel — off this (acceptor) thread, in order
+        for worker, ex in resend + entry["deferred"]:
+            self._recovery.submit(self._submit_pipelined, worker, ex)
+        self._schedule_pump()
+
+    # -- replication (DESIGN.md §20) -----------------------------------------
+    def _replicate(self, key, rv, a: int) -> None:
+        """Fire-and-forget: ask up to k buddy agents to pull ``key``
+        from its producer over the p2p data plane (the bcast leg, which
+        is §13 memory-governed on the receiving plane).  Failures are
+        ignored — a missing replica just means lineage recovery later."""
+        from ..cluster.protocol import ConnectionClosed
+        addr = self._data_addrs[a]
+        if addr is None or not self.p2p:
+            return
+        want = min(self.replication, self.n_agents - 1)
+        placed = 0
+        for off in range(1, self.n_agents):
+            if placed >= want:
+                break
+            b = (a + off) % self.n_agents
+            ch = self._channels[b]
+            if ch is None or ch.closed or not self._agent_up[b]:
+                continue
+            try:
+                with self._order_locks[b]:
+                    if self._channels[b] is not ch:
+                        continue
+                    ch.request_cb(
+                        {"op": "bcast", "key": key, "addr": addr,
+                         "node": a, "nbytes": rv.nbytes,
+                         "token": rv.token},
+                        (),
+                        lambda rm, rf, err, _b=b, _k=key, _nb=rv.nbytes,
+                        _a=a: self._on_replica(_b, _k, _nb, _a, rm, err))
+            except (ConnectionClosed, OSError):
+                continue
+            placed += 1
+
+    def _on_replica(self, b: int, key, nb: int, src: int, rmeta,
+                    err) -> None:
+        """A replica pull settled: book the copy (residency mark, store
+        location, replica ledger) on success; on failure do nothing."""
+        if err is not None or rmeta is None \
+                or rmeta.get("op") != "bcast_ok" or self._closing:
+            return
+        with self._order_locks[b]:
+            if self._channels[b] is None:
+                return
+            self._resident[b].add(key)
+            self._res_gen[b][key] = self._res_gen[b].get(key, 0) + 1
+        with self._stats_lock:
+            self.replica_bytes += nb
+            self._replicas.setdefault(key, set()).add(b)
+        if self.runtime is not None:
+            self.runtime.store.note_location(key, b, source=src)
+
+    def _redirect_replicas(self, a: int) -> int:
+        """Node ``a`` is really dead: point every store placeholder it
+        homed at a surviving replica holder instead, so
+        ``invalidate_lost`` skips them and zero producers re-execute for
+        replicated keys.  Returns the number of keys redirected."""
+        rt = self.runtime
+        if rt is None:
+            return 0
+        # snapshot candidate homes OUTSIDE the store lock (redirect_node
+        # runs under it and must not take executor locks)
+        with self._stats_lock:
+            cand: Dict[Tuple[int, int], Tuple[int, str]] = {}
+            for key, holders in self._replicas.items():
+                for b in sorted(holders):
+                    if b == a or not self._agent_up[b]:
+                        continue
+                    ch = self._channels[b]
+                    addr = self._data_addrs[b]
+                    if ch is None or ch.closed or addr is None:
+                        continue
+                    cand[key] = (b, addr)
+                    break
+        if not cand:
+            return 0
+        swapped = rt.store.redirect_node(a, cand)
+        if swapped:
+            with self._stats_lock:
+                self.replica_hits += len(swapped)
+        return len(swapped)
 
     def _restart_agent(self, a: int, failed_ch) -> None:
         with self._restart_lock:
             if self._channels[a] is not failed_ch:
                 return   # another dispatcher already replaced it
+            # a stale park entry must not adopt a resume after the
+            # process is replaced (respawn also mints a new session
+            # token, so a late re-dial is rejected outright)
+            with self._park_lock:
+                stale = self._disconnected.pop(a, None)
+            if stale is not None:
+                timer = stale.get("timer")
+                if timer is not None:
+                    timer.cancel()
+                if stale["pending"]:
+                    self._fail_slots(a, stale["pending"].values())
+                for worker, ex in stale["deferred"]:
+                    self._finish_cluster(worker, ex,
+                                         error=WorkerCrashedError(
+                                             f"node agent {a} replaced"))
             old_addr = self._data_addrs[a]
             if failed_ch is not None:
                 failed_ch.close()
@@ -2287,6 +2808,12 @@ class ClusterExecutor(ExecutorBackend):
             with self._order_locks[a]:
                 self._resident[a] = set()
                 self._shipped_fns[a] = set()
+                self._res_gen[a] = {}
+                self._parked_ops[a] = []
+                self._inflight_reqs[a] = {}
+                # tokens minted by the dead process are invalid forever;
+                # publish/drop for its results become no-ops (§20)
+                self._proc_gen[a] += 1
                 self._data_addrs[a] = None
                 if new_ch is not None:
                     # data addr + on_close BEFORE the channel is exposed:
@@ -2304,10 +2831,17 @@ class ClusterExecutor(ExecutorBackend):
             # the store's residency metadata must die with the agent too,
             # or locality keeps steering reads at data the replacement
             # doesn't hold and the transfer ledger undercounts re-ships —
-            # and every node-resident result homed there is GONE: the
-            # runtime invalidates the placeholders and re-executes their
-            # producers from graph lineage (DESIGN.md §15)
+            # and every node-resident result homed there is GONE: first
+            # rehome what a surviving replica can serve (§20), then the
+            # runtime invalidates the remaining placeholders and
+            # re-executes their producers from graph lineage (§15)
+            with self._stats_lock:
+                for k in list(self._replicas):
+                    self._replicas[k].discard(a)
+                    if not self._replicas[k]:
+                        del self._replicas[k]
             if self.runtime is not None:
+                self._redirect_replicas(a)
                 self.runtime.store.forget_node(a)
                 lost = self.runtime.recover_lost_node(a)
                 self._drop_residency(lost)
@@ -2319,14 +2853,29 @@ class ClusterExecutor(ExecutorBackend):
         """Per-agent liveness view (state, beat age, beat count) for
         ``/api/status`` and the dashboard — the failure detector's own
         numbers, so what the UI shows is exactly what verdicts use.
-        Agents between channel death and reinstall report ``respawning``."""
+        Agents between channel death and reinstall report ``respawning``;
+        agents parked for session resumption (§20) report
+        ``disconnected`` (grace window open) or ``reconnecting`` (a
+        resume is being reconciled), and every row carries its replica
+        count."""
         det = self._detector
         snap = det.snapshot() if det is not None else {}
+        with self._park_lock:
+            parked = {a: e["state"] for a, e in self._disconnected.items()}
+        repl: Dict[int, int] = {}
+        with self._stats_lock:
+            for holders in self._replicas.values():
+                for b in holders:
+                    repl[b] = repl.get(b, 0) + 1
         out: Dict[int, dict] = {}
         for a in range(self.n_agents):
             ent = snap.get(a)
             if ent is None:
                 ent = {"state": "respawning", "beat_age_s": None, "beats": 0}
+            st = parked.get(a)
+            if st is not None:
+                ent = dict(ent, state=st)
+            ent = dict(ent, replicas=repl.get(a, 0))
             out[a] = ent
         return out
 
@@ -2354,6 +2903,9 @@ class ClusterExecutor(ExecutorBackend):
             "control_plane": self.control_plane,
             "agent_restarts": self.agent_restarts,
             "liveness_kills": self.liveness_kills,
+            "reconnects": self.reconnects,
+            "replica_bytes": self.replica_bytes,
+            "replica_hits": self.replica_hits,
             "p2p": self.p2p,
             "broadcasts": self.broadcasts,
             "puts": self.puts,

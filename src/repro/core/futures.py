@@ -468,6 +468,41 @@ class ObjectStore:
             }
 
     # -- loss recovery (DESIGN.md §15) ----------------------------------------
+    def homed_keys(self, node: int) -> List[Tuple[int, int]]:
+        """Keys whose unmaterialized :class:`RemoteValue` is homed on
+        ``node`` — what :meth:`invalidate_lost` would delete."""
+        with self._lock:
+            return [key for key, v in self._values.items()
+                    if isinstance(v, RemoteValue) and v.node == node]
+
+    def redirect_node(self, node: int,
+                      replacements: Dict[Tuple[int, int], Tuple[int, str]]
+                      ) -> List[Tuple[int, int]]:
+        """Replica-hit recovery (DESIGN.md §20): node ``node`` is dead,
+        but some of its placeholders have surviving copies — rehome each
+        key in ``replacements`` (``key -> (replica_node, replica_addr)``)
+        onto its replica, with a by-key token (``None``) so fetches
+        resolve through the replica plane's key table.  Keys NOT in
+        ``replacements`` are left for ``invalidate_lost`` + lineage.
+        Returns the rehomed keys.  Pure dict work under the store lock —
+        callers must pre-snapshot replica locations (no executor locks
+        are taken here)."""
+        out: List[Tuple[int, int]] = []
+        with self._lock:
+            for key, v in list(self._values.items()):
+                if not (isinstance(v, RemoteValue) and v.node == node):
+                    continue
+                rep = replacements.get(key)
+                if rep is None:
+                    continue
+                b, addr = rep
+                self._values[key] = RemoteValue(None, b, addr, v.nbytes,
+                                                key=key)
+                out.append(key)
+            if out:
+                self.residency_epoch += 1
+        return out
+
     def invalidate_lost(self, node: int) -> List[Tuple[int, int]]:
         """A node died: every unmaterialized :class:`RemoteValue` homed
         there is gone.  Drop those entries (readers block until the

@@ -163,6 +163,8 @@ class Runtime:
         suspicion_s: Optional[float] = None,
         deadline_s: Optional[float] = None,
         resolve_timeout_s: Optional[float] = None,
+        reconnect_grace_s: Optional[float] = None,
+        replication: Optional[int] = None,
     ):
         # memory governance (DESIGN.md §13): explicit knob beats
         # RJAX_MEMORY_BUDGET; None/0 = unbounded.  The budget applies
@@ -205,6 +207,13 @@ class Runtime:
                 backend_opts["liveness"] = liveness
             if suspicion_s is not None:
                 backend_opts["suspicion_s"] = suspicion_s
+            # bounded recovery (DESIGN.md §20): session-resumption grace
+            # window and async k-way replication, resolved inside
+            # ClusterExecutor like the liveness knobs
+            if reconnect_grace_s is not None:
+                backend_opts["reconnect_grace_s"] = reconnect_grace_s
+            if replication is not None:
+                backend_opts["replication"] = replication
             # agents learn the budget from the welcome handshake (their
             # own --memory-budget flag wins; see repro.cluster.agent)
             if self.memory_budget and getattr(cluster, "memory_budget", None) is None:

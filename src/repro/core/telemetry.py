@@ -61,6 +61,7 @@ EXECUTOR_STAT_KEYS = (
     "segments", "bytes_planed", "refs_shipped", "deadline_kills",
     # cluster backend
     "n_agents", "workers_per_node", "agent_restarts", "liveness_kills",
+    "reconnects", "replica_bytes", "replica_hits",
     "broadcasts",
     "puts", "refs", "fetches", "fetch_bytes", "bytes_shipped",
     "relay_result_bytes", "remote_results", "deferred_result_bytes",
@@ -211,6 +212,8 @@ class TelemetryHub:
                            "inflight": inflight.get(nid, 0)})
             entry["state"] = view.get("state")
             entry["beat_age_s"] = view.get("beat_age_s")
+            # replicated intermediates resident on this node (§20)
+            entry["replicas"] = view.get("replicas", 0)
         return {
             "name": runtime.name,
             "backend": runtime.backend,

@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import api
 from repro.core.collectives import tree_reduce
-from repro.cluster import chaos, peer
+from repro.cluster import chaos, peer, protocol
 from repro.cluster.chaos import ChaosInjector, ChaosSpecError
 from repro.cluster.peer import DataServer, PeerFetchError, PeerPool
 
@@ -25,7 +25,9 @@ def _disarm_chaos():
     a module global armed from the environment)."""
     yield
     os.environ.pop("RJAX_CHAOS", None)
+    os.environ.pop("RJAX_WIRE_CHECKSUM", None)
     chaos.refresh()
+    protocol.refresh_checksum()
 
 
 # ------------------------------------------------------------------ parsing
@@ -165,6 +167,16 @@ MATRIX = [
      {"deadline_s": 1.5, "max_retries": 4}),
     ("freeze", "1234:freeze@0.4", {"max_retries": 4}),
     ("delay-reseeded", "777:delay=0.02@0.4", {}),
+    # transient network partitions (§20): sends blackhole for the window
+    # but the socket stays open — the run must ride through on the
+    # session machinery without burning retries on live connections
+    ("partition", "1234:partition=1@0.05",
+     {"heartbeat_s": 0.2, "reconnect_grace_s": 5.0}),
+    ("partition-long", "4321:partition=2@0.03",
+     {"heartbeat_s": 0.2, "reconnect_grace_s": 5.0, "max_retries": 4}),
+    # wire corruption with CRC32 trailers armed: every flipped bit must
+    # surface as a retryable transfer error — results stay bitwise right
+    ("bitflip-checksum", "1234:bitflip@0.25", {"max_retries": 6}),
 ]
 
 
@@ -176,6 +188,11 @@ def test_chaos_matrix_bitwise_and_ledgers(spec, opts, monkeypatch):
     completes with bitwise-identical results, and the runtime's ledgers
     come out healthy enough to serve a fresh round of tasks."""
     monkeypatch.setenv("RJAX_CHAOS", spec)
+    if "bitflip" in spec:
+        # checksums must be armed on BOTH ends: the scheduler via the
+        # module global, the agents via the inherited environment
+        monkeypatch.setenv("RJAX_WIRE_CHECKSUM", "1")
+        protocol.refresh_checksum()
     if "freeze" in spec:
         # frozen serve connections must time out fast enough for the
         # lost-input retry path to finish inside the test budget —

@@ -1,0 +1,335 @@
+"""Bounded recovery (DESIGN.md §20): session resumption + replicas.
+
+The two layers under test, separately and against each other:
+
+* **Session resumption** — a transient scheduler↔agent disconnect parks
+  the node for the grace window; the agent re-dials with its session
+  token, the residency manifest reconciles against the scheduler's
+  generation ledger, and the job finishes with ZERO task re-executions
+  (the pre-§20 runtime would have respawned the agent and replayed
+  lineage).  A liveness kill (SIGSTOP) must still take the respawn path:
+  the process is wedged, not partitioned.
+* **Replicated intermediates** — with ``RJAX_REPLICATION=k`` armed,
+  expensive node-resident results get buddy copies over the p2p plane;
+  on real node death the store redirects placeholders at survivors and
+  only unreplicated keys pay lineage re-execution.
+
+The default path (both knobs off) must behave exactly as before.
+"""
+import os
+import signal
+import socket
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.cluster.agent import NodePlane
+
+
+# ----------------------------------------------------------- task bodies
+def produce(i: int):
+    import numpy as np
+    return np.sin(np.arange(4000, dtype=np.float64) * 0.001 * (i + 1))
+
+
+def consume(a):
+    import numpy as np
+    return float(np.sqrt(np.abs(a)).sum())
+
+
+def slow_produce(i: int):
+    import time
+
+    import numpy as np
+    time.sleep(0.25)
+    return np.cos(np.arange(20000, dtype=np.float64) * 0.0005 * (i + 1))
+
+
+def tiny(i: int) -> int:
+    return i * 2
+
+
+def reference(n: int):
+    return [consume(produce(i)) for i in range(n)]
+
+
+def sever(rt, a: int):
+    """Break agent ``a``'s control connection without touching the
+    process: both read loops observe EOF — exactly what a transient
+    network partition's reset looks like."""
+    ch = rt.executor._channels[a]
+    assert ch is not None and not ch.closed
+    ch.sock.shutdown(socket.SHUT_RDWR)
+    return ch
+
+
+# ------------------------------------------------ node-plane generations
+def test_node_plane_generations_and_manifest():
+    """Every residency mark bumps the key's generation exactly once, and
+    the manifest reports (key, generation, nbytes) for resident data
+    only — the agent half of the §20 reconciliation contract."""
+    plane = NodePlane()
+    k1, k2 = (1, 0), (2, 0)
+    assert plane.note_mark(k1) == 1
+    assert plane.note_mark(k1) == 2
+    assert plane.note_mark(k2) == 1
+    a = np.arange(16, dtype=np.float64)
+    plane.store(k1, a)
+    m = {tuple(key): (gen, nb) for key, gen, nb in plane.manifest()}
+    # k2 was marked but its bytes never landed: not in the manifest
+    assert set(m) == {k1}
+    assert m[k1] == (2, a.nbytes)
+    # a pending peer fetch is not manifest-resident either
+    assert plane.begin_fetch(k2)
+    assert {tuple(key) for key, _, _ in plane.manifest()} == {k1}
+
+
+def test_default_path_resumption_disabled():
+    """``reconnect_grace_s=0``: the executor never arms resumption and
+    the recovery counters stay at their PR-9 zeros."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           reconnect_grace_s=0) as rt:
+        assert not rt.executor.resumption
+        t = api.task(tiny, name="tiny")
+        assert api.wait_on(t.map([(i,) for i in range(8)]),
+                           timeout=60) == [i * 2 for i in range(8)]
+        s = rt.executor.stats()
+        assert s["reconnects"] == 0
+        assert s["replica_bytes"] == 0 and s["replica_hits"] == 0
+
+
+# -------------------------------------------------- resumption acceptance
+@pytest.mark.chaos
+def test_reconnect_mid_pipeline_zero_reexecution_bitwise():
+    """Sever agent 1's control socket mid-pipeline: the session resumes
+    inside the grace window, no respawn happens, no task re-executes,
+    and every result is bitwise-identical to the reference."""
+    n = 24
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                           reconnect_grace_s=5.0, max_retries=2) as rt:
+        prod = api.task(produce, name="produce")
+        cons = api.task(consume, name="consume")
+        futs = [cons(prod(i)) for i in range(n)]
+        time.sleep(0.4)   # let dispatch spread over both agents
+        sever(rt, 1)
+        results = api.wait_on(futs, timeout=120)
+        ex = rt.executor
+        assert ex.reconnects >= 1
+        assert ex.agent_restarts == 0
+        assert rt.graph.counters().get("retries", 0) == 0
+        # the residency ledger survived: a fresh round on the same
+        # runtime still resolves (and the resumed agent still serves)
+        chk = api.wait_on(cons(prod(0)), timeout=60)
+        assert chk == reference(1)[0]
+    assert results == reference(n)
+
+
+def produce_small(i: int):
+    """Below the inline threshold: the result rides the reply inline and
+    lives scheduler-side, so consuming it ships a keyed ``Put``."""
+    import numpy as np
+    return np.arange(500, dtype=np.float64) * (i + 1)
+
+
+@pytest.mark.chaos
+def test_resume_reconciles_manifest_strikes_stale_keys():
+    """The reconciliation rule, end-to-end: a Put key whose
+    scheduler-side generation was perturbed (standing in for a mark that
+    died on the partitioned wire) is struck from the residency set on
+    resume — it re-ships on next use, costing zero re-executions — while
+    every agreeing key survives."""
+    with api.runtime_start(backend="cluster", n_agents=1, workers_per_node=1,
+                           reconnect_grace_s=5.0) as rt:
+        ps = api.task(produce_small, name="ps")
+        cons = api.task(consume, name="consume")
+        srcs = ps.map([(i,) for i in range(3)])
+        out = api.wait_on([cons(s) for s in srcs], timeout=60)
+        assert out == [consume(produce_small(i)) for i in range(3)]
+        ex = rt.executor
+        by_key = {s.key: i for i, s in enumerate(srcs)}
+        with ex._order_locks[0]:
+            resident = set(ex._resident[0])
+            put_resident = sorted(resident & set(by_key))
+            assert len(put_resident) == 3, "Put inputs should be resident"
+            victim = put_resident[0]
+            ex._res_gen[0][victim] += 1   # the agent never saw this mark
+        sever(rt, 0)
+        deadline = time.monotonic() + 10
+        while ex.reconnects == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert ex.reconnects == 1
+        with ex._order_locks[0]:
+            after = set(ex._resident[0])
+        assert victim not in after            # exactly the stale key struck
+        assert resident - {victim} <= after   # agreeing keys survived
+        assert rt.graph.counters().get("retries", 0) == 0
+        # struck ⇒ re-shipped on next use, still bitwise-correct
+        i = by_key[victim]
+        assert api.wait_on(cons(srcs[i]), timeout=60) \
+            == consume(produce_small(i))
+        assert rt.graph.counters().get("retries", 0) == 0
+
+
+@pytest.mark.chaos
+def test_sigstop_takes_respawn_path_not_resume():
+    """A wedged process (SIGSTOP) is DEAD to the failure detector: the
+    liveness kill must bypass the park-and-resume path and respawn —
+    while a plain socket sever on the same config resumes.  The two
+    recovery paths stay distinct."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                           heartbeat_s=0.2, suspicion_s=0.6,
+                           reconnect_grace_s=5.0, max_retries=4) as rt:
+        t = api.task(consume, name="consume")
+        futs = [t(produce(i)) for i in range(16)]
+        time.sleep(0.4)
+        victim = rt.executor.cluster._procs[1]
+        os.kill(victim.pid, signal.SIGSTOP)
+        results = api.wait_on(futs, timeout=120)
+        ex = rt.executor
+        assert ex.liveness_kills >= 1
+        # the respawn runs on the recovery pool and only counts once the
+        # replacement's handshake lands — poll for it
+        deadline = time.monotonic() + 30.0
+        while ex.agent_restarts < 1 and time.monotonic() < deadline:
+            time.sleep(0.1)
+        assert ex.agent_restarts >= 1
+        assert ex.reconnects == 0
+    assert results == [consume(produce(i)) for i in range(16)]
+
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=2,
+                           heartbeat_s=0.2, reconnect_grace_s=5.0,
+                           max_retries=2) as rt:
+        futs = [api.task(consume, name="consume")(produce(i))
+                for i in range(16)]
+        time.sleep(0.3)
+        sever(rt, 1)
+        results = api.wait_on(futs, timeout=120)
+        ex = rt.executor
+        assert ex.reconnects >= 1
+        assert ex.agent_restarts == 0
+    assert results == [consume(produce(i)) for i in range(16)]
+
+
+# ------------------------------------------------- replication acceptance
+@pytest.mark.chaos
+def test_replica_hit_recovery_zero_reexecution():
+    """Replication on: SIGKILL the agent homing replicated results —
+    consumers are served from buddy replicas, the replicated producers
+    never re-execute, and results stay bitwise-identical."""
+    n = 6
+    with api.runtime_start(backend="cluster", n_agents=3, workers_per_node=1,
+                           replication=1, reconnect_grace_s=0,
+                           heartbeat_s=0.2, max_retries=4) as rt:
+        # fill the duration profile with near-zero costs so the slow
+        # producers decisively clear the fleet-mean threshold
+        api.wait_on(api.task(tiny, name="tiny").map(
+            [(i,) for i in range(12)]), timeout=60)
+        prod = api.task(slow_produce, name="slow_produce", returns=1)
+        frags = prod.map([(i,) for i in range(n)])
+        api.wait_on([api.task(consume, name="consume")(f) for f in frags],
+                    timeout=120)
+        ex = rt.executor
+        # replication is fire-and-forget: wait for every homed result to
+        # have at least one booked replica
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline:
+            homed = [k for a in range(3) for k in rt.store.homed_keys(a)]
+            with ex._stats_lock:
+                covered = bool(homed) and all(ex._replicas.get(k)
+                                              for k in homed)
+            if covered:
+                break
+            time.sleep(0.1)
+        assert covered, "replicas were never fully placed"
+        assert ex.replica_bytes > 0
+        retries_before = rt.graph.counters().get("retries", 0)
+        victim = rt.executor.cluster._procs[1]
+        os.kill(victim.pid, signal.SIGKILL)
+        # wait for the respawn (which redirects placeholders at the
+        # surviving replicas) before consuming again: node-1 frags must
+        # be served from their replicas, not re-executed from lineage
+        deadline = time.monotonic() + 30
+        while ex.agent_restarts == 0 and time.monotonic() < deadline:
+            time.sleep(0.05)
+        assert ex.agent_restarts >= 1
+        out = api.wait_on([api.task(consume, name="consume")(f)
+                           for f in frags], timeout=120)
+        assert ex.replica_hits > 0
+        assert rt.graph.counters().get("retries", 0) == retries_before
+        assert ex.agent_restarts >= 1
+    assert out == [consume(slow_produce(i)) for i in range(n)]
+
+
+@pytest.mark.chaos
+def test_unreplicated_keys_still_resurrect_via_lineage():
+    """Replication off: the same kill pays lineage re-execution — the
+    §15 path is intact underneath the new layer, and correctness never
+    depended on replicas being there."""
+    n = 6
+    with api.runtime_start(backend="cluster", n_agents=3, workers_per_node=1,
+                           replication=0, reconnect_grace_s=0,
+                           heartbeat_s=0.2, max_retries=4) as rt:
+        prod = api.task(slow_produce, name="slow_produce")
+        frags = prod.map([(i,) for i in range(n)])
+        api.wait_on([api.task(consume, name="consume")(f) for f in frags],
+                    timeout=120)
+        ex = rt.executor
+        assert ex.replica_bytes == 0
+        victim = rt.executor.cluster._procs[1]
+        os.kill(victim.pid, signal.SIGKILL)
+        out = api.wait_on([api.task(consume, name="consume")(f)
+                           for f in frags], timeout=120)
+        assert ex.replica_hits == 0
+        assert rt.graph.counters().get("retries", 0) > 0
+    assert out == [consume(slow_produce(i)) for i in range(n)]
+
+
+# ----------------------------------------------------- telemetry surface
+def test_recovery_counters_in_executor_stats_schema():
+    """The three recovery counters ride ``EXECUTOR_STAT_KEYS``: cluster
+    reports them live, thread/process read 0 through normalization —
+    the three-backend parity contract."""
+    from repro.core.telemetry import EXECUTOR_STAT_KEYS, \
+        normalize_executor_stats
+    for key in ("reconnects", "replica_bytes", "replica_hits"):
+        assert key in EXECUTOR_STAT_KEYS
+    norm = normalize_executor_stats({"backend": "thread"})
+    assert norm["reconnects"] == 0
+    assert norm["replica_bytes"] == 0 and norm["replica_hits"] == 0
+
+
+@pytest.mark.chaos
+def test_disconnected_state_surfaces_in_api_status():
+    """While parked, ``/api/status`` shows the node as ``disconnected``
+    (or already ``reconnecting``), and rows carry a replica count."""
+    with api.runtime_start(backend="cluster", n_agents=2, workers_per_node=1,
+                           heartbeat_s=0.2, reconnect_grace_s=8.0,
+                           telemetry=True) as rt:
+        t = api.task(tiny, name="tiny")
+        assert api.wait_on(t(3), timeout=60) == 6
+        ex = rt.executor
+        # pause the agent so the sever stays open long enough to observe
+        victim = rt.executor.cluster._procs[1]
+        os.kill(victim.pid, signal.SIGSTOP)
+        try:
+            sever(rt, 1)
+            seen = None
+            deadline = time.monotonic() + 6
+            while time.monotonic() < deadline:
+                view = ex.liveness().get(1, {})
+                if view.get("state") in ("disconnected", "reconnecting"):
+                    seen = view["state"]
+                    break
+                time.sleep(0.05)
+            assert seen in ("disconnected", "reconnecting")
+            snap = rt.telemetry.snapshot_status(rt)
+            node1 = snap["nodes"].get("1", {})
+            assert node1.get("state") in ("disconnected", "reconnecting")
+            assert "replicas" in node1
+        finally:
+            os.kill(victim.pid, signal.SIGCONT)
+        # resumed (or respawned after grace): either way the runtime
+        # still serves
+        assert api.wait_on(t(4), timeout=60) == 8
